@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark drivers."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "bench")
+
+
+def save_json(name: str, payload: Any) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def table(rows: List[Dict[str, Any]], cols: Optional[List[str]] = None,
+          floatfmt: str = "{:.4g}") -> str:
+    if not rows:
+        return "(empty)"
+    cols = cols or list(rows[0])
+    widths = {c: max(len(c), *(len(_fmt(r.get(c, ""), floatfmt))
+                               for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(" | ".join(_fmt(r.get(c, ""), floatfmt).ljust(widths[c])
+                                for c in cols) for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v: Any, floatfmt: str) -> str:
+    if isinstance(v, float):
+        return floatfmt.format(v)
+    return str(v)
+
+
+def banner(title: str) -> None:
+    print("\n" + "=" * 72)
+    print(title)
+    print("=" * 72)

@@ -1,0 +1,114 @@
+"""Fig. 7 — validation of C4CAM-generated code against the hand-crafted
+HDC mapping of Kazemi et al. [22].
+
+The paper compiles binary and multi-bit HDC (MNIST, 8k dims) for CAM
+arrays of 32 x C, C in {16, 32, 64, 128}, with 4 mats/bank, 4 arrays/mat,
+8 subarrays/array, and validates generated latency/energy against the
+manual design (geomean deviation 0.9% / 5.5%).
+
+Our "manual design" baseline is the closed-form mapping a designer would
+write for this workload (row-major tile placement, fully parallel search,
+one search cycle per query) priced by the same Eva-CAM-analog technology
+model; C4CAM's numbers come from the full compile pipeline.  The check is
+that the compiler reaches the hand mapping (deviation ~0 by construction
+of a correct compiler — the paper's deviations stem from simulator-version
+skew, which we do not reproduce) and that the *trends* match the paper:
+latency grows with C (slower ML discharge), energy falls with C (fewer
+peripherals), binary beats multi-bit on energy.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.camsim import CostModel
+from repro.core import compile_fn, kazemi_arch
+from repro.core.passes.cam_map import MappingPlan, derive_plan
+from repro.core.passes.partition import tile_grid
+from repro.data import hdc_dataset
+
+from .common import banner, save_json, table
+
+
+def hdc_kernel(inp, weight):
+    others = weight.transpose(-2, -1)
+    mm = inp.matmul(others)
+    return mm.topk(1, largest=False)
+
+
+def manual_mapping_cost(arch, m, n, dim, value_bits):
+    """The hand-crafted design: closed-form row-major mapping + cost."""
+    gr, gc, cpv, dpt = tile_grid(arch, n, dim, value_bits)
+    plan = derive_plan(arch, dict(
+        m=m, n=n, dim=dim, grid_rows=gr, grid_cols=gc, dims_per_tile=dpt,
+        cells_per_value=cpv, value_bits=value_bits, metric="dot", k=1,
+        largest=True))
+    return CostModel(arch).plan_report(plan)
+
+
+def run(n_queries: int = 10_000, dim: int = 8192, n_classes: int = 10):
+    banner("Fig. 7 — validation vs hand-crafted HDC mapping "
+           "(binary + multi-bit, 32 x C)")
+    rows = []
+    for bits, tag in ((1, "binary"), (8, "multi-bit")):
+        for c in (16, 32, 64, 128):
+            arch = kazemi_arch(c, rows=32, bits_per_cell=min(bits, 2))
+            prog = compile_fn(hdc_kernel, [(n_queries, dim),
+                                           (n_classes, dim)], arch,
+                              value_bits=bits, unroll_limit=0)
+            rep = prog.cost_report()
+            man = manual_mapping_cost(arch, n_queries, n_classes, dim, bits)
+            dev_lat = abs(rep.latency_ns - man.latency_ns) / man.latency_ns
+            dev_en = abs(rep.energy_fj - man.energy_fj) / man.energy_fj
+            rows.append({
+                "impl": tag, "array": f"32x{c}",
+                "c4cam_latency_us": rep.latency_us,
+                "manual_latency_us": man.latency_us,
+                "c4cam_energy_uj": rep.energy_uj,
+                "manual_energy_uj": man.energy_uj,
+                "dev_latency_%": 100 * dev_lat, "dev_energy_%": 100 * dev_en,
+            })
+    print(table(rows))
+
+    # paper trends
+    bin_rows = [r for r in rows if r["impl"] == "binary"]
+    lat = [r["c4cam_latency_us"] for r in bin_rows]
+    en = [r["c4cam_energy_uj"] for r in bin_rows]
+    assert all(b > a for a, b in zip(lat, lat[1:])), \
+        "latency must grow with C (ML discharge)"
+    assert all(b < a for a, b in zip(en, en[1:])), \
+        "energy must fall with C (fewer peripherals)"
+    mb = [r["c4cam_energy_uj"] for r in rows if r["impl"] == "multi-bit"]
+    assert all(m > b for m, b in zip(mb, en)), \
+        "multi-bit must cost more energy than binary (ML/DL voltages)"
+    dev = float(np.exp(np.mean([np.log(max(r["dev_latency_%"], 1e-9) + 1)
+                                for r in rows])) - 1)
+    print(f"\ngeomean latency deviation vs manual: {dev:.3f}% "
+          f"(paper: 0.9% from simulator-version skew)")
+
+    # functional validation: compiled CAM result classifies like the dense
+    # reference on the HDC recall task.  (The paper's Fig. 4a snippet uses
+    # largest=False — complement-encoded weights; recall itself is
+    # best-match = largest dot = smallest Hamming.)
+    def hdc_recall(inp, weight):
+        mm = inp.matmul(weight.transpose(-2, -1))
+        return mm.topk(1, largest=True)
+
+    classes, queries, labels = hdc_dataset(n_classes=n_classes, dim=dim,
+                                           n_queries=256)
+    prog = compile_fn(hdc_recall, [queries[:256], classes],
+                      kazemi_arch(32), value_bits=1)
+    _, idx = prog(queries[:256], classes)
+    acc = float((np.asarray(idx).ravel() == labels[:256]).mean())
+    print(f"functional accuracy (CAM == dense-reference recall): {acc:.3f}")
+    assert acc > 0.99
+
+    save_json("fig7_validation", {"rows": rows, "geomean_dev_pct": dev,
+                                  "functional_accuracy": acc})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

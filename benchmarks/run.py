@@ -1,0 +1,49 @@
+"""Run the full benchmark suite: every paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig8 knn   # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
+               roofline_table, table1_density, table2_knn)
+from .common import banner
+
+SUITES = [
+    ("fig7_validation", fig7_validation.run),
+    ("fig8_dse", fig8_dse.run),
+    ("table1_density", table1_density.run),
+    ("table2_knn", table2_knn.run),
+    ("fig9_isocapacity", fig9_isocapacity.run),
+    ("gpu_comparison", gpu_comparison.run),
+    ("roofline_table", roofline_table.run),
+]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    failures = []
+    t00 = time.time()
+    for name, fn in SUITES:
+        if argv and not any(a in name for a in argv):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"\n[PASS] {name} ({time.time() - t0:.1f}s)")
+        except Exception as e:                     # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"\n[FAIL] {name}: {type(e).__name__}: {e}")
+    banner(f"benchmark suite done in {time.time() - t00:.1f}s — "
+           f"{'ALL PASS' if not failures else 'FAILURES: ' + ', '.join(failures)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

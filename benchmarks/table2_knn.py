@@ -1,0 +1,87 @@
+"""Table II — KNN: EDP and power across subarray sizes.
+
+KNN on the Pneumonia X-ray stand-in gallery (180k patterns, 1024-d
+features, 8-bit quantized -> thermometer-coded cells).  The paper reports
+EDP (nJ*s) and power (W) for cam-based and cam-power at square subarray
+sizes 16..256; absolute values are much higher than HDC "simply due to the
+sheer size of the Pneumonia dataset, requiring many banks".
+
+Reproduction claims: cam-power cuts power by the same mechanism as HDC
+(fewer active subarrays), raises EDP (latency grows faster than energy
+stays flat), both EDP columns fall with subarray size, and KNN needs
+orders of magnitude more banks than HDC.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ArchSpec, compile_fn
+from repro.data import knn_dataset
+from repro.kernels import ref as kref
+
+from .common import banner, save_json, table
+
+
+def knn_kernel(q, gallery):
+    diff = q.unsqueeze(1).sub(gallery)
+    d = diff.norm(p=2, dim=-1)
+    return d.topk(5, largest=False)
+
+
+def run(n_gallery: int = 180_000, dim: int = 1024, n_queries: int = 624,
+        banks: int = 1024):
+    """``banks``: Pneumonia exceeds any fixed system's capacity, so the
+    compiler emits the sequential bank-refill *rounds* loop (paper
+    §III-D2: "an additional loop is introduced") — each round re-programs
+    the CAM, which is what makes small subarrays so expensive here."""
+    banner("Table II — KNN EDP + power (Pneumonia-scale gallery)")
+    rows = []
+    for mode, target in (("cam-based", "latency"), ("cam-power", "power")):
+        for s in (16, 32, 64, 128, 256):
+            arch = ArchSpec(rows=s, cols=s, banks=banks).with_target(target)
+            prog = compile_fn(knn_kernel, [(n_queries, dim),
+                                           (n_gallery, dim)], arch,
+                              value_bits=8, unroll_limit=0)
+            rep = prog.cost_report()
+            rows.append({"mode": mode, "subarray": f"{s}x{s}",
+                         "edp_nj_s": rep.edp_nj_s, "power_w": rep.power_w,
+                         "banks": prog.plans[0].banks_used,
+                         "rounds": prog.plans[0].rounds})
+    print(table(rows))
+
+    base = {r["subarray"]: r for r in rows if r["mode"] == "cam-based"}
+    powr = {r["subarray"]: r for r in rows if r["mode"] == "cam-power"}
+    for s in base:
+        assert powr[s]["power_w"] < base[s]["power_w"]
+        assert powr[s]["edp_nj_s"] > base[s]["edp_nj_s"]
+    edps = [base[f"{s}x{s}"]["edp_nj_s"] for s in (16, 32, 64, 128, 256)]
+    pows = [base[f"{s}x{s}"]["power_w"] for s in (16, 32, 64, 128, 256)]
+    # paper trends: EDP falls steeply while re-fill rounds dominate and
+    # stays orders of magnitude below the 16x16 point at large sizes
+    # (our ML-discharge latency law turns EDP slightly up at 256x256 —
+    # noted deviation); power falls monotonically in both modes.
+    assert all(b < a for a, b in zip(edps[:3], edps[1:4]))
+    assert max(edps[3:]) < edps[0] / 100
+    assert all(b < a for a, b in zip(pows, pows[1:]))
+
+    # functional spot-check on a smaller slice: CAM top-5 == dense top-5
+    g, gl, q, ql = knn_dataset(n_gallery=4096, dim=dim, n_queries=32)
+    prog = compile_fn(knn_kernel, [q, g], ArchSpec(rows=64, cols=64),
+                      value_bits=8)
+    _, idx = prog(q, g)
+    import jax.numpy as jnp
+    _, ref_idx = kref.cam_topk(jnp.asarray(q), jnp.asarray(g),
+                               metric="eucl", k=5, largest=False)
+    match = float((np.asarray(idx) == np.asarray(ref_idx)).mean())
+    acc = float((gl[np.asarray(idx)[:, 0]] == ql).mean())
+    print(f"\nfunctional: top-5 index match vs dense = {match:.3f}, "
+          f"1-NN label accuracy = {acc:.3f}")
+    assert match > 0.99
+
+    save_json("table2_knn", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""KNN classification through the C4CAM pipeline (the paper's second
+benchmark): Euclidean-distance top-k search on a CAM accelerator, with the
+Pallas TPU kernel as the execution backend.
+
+    PYTHONPATH=src python examples/knn_search.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ArchSpec, CamType, compile_fn
+from repro.data import knn_dataset
+from repro.kernels import ops as kops
+
+
+def knn_kernel(queries, gallery):
+    diff = queries.unsqueeze(1).sub(gallery)     # (Q,1,D) - (N,D)
+    dist = diff.norm(p=2, dim=-1)                # (Q,N)
+    return dist.topk(5, largest=False)
+
+
+def main():
+    gallery, g_labels, queries, q_labels = knn_dataset(
+        n_gallery=8192, dim=256, n_queries=128)
+
+    # --- compile to an ACAM (analog CAM: native Euclidean search) -------
+    arch = ArchSpec(rows=64, cols=64, cam_type=CamType.ACAM)
+    prog = compile_fn(knn_kernel, [queries, gallery], arch,
+                      cam_type=CamType.ACAM, value_bits=8)
+    print("pattern:", prog.matched_patterns)
+    values, indices = prog(queries, gallery)
+
+    # --- classify by majority vote over the top-5 ------------------------
+    votes = g_labels[np.asarray(indices)]
+    pred = np.apply_along_axis(lambda v: np.bincount(v, minlength=2).argmax(),
+                               1, votes)
+    acc = float((pred == q_labels).mean())
+    print(f"5-NN accuracy (CAM pipeline): {acc:.3f}")
+
+    # --- same search on the Pallas TPU kernel (interpret mode on CPU) ---
+    v2, i2 = kops.cam_topk(jnp.asarray(queries), jnp.asarray(gallery),
+                           metric="eucl", k=5, largest=False,
+                           tile_rows=64, dims_per_tile=64)
+    agree = float((np.asarray(i2) == np.asarray(indices)).mean())
+    print(f"Pallas kernel agreement with compiled CAM result: {agree:.3f}")
+
+    rep = prog.cost_report()
+    print(f"modelled: {rep.latency_us:.1f} us, {rep.energy_uj:.2f} uJ, "
+          f"{rep.power_w:.2f} W on "
+          f"{prog.plans[0].banks_used} bank(s)")
+    assert acc > 0.9 and agree > 0.99
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's technique inside the LM framework: a DeepSeek-style MoE
+router is a ``matmul -> topk`` dataflow — exactly C4CAM's
+DotProdSimPattern.  This example:
+
+1. traces the router, shows Algorithm 1 matching it,
+2. prices the routing workload on a CAM accelerator vs the GPU model,
+3. runs the same router inside a real MoE forward pass with
+   ``router_offload="cam"`` and shows routing decisions are identical.
+
+    PYTHONPATH=src python examples/moe_router_offload.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.camsim import QUADRO_RTX_6000
+from repro.configs import get_smoke_config
+from repro.core import PAPER_BASE_ARCH, compile_fn
+from repro.models import moe as moe_mod
+
+
+def router_kernel(tokens, router_patterns):
+    scores = tokens.matmul(router_patterns.transpose(-2, -1))
+    return scores.topk(6, largest=True)
+
+
+def main():
+    d_model, n_experts, n_tokens = 2048, 64, 4096
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n_tokens, d_model)).astype(np.float32)
+    w = rng.standard_normal((n_experts, d_model)).astype(np.float32)
+
+    # 1. compile the router through C4CAM
+    prog = compile_fn(router_kernel, [x, w], PAPER_BASE_ARCH, value_bits=8)
+    print("Algorithm 1 match:", prog.matched_patterns)
+
+    # 2. price it: CAM vs GPU-model
+    rep = prog.cost_report()
+    gpu = QUADRO_RTX_6000.similarity_workload(n_tokens, n_experts, d_model)
+    print(f"CAM routing: {rep.latency_us:.1f} us, {rep.energy_uj:.2f} uJ | "
+          f"GPU model: {gpu['time_s'] * 1e6:.1f} us, "
+          f"{gpu['energy_j'] * 1e6:.1f} uJ")
+
+    # 3. inside the model: deepseek-style MoE block, cam vs dense routing
+    cfg_d = dataclasses.replace(get_smoke_config("deepseek-moe-16b"),
+                                router_offload="dense")
+    cfg_c = dataclasses.replace(cfg_d, router_offload="cam")
+    key = jax.random.PRNGKey(1)
+    p = moe_mod.init_moe(key, cfg_d)
+    xb = jax.random.normal(key, (2, 16, cfg_d.d_model), jnp.float32)
+    yd = moe_mod.moe_ffn(p, xb, cfg_d)
+    yc = moe_mod.moe_ffn(p, xb, cfg_c)
+    same = bool(jnp.allclose(yd.astype(jnp.float32), yc.astype(jnp.float32),
+                             atol=1e-2))
+    print(f"MoE outputs identical (cam vs dense routing): {same}")
+    assert same and prog.matched_patterns == ["DotProdSimPattern"]
+
+
+if __name__ == "__main__":
+    main()

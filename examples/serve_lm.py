@@ -1,0 +1,48 @@
+"""Serving example: batched requests against a small LM with prefill +
+continuous-batched decode (the serve path lowered by the decode_32k /
+long_500k dry-run shapes).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
+"""
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import Request, Server
+from repro.models import model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b",
+                    help="any assigned arch id (reduced config)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    srv = Server(cfg, params, batch=args.batch,
+                 max_len=args.prompt_len + args.max_new + 1,
+                 temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        srv.submit(Request(rid=r,
+                           prompt=rng.integers(1, cfg.vocab,
+                                               args.prompt_len),
+                           max_new=args.max_new))
+    out = srv.run()
+    print(json.dumps(out, indent=1))
+    assert out["completed"] == args.requests
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fault-tolerant sharded checkpointing.
+
+Design (1000+ node posture, DESIGN.md §6):
+
+* **step-numbered directories** ``ckpt_dir/step_000123/`` written by every
+  host for its local shards (``host_<i>.npz``) plus one ``manifest.json``
+  (tree structure, global shapes, logical sharding axes, step, mesh shape);
+* **atomic commit**: writes go to ``step_X.tmp`` and are ``os.rename``d
+  only after all arrays + manifest are fsynced — a crash mid-write never
+  corrupts the latest checkpoint;
+* **async save**: ``AsyncCheckpointer`` snapshots device arrays to host
+  memory synchronously (cheap) and does file I/O on a worker thread so the
+  train loop is not blocked; ``wait()`` joins before the next save.
+* **elastic restore**: arrays are saved with *global* content (per-shard
+  addressable data is gathered per host); restore re-shards to whatever
+  mesh/sharding the new job passes — checkpoints store logical, not
+  physical, layout.
+"""
+
+from .checkpointer import (AsyncCheckpointer, latest_step, restore_pytree,
+                           save_pytree)
+
+__all__ = ["AsyncCheckpointer", "save_pytree", "restore_pytree", "latest_step"]

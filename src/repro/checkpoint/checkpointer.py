@@ -1,0 +1,187 @@
+"""Atomic, async, elastic checkpoint I/O (see package docstring)."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step", "AsyncCheckpointer"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_names(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _treedef_spec(tree: Any) -> Any:
+    """JSON-able structure descriptor (nested dicts/lists with leaf=None)."""
+    if isinstance(tree, dict):
+        return {k: _treedef_spec(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": type(tree).__name__,
+                "items": [_treedef_spec(v) for v in tree]}
+    if hasattr(tree, "_fields"):  # NamedTuple
+        return {"__namedtuple__": type(tree).__name__,
+                "fields": {k: _treedef_spec(getattr(tree, k))
+                           for k in tree._fields}}
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(d)) and
+             os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def save_pytree(tree: Any, ckpt_dir: str, step: int,
+                extra_metadata: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic save.  Returns the committed directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + f".tmp.{jax.process_index()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    named = _flatten_with_names(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    manifest_arrays = {}
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or true_dtype in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+            # npz cannot round-trip ml_dtypes: store the raw bits and
+            # record the logical dtype in the manifest
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        arrays[name] = arr
+        manifest_arrays[name] = {"shape": list(arr.shape),
+                                 "dtype": true_dtype}
+    path = os.path.join(tmp, f"host_{jax.process_index()}.npz")
+    with open(path, "wb") as f:
+        np.savez(f, **{k.replace("/", "|"): v for k, v in arrays.items()})
+        f.flush()
+        os.fsync(f.fileno())
+
+    manifest = {"step": step, "arrays": manifest_arrays,
+                "process_count": jax.process_count(),
+                "structure": "flat-names",
+                **(extra_metadata or {})}
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+
+    # atomic commit (process 0 renames; single-host in this container)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_pytree(template: Any, ckpt_dir: str, step: Optional[int] = None,
+                   shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree of NamedShardings (same structure) — the
+    elastic-restore path: saved global arrays are placed onto the *new*
+    mesh regardless of the writer's topology.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    data: Dict[str, np.ndarray] = {}
+    for fn in sorted(os.listdir(d)):
+        if fn.startswith("host_") and fn.endswith(".npz"):
+            with np.load(os.path.join(d, fn)) as z:
+                for k in z.files:
+                    data[k.replace("|", "/")] = z[k]
+
+    named = _flatten_with_names(template)
+    shard_list = (None,) * len(named)
+    if shardings is not None:
+        shard_list = [s for _, s in _flatten_with_names(shardings)]
+
+    leaves = []
+    meta = manifest.get("arrays", {})
+    for (name, leaf), sh in zip(named, shard_list):
+        if name not in data:
+            raise KeyError(f"checkpoint missing array {name!r}")
+        arr = data[name]
+        true_dtype = meta.get(name, {}).get("dtype", str(arr.dtype))
+        if str(arr.dtype) != true_dtype and arr.dtype.kind == "u":
+            import ml_dtypes
+            arr = arr.view(np.dtype(true_dtype))
+        want = tuple(np.asarray(leaf).shape) if not hasattr(leaf, "shape") \
+            else tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs {want}")
+        dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        arr = arr.astype(dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Non-blocking saver: device->host snapshot now, file I/O on a thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, tree: Any, step: int,
+             extra_metadata: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_pytree(host_tree, self.ckpt_dir, step, extra_metadata)
+                self._gc()
+            except BaseException as e:   # surfaced at next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.ckpt_dir):
+            return
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.ckpt_dir)
+                       if (m := _STEP_RE.match(d)))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,23 @@
+"""mistral-large-123b [dense] — 88L d_model=12288 96H (GQA kv=8)
+d_ff=28672 vocab=32768.  [hf:mistralai/Mistral-Large-Instruct-2407;
+unverified]
+
+Pure full attention: the long_500k shape is skipped (DESIGN.md
+§Arch-applicability)."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=32768,
+    rope="standard",
+    rope_theta=1000000.0,
+    act="swiglu",
+    norm="rmsnorm",
+)

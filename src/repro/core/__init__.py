@@ -1,0 +1,27 @@
+"""C4CAM core: the paper's compiler, reproduced on a JAX substrate.
+
+Public API::
+
+    from repro.core import (ArchSpec, C4CAMCompiler, compile_fn, trace,
+                            CamType, OptimizationTarget, PAPER_BASE_ARCH)
+
+    arch = PAPER_BASE_ARCH.with_target("power")
+    prog = compile_fn(hdc_similarity, [queries, classes], arch)
+    values, indices = prog(queries, classes)     # functional CAM simulation
+    report = prog.cost_report()                  # latency / energy / power
+"""
+
+from .arch import (AccessMode, ArchSpec, CamType, Metric, OptimizationTarget,
+                   PAPER_BASE_ARCH, SearchType, kazemi_arch)
+from .compiler import C4CAMCompiler, CompiledCamProgram, compile_fn, compile_module
+from .ir import Block, Builder, IRError, Module, Operation, Pass, PassManager, TensorType, Value, verify
+from .torch_dialect import TracedTensor, trace
+
+__all__ = [
+    "AccessMode", "ArchSpec", "CamType", "Metric", "OptimizationTarget",
+    "PAPER_BASE_ARCH", "SearchType", "kazemi_arch",
+    "C4CAMCompiler", "CompiledCamProgram", "compile_fn", "compile_module",
+    "Block", "Builder", "IRError", "Module", "Operation", "Pass",
+    "PassManager", "TensorType", "Value", "verify",
+    "TracedTensor", "trace",
+]

@@ -1,0 +1,100 @@
+"""The extended ``cim`` abstraction (paper §III-D1).
+
+The programming model (from CINM [16]) is three functions:
+
+* ``cim.acquire  -> !cim.device``  — allocate an accelerator, returns handle
+* ``cim.execute (handle) { region } -> results`` — ops to run on the device
+* ``cim.release (handle)``
+
+C4CAM extends ``cim`` with the analyses/ops needed for CAM devices:
+
+* compute ops mirroring torch (``cim.matmul`` etc.) inside execute regions,
+* the fused ``cim.similarity`` op produced by Algorithm 1,
+* partitioning ops: ``cim.search_tile`` (per-subarray distance block),
+  ``cim.topk_tile`` and ``cim.merge_partial`` (horizontal = accumulate
+  partial distances across column tiles, vertical = tournament-merge
+  candidate lists across row tiles) — Fig. 5d.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .ir import Block, Builder, IRError, Module, Operation, Region, TensorType, Value
+
+__all__ = [
+    "DEVICE_TYPE", "make_acquire", "make_execute", "make_release",
+    "make_yield", "make_similarity", "execute_blocks", "CIM_COMPUTE_OPS",
+]
+
+#: pseudo-type for device handles (shape (), dtype tag)
+DEVICE_TYPE = TensorType((), "!cim.device")
+
+#: torch op -> cim op name (ops the accelerator abstraction understands)
+CIM_COMPUTE_OPS: Dict[str, str] = {
+    "torch.transpose": "cim.transpose",
+    "torch.matmul": "cim.matmul",
+    "torch.mm": "cim.matmul",
+    "torch.sub": "cim.sub",
+    "torch.add": "cim.add",
+    "torch.mul": "cim.mul",
+    "torch.div": "cim.div",
+    "torch.norm": "cim.norm",
+    "torch.topk": "cim.topk",
+    "torch.neg": "cim.neg",
+    "torch.abs": "cim.abs",
+    "torch.unsqueeze": "cim.unsqueeze",
+    "torch.squeeze": "cim.squeeze",
+}
+
+#: pure shape-metadata ops — transparent to Algorithm 1's opSize gate
+SHAPE_OPS = {"cim.unsqueeze", "cim.squeeze"}
+
+
+def make_acquire(builder: Builder) -> Operation:
+    return builder.create("cim.acquire", [], [DEVICE_TYPE])
+
+
+def make_release(builder: Builder, handle: Value) -> Operation:
+    return builder.create("cim.release", [handle])
+
+
+def make_yield(block: Block, values: Sequence[Value]) -> Operation:
+    op = Operation("cim.yield", values)
+    block.append(op)
+    return op
+
+
+def make_execute(builder: Builder, handle: Value, operands: Sequence[Value],
+                 result_types: Sequence[TensorType]) -> Operation:
+    """Creates ``cim.execute`` with an empty single-block region.
+
+    The region's ops reference outer SSA values directly (MLIR
+    ``isolated_from_above = false`` semantics).
+    """
+    region = Region([Block()])
+    return builder.create("cim.execute", [handle, *operands], result_types,
+                          regions=[region])
+
+
+def make_similarity(block: Block, queries: Value, patterns: Value, *,
+                    metric: str, k: int, largest: bool,
+                    extra_attrs: Optional[Dict[str, Any]] = None) -> Operation:
+    """``cim.similarity``: fused distance + top-k (paper Fig. 5c).
+
+    queries ``(M, D)``, patterns ``(N, D)`` -> values/indices ``(M, k)``.
+    """
+    m = queries.type.shape[0] if queries.type.rank == 2 else 1
+    attrs = {"metric": metric, "k": k, "largest": largest}
+    if extra_attrs:
+        attrs.update(extra_attrs)
+    op = Operation("cim.similarity", [queries, patterns],
+                   [TensorType((m, k), queries.type.dtype),
+                    TensorType((m, k), "i32")], attrs)
+    block.append(op)
+    return op
+
+
+def execute_blocks(module: Module) -> List[Operation]:
+    """All ``cim.execute`` ops in program order."""
+    return [op for op in module.body.operations if op.name == "cim.execute"]

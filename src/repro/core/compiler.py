@@ -1,0 +1,133 @@
+"""C4CAM compile driver (paper Fig. 3).
+
+``compile_module`` runs the progressive-lowering pipeline::
+
+    torch IR --torch-to-cim--> cim IR --cim-fuse-ops + similarity-match-->
+    fused cim --cim-partition--> partitioned cim --cim-to-cam--> cam IR
+    --cam-map--> mapped cam IR (+ MappingPlans)
+
+and returns a :class:`CompiledCamProgram` bundling
+
+* every IR snapshot (inspectable, MLIR-flavoured text),
+* a jitted functional executable (host JAX simulation of the CAM),
+* the :class:`~repro.core.passes.cam_map.MappingPlan`s,
+* a cost report from the Eva-CAM-analog model (`repro.camsim`).
+
+The entry points mirror the paper's CLI: an application (traced
+TorchScript-like callable), an architecture description (:class:`ArchSpec`,
+§III-B), and an optimization target (latency / power / density /
+power+density).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .arch import ArchSpec, CamType, OptimizationTarget
+from .executor import execute_module
+from .ir import Module, PassManager
+from .passes import (CamMap, CimToCam, CompulsoryPartition, FuseExecuteBlocks,
+                     SimilarityMatching, TorchToCim)
+from .passes.cam_map import MappingPlan
+from .torch_dialect import trace
+
+__all__ = ["CompiledCamProgram", "compile_module", "compile_fn", "C4CAMCompiler"]
+
+
+@dataclass
+class CompiledCamProgram:
+    """The artifact returned by C4CAM compilation."""
+
+    arch: ArchSpec
+    cam_type: str
+    stages: Dict[str, Module]
+    snapshots: List[Tuple[str, str]]
+    plans: List[MappingPlan]
+    matched_patterns: List[str]
+    backend: str = "jnp"
+
+    def __call__(self, *inputs):
+        """Functionally execute the program (host JAX simulation)."""
+        return execute_module(self.stages["cim_partitioned"], *inputs,
+                              backend=self.backend)
+
+    def execute_interpreted(self, *inputs):
+        """Op-by-op interpretation (tests the explicit tiled IR)."""
+        return execute_module(self.stages["cim_partitioned"], *inputs,
+                              backend="jnp")
+
+    def cost_report(self):
+        from ..camsim import CostModel
+        cm = CostModel(self.arch)
+        return cm.report(self.plans)
+
+    def dump(self, stage: str = "cam_mapped") -> str:
+        return self.stages[stage].dump()
+
+
+def compile_module(module: Module, arch: ArchSpec, *,
+                   cam_type: str = CamType.TCAM,
+                   target: Optional[str] = None,
+                   unroll_limit: int = 64,
+                   value_bits: Optional[int] = None,
+                   backend: str = "jnp") -> CompiledCamProgram:
+    if target is not None:
+        arch = arch.with_target(target)
+    ctx: Dict[str, Any] = {"arch": arch, "value_bits": value_bits}
+    stages: Dict[str, Module] = {"torch": module}
+
+    pm1 = PassManager()
+    pm1.add(TorchToCim())
+    m = pm1.run(module.clone(), ctx)
+    stages["cim"] = m.clone()
+
+    pm2 = PassManager()
+    pm2.add(FuseExecuteBlocks()).add(SimilarityMatching())
+    m = pm2.run(m, ctx)
+    stages["cim_fused"] = m.clone()
+
+    pm3 = PassManager()
+    pm3.add(CompulsoryPartition(unroll_limit=unroll_limit))
+    m = pm3.run(m, ctx)
+    stages["cim_partitioned"] = m.clone()
+
+    pm4 = PassManager()
+    pm4.add(CimToCam(cam_type=cam_type))
+    m = pm4.run(m, ctx)
+    stages["cam"] = m.clone()
+
+    pm5 = PassManager(verify_each=False)   # mapped IR is loop-structured
+    pm5.add(CamMap())
+    m = pm5.run(m, ctx)
+    stages["cam_mapped"] = m
+
+    snapshots = (pm1.snapshots + pm2.snapshots[1:] + pm3.snapshots[1:]
+                 + pm4.snapshots[1:] + pm5.snapshots[1:])
+    return CompiledCamProgram(
+        arch=arch, cam_type=cam_type, stages=stages, snapshots=snapshots,
+        plans=ctx.get("plans", []),
+        matched_patterns=ctx.get("matched_patterns", []),
+        backend=backend)
+
+
+def compile_fn(fn: Callable, example_inputs: Sequence[Any], arch: ArchSpec,
+               **kw) -> CompiledCamProgram:
+    """Trace a TorchScript-like callable and compile it (end-to-end path)."""
+    return compile_module(trace(fn, example_inputs), arch, **kw)
+
+
+class C4CAMCompiler:
+    """Object-style front door mirroring the paper's tool (arch spec + app)."""
+
+    def __init__(self, arch: ArchSpec, cam_type: str = CamType.TCAM,
+                 backend: str = "jnp"):
+        self.arch = arch
+        self.cam_type = cam_type
+        self.backend = backend
+
+    def compile(self, fn: Callable, example_inputs: Sequence[Any],
+                target: Optional[str] = None, **kw) -> CompiledCamProgram:
+        return compile_fn(fn, example_inputs, self.arch,
+                          cam_type=self.cam_type, target=target,
+                          backend=self.backend, **kw)

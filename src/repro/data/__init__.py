@@ -1,0 +1,20 @@
+"""Data pipeline: deterministic synthetic corpora + packing + host sharding.
+
+No datasets ship with this container (DESIGN.md deviations register), so
+the pipeline generates deterministic synthetic data with matched shapes:
+
+* ``TokenStream`` — hash-based token sequences (same (seed, index) ->
+  same document on every host), document packing into fixed-length
+  training sequences with EOS separators and loss masks.
+* ``hdc_dataset`` / ``knn_dataset`` — the paper's two benchmark workloads
+  (HDC hypervectors, KNN feature gallery) with class structure so accuracy
+  is meaningful (CAM result must equal the dense-reference result).
+* ``ShardedLoader`` — per-host slicing by (process_index, process_count)
+  and device placement; batches are globally deterministic so elastic
+  restarts resume the stream exactly (the loader state is one integer).
+"""
+
+from .synthetic import TokenStream, hdc_dataset, knn_dataset
+from .loader import ShardedLoader
+
+__all__ = ["TokenStream", "hdc_dataset", "knn_dataset", "ShardedLoader"]

@@ -1,0 +1,22 @@
+"""Distributed-runtime substrate: fault tolerance, stragglers, compression.
+
+* `recovery`    — step-loop supervisor: failure detection (exceptions, NaN
+  loss, simulated chip failures), automatic restore-from-checkpoint with
+  bounded retries, and elastic re-shard on mesh changes.
+* `straggler`   — per-step deadline monitor (EMA + MAD outlier detection)
+  with slow-step logging and a microbatch rebalancing hook.
+* `compression` — error-feedback gradient compressors (int8 quantization /
+  top-k sparsification) for DP all-reduces.  On a GSPMD mesh the all-reduce
+  is implicit (XLA inserts it for data-sharded batches), so the compressor
+  transforms gradients *before* the optimizer; the error-feedback state
+  makes the compression unbiased over time.
+"""
+
+from .compression import (CompressionState, ErrorFeedbackInt8,
+                          ErrorFeedbackTopK, NoCompression)
+from .recovery import RecoveryConfig, Supervisor, SimulatedFailure
+from .straggler import StragglerMonitor
+
+__all__ = ["CompressionState", "ErrorFeedbackInt8", "ErrorFeedbackTopK",
+           "NoCompression", "RecoveryConfig", "Supervisor",
+           "SimulatedFailure", "StragglerMonitor"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+* `cam_search`      — the paper's primitive: fused distance + block top-k
+                      (hamming / dot / L2), `ops.py` wrappers, `ref.py`
+                      pure-jnp oracles.
+* `flash_attention` — online-softmax attention forward (the LM framework's
+                      hot spot; §Perf cell B's TPU answer).
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling)
+and validated on CPU in interpret mode against the oracles.
+"""

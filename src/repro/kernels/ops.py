@@ -1,0 +1,101 @@
+"""Jitted public wrappers around the Pallas CAM-search kernels.
+
+Semantics match `repro.kernels.ref` bit-for-bit (integer metrics) /
+to float tolerance (analog).  Inputs are padded to block multiples here so
+the kernels only ever see aligned shapes; `interpret` defaults to True off-
+TPU (this container is CPU-only; on a real TPU backend the same code path
+compiles through Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cam_search import distance_pallas, fused_topk_pallas
+
+__all__ = ["cam_topk", "cam_exact", "cam_range"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "largest",
+                                             "tile_rows", "dims_per_tile",
+                                             "block_m", "interpret"))
+def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str, k: int,
+             largest: bool, tile_rows: int = 128, dims_per_tile: int = 512,
+             block_m: int = 128, interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Fused CAM best-match search via the Pallas kernel.
+
+    ``tile_rows``/``dims_per_tile`` take the role of the CAM subarray
+    geometry (block_n / block_d); the cross-block candidate merge mirrors
+    ``cim.merge_partial vertical``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, dim = queries.shape
+    n = patterns.shape[0]
+    k_eff = min(k, n)
+    bn = max(8, min(tile_rows, n))
+    bd = min(dims_per_tile, dim)
+    bm = min(block_m, max(8, m))
+    qp = _pad_to(queries.astype(jnp.float32), bm, bd)
+    pp = _pad_to(patterns.astype(jnp.float32), bn, bd)
+    vals, idx = fused_topk_pallas(qp, pp, metric=metric, k=k_eff,
+                                  largest=largest, block_m=bm, block_n=bn,
+                                  block_d=bd, n_valid=n, interpret=interpret)
+    vals, idx = vals[:m], idx[:m]
+    # final candidate merge (stable: block-major order == ascending global
+    # row index, so ties resolve to the lower index, matching ref)
+    key = vals if largest else -vals
+    _, sel = jax.lax.top_k(key, k_eff)
+    out_v = jnp.take_along_axis(vals, sel, axis=-1)
+    out_i = jnp.take_along_axis(idx, sel, axis=-1)
+    if k_eff < k:
+        out_v = jnp.pad(out_v, ((0, 0), (0, k - k_eff)),
+                        constant_values=-jnp.inf if largest else jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, k - k_eff)),
+                        constant_values=2 ** 30)
+    return out_v, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def cam_distances(queries: jax.Array, patterns: jax.Array, *, metric: str,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, dim = queries.shape
+    n = patterns.shape[0]
+    qp = _pad_to(queries.astype(jnp.float32), 8, 128)
+    pp = _pad_to(patterns.astype(jnp.float32), 8, 128)
+    d = distance_pallas(qp, pp, metric=metric, interpret=interpret)
+    return d[:m, :n]
+
+
+def cam_exact(queries: jax.Array, patterns: jax.Array, *,
+              metric: str = "hamming",
+              interpret: Optional[bool] = None) -> jax.Array:
+    return cam_distances(queries, patterns, metric=metric,
+                         interpret=interpret) == 0
+
+
+def cam_range(queries: jax.Array, patterns: jax.Array, threshold: float, *,
+              metric: str = "hamming",
+              interpret: Optional[bool] = None) -> jax.Array:
+    return cam_distances(queries, patterns, metric=metric,
+                         interpret=interpret) <= threshold

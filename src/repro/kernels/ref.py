@@ -1,0 +1,175 @@
+"""Pure-jnp oracles for the CAM search kernels.
+
+These define the *semantics* that both the Pallas TPU kernels
+(`repro.kernels.cam_search`) and the C4CAM functional executor must match
+bit-for-bit (integer metrics) or to float tolerance (analog metrics).
+
+Conventions
+-----------
+queries  : (M, D)  — one query per row
+patterns : (N, D)  — the stored CAM content ("database")
+returns  : (values, indices), each (M, K)
+
+Metrics
+-------
+* ``hamming``  — # of mismatching cells; inputs are {0,1} (or booleans).
+* ``dot``      — inner product; for bipolar +-1 data ``dot = D - 2*hamming``.
+* ``eucl``     — squared L2 distance (sqrt is monotone; CAM sensing
+  compares squared sums, so we keep squares end-to-end).
+* ``cos``      — cosine similarity.
+
+Match types
+-----------
+* best-k  : top-k by value (largest=True for similarities, False for
+  distances) with deterministic lowest-index tie-breaking.
+* exact   : rows with distance == 0 (boolean match vector).
+* range   : rows with distance <= threshold (boolean match vector).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["distances", "cam_topk", "cam_exact", "cam_range",
+           "cam_topk_tiled", "merge_topk"]
+
+
+def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array:
+    """(M, N) distance/similarity matrix."""
+    q = queries.astype(jnp.float32)
+    p = patterns.astype(jnp.float32)
+    if metric == "hamming":
+        # mismatch count; inputs {0,1}
+        return (q[:, None, :] != p[None, :, :]).sum(-1).astype(jnp.float32)
+    if metric == "dot":
+        return q @ p.T
+    if metric == "eucl":
+        # squared L2 via expansion (matches tiled partial-sum accumulation)
+        qq = (q * q).sum(-1, keepdims=True)
+        pp = (p * p).sum(-1)
+        return qq + pp[None, :] - 2.0 * (q @ p.T)
+    if metric == "cos":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        pn = p / jnp.maximum(jnp.linalg.norm(p, axis=-1, keepdims=True), 1e-12)
+        return qn @ pn.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def _topk_with_ties(scores: jax.Array, k: int, largest: bool
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic top-k: ties broken toward the lower index.
+
+    ``jax.lax.top_k`` is stable (equal elements keep ascending-index order),
+    which we rely on for bit-exact equivalence between the dense and tiled
+    execution paths.
+    """
+    key = scores if largest else -scores
+    _, idx = jax.lax.top_k(key, k)
+    true_vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return true_vals, idx.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("metric", "k", "largest"))
+def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str,
+             k: int, largest: bool) -> Tuple[jax.Array, jax.Array]:
+    """Best-match search: top-k rows of ``patterns`` per query."""
+    d = distances(queries, patterns, metric)
+    return _topk_with_ties(d, k, largest)
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def cam_exact(queries: jax.Array, patterns: jax.Array, *, metric: str = "hamming"
+              ) -> jax.Array:
+    """(M, N) boolean exact-match matrix (distance == 0)."""
+    d = distances(queries, patterns, metric)
+    return d == 0
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def cam_range(queries: jax.Array, patterns: jax.Array, threshold: float,
+              *, metric: str = "hamming") -> jax.Array:
+    """(M, N) boolean threshold-match matrix (distance <= threshold)."""
+    d = distances(queries, patterns, metric)
+    return d <= threshold
+
+
+def merge_topk(values_a: jax.Array, idx_a: jax.Array, values_b: jax.Array,
+               idx_b: jax.Array, *, k: int, largest: bool
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Vertical merge of two (M, k) candidate lists (cam.merge_partial)."""
+    vals = jnp.concatenate([values_a, values_b], axis=-1)
+    idxs = jnp.concatenate([idx_a, idx_b], axis=-1)
+    key = vals if largest else -vals
+    # stability of lax.top_k + "lists concatenated in ascending global row
+    # order" gives lower-global-index tie-breaking, matching cam_topk.
+    _, sel = jax.lax.top_k(key, k)
+    return (jnp.take_along_axis(vals, sel, axis=-1),
+            jnp.take_along_axis(idxs, sel, axis=-1))
+
+
+def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
+                   k: int, largest: bool, tile_rows: int, dims_per_tile: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Reference for the *tiled* (partitioned) execution path.
+
+    Mirrors the compulsory-partitioning semantics exactly: horizontal
+    accumulation of per-column-tile partial distances, per-row-tile top-k,
+    then vertical tournament merge with global index offsets.  Must equal
+    :func:`cam_topk` for additive metrics (hamming / dot / eucl).
+    """
+    m, dim = queries.shape
+    n = patterns.shape[0]
+    gr = -(-n // tile_rows)
+    gc = -(-dim // dims_per_tile)
+    pad_n = gr * tile_rows - n
+    pad_d = gc * dims_per_tile - dim
+    fill = 0.0
+    qp = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    pp = jnp.pad(patterns.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+
+    def col_tile(ct, q_t, p_t):
+        if metric == "hamming":
+            return (q_t[:, None, :] != p_t[None, :, :]).sum(-1).astype(jnp.float32)
+        if metric == "dot":
+            return q_t @ p_t.T
+        if metric == "eucl":
+            qq = (q_t * q_t).sum(-1, keepdims=True)
+            ppv = (p_t * p_t).sum(-1)
+            return qq + ppv[None, :] - 2.0 * (q_t @ p_t.T)
+        raise ValueError(f"tiled path does not support metric {metric!r}")
+
+    acc_v = acc_i = None
+    for r in range(gr):
+        p_rows = pp[r * tile_rows:(r + 1) * tile_rows]
+        dist = None
+        for c in range(gc):
+            sl = slice(c * dims_per_tile, (c + 1) * dims_per_tile)
+            part = col_tile(c, qp[:, sl], p_rows[:, sl])
+            dist = part if dist is None else dist + part   # horizontal merge
+        # mask padded rows so they never win
+        if r == gr - 1 and pad_n:
+            bad = jnp.full((m, pad_n), -jnp.inf if largest else jnp.inf)
+            dist = dist.at[:, tile_rows - pad_n:].set(bad)
+        v, i = _topk_with_ties(dist, min(k, tile_rows), largest)
+        i = i + r * tile_rows
+        if acc_v is None:
+            acc_v, acc_i = v, i
+            if v.shape[-1] < k:  # pad candidate list up to k
+                padv = jnp.full((m, k - v.shape[-1]),
+                                -jnp.inf if largest else jnp.inf)
+                padi = jnp.full((m, k - v.shape[-1]), 2 ** 30, dtype=jnp.int32)
+                acc_v = jnp.concatenate([acc_v, padv], -1)
+                acc_i = jnp.concatenate([acc_i, padi], -1)
+        else:
+            if v.shape[-1] < k:
+                padv = jnp.full((m, k - v.shape[-1]),
+                                -jnp.inf if largest else jnp.inf)
+                padi = jnp.full((m, k - v.shape[-1]), 2 ** 30, dtype=jnp.int32)
+                v = jnp.concatenate([v, padv], -1)
+                i = jnp.concatenate([i, padi], -1)
+            acc_v, acc_i = merge_topk(acc_v, acc_i, v, i, k=k, largest=largest)
+    return acc_v, acc_i

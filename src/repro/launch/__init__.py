@@ -1,0 +1,1 @@
+"""Launch layer: meshes, dry-run lowering, roofline analysis, drivers."""

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls it.
+
+Mesh topology (TPU v5e pods):
+
+* single-pod: 16 x 16 = 256 chips, axes ``(data, model)`` — ``data``
+  carries FSDP + batch DP, ``model`` carries TP/SP/EP.
+* multi-pod: 2 x 16 x 16 = 512 chips, axes ``(pod, data, model)`` — the
+  ``pod`` axis is an outer data-parallel axis crossing the DCN; gradient
+  reduction over ``pod`` is hierarchical (reduce within pod over ICI, then
+  across pods).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _mk(shape, axes) -> Mesh:
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:                          # older jax: no axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices the host actually has."""
+    n = jax.device_count()
+    if data * model > n:
+        data, model = n, 1
+    return _mk((data, model), ("data", "model"))

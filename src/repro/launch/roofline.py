@@ -1,0 +1,536 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO.
+
+``jax`` facts this is built on (verified empirically in this container):
+
+* ``compiled.cost_analysis()`` reports **per-device** FLOPs/bytes on the
+  partitioned module but counts every ``while`` body (= ``lax.scan`` layer
+  stack) exactly ONCE — useless for deep models unless corrected.
+* ``compiled.as_text()`` prints the partitioned module with one named
+  computation per region; ``while`` ops name their condition/body regions
+  and scan trip counts appear as ``constant(N)`` in the condition.
+
+So the analyzer parses the HLO text:
+
+1. split into named computations,
+2. find ``while`` ops, resolve each body's trip count from the largest
+   integer constant in its condition computation (jax emits
+   ``compare(iter, constant(N)), direction=LT``),
+3. accumulate per computation, weighting by the product of enclosing trip
+   counts:
+   * ``dot`` FLOPs (2 * numel(out) * prod(contracting dims)),
+   * HBM traffic: operands + results of every *top-level* op in the
+     computation (fusion boundaries are materialization points),
+   * collective bytes per device with ring costs: all-reduce
+     ``2(n-1)/n * B``, all-gather / reduce-scatter ``(n-1)/n * B``,
+     all-to-all ``(n-1)/n * B``, collective-permute ``B``.
+
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link
+ICI (per chip).
+
+The three roofline terms are *seconds per step on one chip*:
+
+    compute    = FLOPs / PEAK_FLOPS
+    memory     = HBM bytes / HBM_BW
+    collective = collective bytes / ICI_BW
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["RooflineReport", "analyze_hlo", "analyze_compiled",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW", "model_flops"]
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (we charge 1 link; see DESIGN)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# header like ``%name (args...) -> type {`` — args may contain nested
+# parens (tuple types), so match only the name and trust the trailing brace
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply|calls|fusion)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_REPL_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_REPL_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_nbytes(dt: str, shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes(line: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(line):
+        dt, dims = m.groups()
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _result_shapes(line: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Shapes of the value a line defines (tuple types -> several)."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return []
+    # the type literal(s) sit between '=' and the op name; tuple types are
+    # parenthesized.  Grab shapes up to the first opcode token '('.
+    rhs = line[line.index("=") + 1:]
+    op_m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+    head = rhs[: op_m.start()] if op_m else rhs
+    return _all_shapes(head)
+
+
+@dataclass
+class RooflineReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0          # ring-model bytes per device
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    dot_count: int = 0
+    while_trip_counts: List[int] = field(default_factory=list)
+    hbm_top: List[Tuple[float, str]] = field(default_factory=list)
+    # CPU-lowering artifact tracking (TPU projection — see EXPERIMENTS.md):
+    # XLA-CPU upcasts bf16 dot operands to f32, so f32 collectives that
+    # would be bf16 on TPU and pure bf16<->f32 convert traffic are counted
+    # separately.
+    f32_collective_bytes: float = 0.0
+    convert_traffic_bytes: float = 0.0
+
+    @property
+    def t_collective_tpu(self) -> float:
+        """Collective term if f32 reductions ran in bf16 (TPU lowering)."""
+        return (self.collective_bytes - 0.5 * self.f32_collective_bytes) / ICI_BW
+
+    @property
+    def t_memory_tpu(self) -> float:
+        """Memory term without bf16<->f32 convert round-trips."""
+        return max(0.0, self.hbm_bytes - self.convert_traffic_bytes) / HBM_BW
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 t_bound=self.t_bound,
+                 t_collective_tpu=self.t_collective_tpu,
+                 t_memory_tpu=self.t_memory_tpu)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if stripped == "}" and not line.startswith("    "):
+            # computation bodies are printed with 2-space indent; a brace at
+            # col 0 closes the computation
+            cur = None
+            continue
+        if stripped and cur is not None:
+            # strip metadata: jax op_name strings contain op-like text
+            # ("transpose(jvp())") that breaks substring-based op checks
+            comps[cur].append(stripped.split(", metadata=")[0])
+    return comps, entry
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _REPL_GROUPS.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = _REPL_IOTA.search(line)
+    if m:
+        return int(m.group(2))           # [ngroups, group_size]<=[N]
+    return max(1, n_devices)
+
+
+def _operands(line: str) -> List[str]:
+    """Operand value names of an op line (post-opt HLO omits inline types)."""
+    m = _DEF_RE.match(line)
+    rest = line[m.end():] if m else line
+    op_m = re.search(r"\b[a-z][a-z0-9\-]*\(", rest)
+    if not op_m:
+        return []
+    depth = 0
+    args = ""
+    for ch in rest[op_m.end() - 1:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args += ch
+    return _OPERAND_RE.findall(args)
+
+
+def _dot_flops(line: str, symtab: Dict[str, Tuple[str, Tuple[int, ...]]]
+               ) -> float:
+    """FLOPs of one dot line: 2 * numel(result) * prod(contracting dims)."""
+    res = _result_shapes(line)
+    if not res:
+        return 0.0
+    out_shape = res[0][1]
+    ops = _operands(line)
+    lhs_shape: Tuple[int, ...] = ()
+    if ops and ops[0] in symtab:
+        lhs_shape = symtab[ops[0]][1]
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if m and lhs_shape:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                k *= lhs_shape[int(d)]
+    numel = 1
+    for d in out_shape:
+        numel *= d
+    return 2.0 * numel * max(k, 1)
+
+
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "bitcast-convert(", "after-all(", "partition-id(",
+             "replica-id(")
+
+
+_COLLECTIVE_KINDS = ("all-gather-start", "all-gather", "all-reduce-start",
+                     "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute-start",
+                     "collective-permute")
+
+
+def analyze_hlo(hlo: str, n_devices: int = 1,
+                compression_ratio: float = 1.0,
+                dp_collective_kinds: Tuple[str, ...] = (),
+                breakdown: bool = False) -> RooflineReport:
+    comps, entry = _split_computations(hlo)
+    rep = RooflineReport()
+    _contrib: Dict[str, float] = {}
+
+    def note(line: str, bytes_: float) -> None:
+        if breakdown and bytes_ > 0:
+            key = line.split("metadata")[0][:120]
+            _contrib[key] = _contrib.get(key, 0.0) + bytes_
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # symbol table: value name -> (dtype, shape) of its (first) result,
+    # plus total bytes across tuple results for operand accounting.
+    symtab: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    sym_bytes: Dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            shapes = _result_shapes(line)
+            if shapes:
+                symtab[m.group(1)] = shapes[0]
+                sym_bytes[m.group(1)] = sum(
+                    _shape_nbytes(dt, sh) for dt, sh in shapes)
+
+    def _slice_traffic(line: str) -> Optional[float]:
+        """HBM bytes for (dynamic-)slice / DUS ops: only the slice moves.
+
+        dynamic-slice reads+writes the slice (result); dynamic-update-slice
+        reads the update operand and writes it in place (the rest of the
+        buffer is not touched — XLA updates in place)."""
+        if re.search(r"(?<![\w-])dynamic-update-slice\(", line):
+            ops_ = _operands(line)
+            upd = sym_bytes.get(ops_[1], 0) if len(ops_) > 1 else 0
+            return 2.0 * upd
+        if re.search(r"(?<![\w-])dynamic-slice\(", line) or \
+                re.search(r"(?<![\w-])slice\(", line):
+            res = _result_shapes(line)
+            return 2.0 * sum(_shape_nbytes(dt, sh) for dt, sh in res)
+        return None
+
+    # per fused computation: parameter index -> slice-traffic bytes, for
+    # parameters consumed ONLY by (dynamic-)slice / DUS ops.  A fusion that
+    # slices one row out of a stacked buffer per loop iteration must not be
+    # charged the whole buffer each time.
+    fusion_param_traffic: Dict[str, Dict[int, float]] = {}
+    # fused computations whose ROOT is a dynamic-update-slice write only the
+    # update region, not the whole output buffer (in-place update)
+    root_dus_out_bytes: Dict[str, float] = {}
+    for cname, lines in comps.items():
+        has_dus = None
+        for line in lines:
+            if re.search(r"\bdynamic-update-slice\(", line):
+                ops_ = _operands(line)
+                if len(ops_) > 1:
+                    has_dus = float(sym_bytes.get(ops_[1], 0))
+        if has_dus is not None:
+            # a fused computation whose body updates a slice writes only
+            # the update region (output buffer is updated in place)
+            root_dus_out_bytes[cname] = has_dus
+
+    _ALIAS_OPS = ("bitcast(", "copy(", "reshape(", "transpose(", "convert(")
+    for cname, lines in comps.items():
+        pnames: Dict[str, int] = {}
+        for line in lines:
+            pm = re.search(r"%([\w\.\-]+)\s*=\s*[^=]*parameter\((\d+)\)", line)
+            if pm:
+                pnames[pm.group(1)] = int(pm.group(2))
+        if not pnames:
+            continue
+        # propagate param identity through zero-traffic view ops so
+        # slice(bitcast(param)) is still recognized as slicing the param
+        alias: Dict[str, str] = {p: p for p in pnames}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            ops_ = _operands(line)
+            if ops_ and ops_[0] in alias and \
+                    any(a in line for a in _ALIAS_OPS):
+                alias[m.group(1)] = alias[ops_[0]]
+        traffic: Dict[int, float] = {}
+        full: set = set()
+        for line in lines:
+            if re.search(r"parameter\(\d+\)", line):
+                continue
+            ops_ = [alias.get(o, o) for o in _operands(line)]
+            st = _slice_traffic(line)
+            if _DEF_RE.match(line) and ops_ and ops_[0] in pnames and \
+                    any(a in line for a in _ALIAS_OPS):
+                continue                      # alias op: no traffic, no mark
+            if st is not None and ops_ and ops_[0] in pnames:
+                idx = pnames[ops_[0]]
+                traffic[idx] = traffic.get(idx, 0.0) + st
+                others = ops_[1:] if "dynamic-update-slice" not in line \
+                    else ops_[2:]
+                full.update(o for o in others if o in pnames)
+            else:
+                full.update(o for o in ops_ if o in pnames)
+        for o in full:
+            traffic.pop(pnames[o], None)
+        if traffic:
+            fusion_param_traffic[cname] = traffic
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, ()):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    visited_stack: List[str] = []
+
+    def walk(name: str, mult: float) -> None:
+        if name not in comps or name in visited_stack:
+            return
+        visited_stack.append(name)
+        for line in comps[name]:
+            if any(op in line for op in _SKIP_OPS):
+                continue
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.groups()
+                tc = trip_count(cond)
+                rep.while_trip_counts.append(tc)
+                walk(body, mult * tc)
+                walk(cond, mult * tc)
+                continue
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                for br in mb.group(1).split(","):
+                    walk(br.strip().lstrip("%"), mult)
+                continue
+
+            res_shapes = _result_shapes(line)
+            out_bytes = sum(_shape_nbytes(dt, sh) for dt, sh in res_shapes)
+            op_names = _operands(line)
+
+            st = _slice_traffic(line)
+            if st is not None:
+                rep.hbm_bytes += mult * st
+                note(line, mult * st)
+                continue
+
+            # fusion internals stay on-chip: charge only operands/results,
+            # with slice-only parameters charged at slice granularity.
+            # calls/conditionals recurse; while handled above.
+            called = _CALLED_RE.findall(line)
+            is_fusion = "fusion(" in line
+            if is_fusion:
+                traffic = {}
+                for c in called:
+                    traffic = fusion_param_traffic.get(c, {})
+                    if c in root_dus_out_bytes:
+                        out_bytes = root_dus_out_bytes[c]
+                    if traffic:
+                        break
+                opnd_bytes = sum(
+                    traffic[i] if i in traffic else sym_bytes.get(o, 0)
+                    for i, o in enumerate(op_names))
+            else:
+                opnd_bytes = sum(sym_bytes.get(o, 0) for o in op_names)
+                if called:
+                    for c in called:
+                        if "fused" not in c:
+                            walk(c, mult)
+
+            kind = None
+            for c in _COLLECTIVE_KINDS:
+                if re.search(rf"\b{c}\(", line):
+                    kind = c.replace("-start", "")
+                    break
+            if kind:
+                n = _group_size(line, n_devices)
+                payload = max(out_bytes, opnd_bytes)
+                if kind == "all-reduce":
+                    comm = 2.0 * (n - 1) / max(n, 1) * payload
+                elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                    comm = (n - 1) / max(n, 1) * payload
+                else:                      # collective-permute
+                    comm = payload
+                if kind in dp_collective_kinds:
+                    comm *= compression_ratio
+                rep.collective_counts[kind] = rep.collective_counts.get(
+                    kind, 0) + int(mult)
+                rep.collective_bytes_by_kind[kind] = \
+                    rep.collective_bytes_by_kind.get(kind, 0.0) + mult * comm
+                rep.collective_bytes += mult * comm
+                if res_shapes and res_shapes[0][0] == "f32":
+                    rep.f32_collective_bytes += mult * comm
+                rep.hbm_bytes += mult * (out_bytes + opnd_bytes)
+                note(line, mult * (out_bytes + opnd_bytes))
+                continue
+
+            if re.search(r"\bdot\(", line):
+                rep.dot_count += int(mult)
+                rep.flops += mult * _dot_flops(line, symtab)
+            rep.hbm_bytes += mult * (out_bytes + opnd_bytes)
+            note(line, mult * (out_bytes + opnd_bytes))
+            # pure bf16<->f32 converts (incl. kLoop wrapped_convert fusions)
+            if ("convert(" in line or "wrapped_convert" in line) and \
+                    res_shapes and res_shapes[0][0] in ("f32", "bf16"):
+                ops0 = symtab.get(op_names[0]) if op_names else None
+                if ops0 and {res_shapes[0][0], ops0[0]} == {"f32", "bf16"} \
+                        and ops0[1] == res_shapes[0][1]:
+                    rep.convert_traffic_bytes += mult * (out_bytes + opnd_bytes)
+
+        visited_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    if breakdown:
+        rep.hbm_top = sorted(((v, k) for k, v in _contrib.items()),
+                             reverse=True)[:24]
+    return rep
+
+
+def analyze_compiled(compiled, n_devices: int = 1, **kw) -> RooflineReport:
+    return analyze_hlo(compiled.as_text(), n_devices=n_devices, **kw)
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (the "useful compute" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def bottleneck_advice(bottleneck: str, kind: str, family: str) -> str:
+    """One sentence per (cell): what would move the dominant term down."""
+    if bottleneck == "collective":
+        if kind == "train":
+            return ("fewer grad-accumulation microbatches and bf16 "
+                    "reduce-scatter gradient reduction (§Perf A); "
+                    "hierarchical pod-local reduction on the multi-pod mesh")
+        if kind == "prefill":
+            return ("pin the attention layout (KV-length sharding for "
+                    "non-divisible head counts) so partial-score "
+                    "all-reduces disappear (§Perf B)")
+        return ("decode collectives are weight-gather dominated: "
+                "weight-stationary TP (contract over the sharded axis with "
+                "small output psums) instead of gathering weights")
+    if bottleneck == "memory":
+        if kind == "decode":
+            return ("bandwidth-bound on weights+KV cache: fp8/int8 KV "
+                    "cache, larger in-flight batch per chip, or "
+                    "speculative decoding to amortize weight reads")
+        if kind == "prefill":
+            return ("fuse attention score blocks into VMEM (Pallas flash "
+                    "kernel) so (qc, T) tiles never reach HBM; bf16 "
+                    "probability blocks (§Perf B-2)")
+        return ("activation/HBM traffic: larger fused attention tiles, "
+                "fewer remat passes (selective policy), and removing the "
+                "CPU-lowering f32 duplicate stacks (TPU-native bf16)")
+    return ("compute-bound — the healthy case: raise per-chip batch or "
+            "sequence to amortize the non-MXU overhead; check "
+            "useful-FLOPs ratio for remat waste")
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params.
+
+    For decode, D = tokens processed in the step (= global_batch)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # one token per sequence

@@ -1,0 +1,224 @@
+"""Input/state ShapeDtypeStruct specs + shardings for every dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, kwargs) where kwargs
+are ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+allocation):
+
+* ``train_4k``    -> ``train_step(state, batch)``
+* ``prefill_32k`` -> ``prefill_step(params, batch, cache)``
+* ``decode_32k`` / ``long_500k`` -> ``decode_step(params, tokens, cache)``
+  (one new token against a KV cache of seq_len)
+
+``long_500k`` requires sub-quadratic sequence mixing and is only emitted
+for hybrid/ssm families (``cfg.supports_long_context``); full-attention
+architectures skip it (recorded, per the assignment).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as model_mod, steps as steps_mod
+from ..models.config import ModelConfig
+from ..models.sharding import ShardingRules, logical_spec
+from ..optim.adamw import AdamWConfig, OptState
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "state_sharding",
+           "batch_sharding", "cache_sharding", "params_sharding",
+           "skip_reason"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def default_microbatches(cfg: ModelConfig, shape_name: str,
+                         rules: ShardingRules,
+                         act_budget_bytes: float = 2 * 2**30) -> int:
+    """Gradient-accumulation factor for train cells.
+
+    Sizes the remat-saved activation stack (n_layers x B/data x S/model x
+    d_model x 2B under sequence-parallel sharding) against a per-device
+    budget; k must divide the per-data-shard batch.
+    """
+    sp = SHAPES[shape_name]
+    if sp.kind != "train":
+        return 1
+    data = rules.data_size()
+    model = rules.model_size()
+    b_loc = max(1, sp.global_batch // data)
+    s_loc = max(1, sp.seq_len // model)
+    layers = cfg.n_layers + cfg.n_encoder_layers
+    saved = layers * b_loc * s_loc * cfg.d_model * 2
+    k = 1
+    while saved / k > act_budget_bytes and k < b_loc and (b_loc % (k * 2) == 0):
+        k *= 2
+    return k
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return (f"{cfg.name} is pure full attention (O(S^2) prefill / O(S) "
+                f"per-token KV); long_500k requires sub-quadratic mixing "
+                f"(run only for hybrid/ssm) — see DESIGN.md")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / params specs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_struct(cfg: ModelConfig, b: int, s: int,
+                 with_mask: bool = False) -> Dict[str, Any]:
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if with_mask:
+        batch["mask"] = _sds((b, s), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision"] = _sds((b, cfg.n_vision_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def batch_axes_tree(cfg: ModelConfig, with_mask: bool = False) -> Dict[str, Any]:
+    axes = {"tokens": ("batch", None)}
+    if with_mask:
+        axes["mask"] = ("batch", None)
+    if cfg.family == "vlm":
+        axes["vision"] = ("batch", None, None)
+    if cfg.family == "audio":
+        axes["frames"] = ("batch", None, None)
+    return axes
+
+
+def params_struct(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        functools.partial(model_mod.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+
+
+def cache_struct(cfg: ModelConfig, b: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        lambda: model_mod.init_decode_cache(cfg, b, max_len))
+
+
+def train_state_struct(cfg: ModelConfig,
+                       opt_cfg: AdamWConfig = AdamWConfig()
+                       ) -> steps_mod.TrainState:
+    return jax.eval_shape(
+        lambda k: steps_mod.init_train_state(k, cfg, opt_cfg=opt_cfg),
+        jax.random.PRNGKey(0))
+
+
+# -- sharding trees ---------------------------------------------------------
+
+
+def params_sharding(cfg: ModelConfig, rules: ShardingRules) -> Any:
+    return logical_spec(rules, params_struct(cfg), model_mod.param_axes(cfg))
+
+
+def cache_sharding(cfg: ModelConfig, rules: ShardingRules, b: int,
+                   max_len: int) -> Any:
+    return logical_spec(rules, cache_struct(cfg, b, max_len),
+                        model_mod.cache_axes(cfg))
+
+
+def batch_sharding(cfg: ModelConfig, rules: ShardingRules, b: int, s: int,
+                   with_mask: bool = False) -> Any:
+    return logical_spec(rules, batch_struct(cfg, b, s, with_mask),
+                        batch_axes_tree(cfg, with_mask))
+
+
+def state_sharding(cfg: ModelConfig, rules: ShardingRules,
+                   opt_cfg: AdamWConfig = AdamWConfig()) -> Any:
+    """TrainState sharding: opt-state leaves mirror their parameters.
+
+    Factored second moments (Adafactor mode) shard their row/col stats
+    with the corresponding surviving parameter axes."""
+    p_spec = params_sharding(cfg, rules)
+    p_struct = params_struct(cfg)
+    axes = model_mod.param_axes(cfg)
+
+    def nu_spec(p, a):
+        a = tuple(a)
+        if opt_cfg.factored_nu and len(p.shape) >= 2:
+            return {"vr": rules.spec(a[:-1], p.shape[:-1]),
+                    "vc": rules.spec(a[:-2] + (a[-1],),
+                                     p.shape[:-2] + p.shape[-1:])}
+        return rules.spec(a, p.shape)
+
+    nu = jax.tree.map(nu_spec, p_struct, axes,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return steps_mod.TrainState(
+        params=p_spec,
+        opt=OptState(mu=p_spec, nu=nu, master=p_spec,
+                     count=jax.sharding.PartitionSpec()),
+        step=jax.sharding.PartitionSpec(),
+        comp=(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the per-cell entry point
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                opt_cfg: AdamWConfig = AdamWConfig()
+                ) -> Tuple[str, Dict[str, Any]]:
+    """(kind, kwargs-of-ShapeDtypeStructs) for one (arch x shape) cell."""
+    sp = SHAPES[shape_name]
+    b, s = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        return "train", {"state": train_state_struct(cfg, opt_cfg),
+                         "batch": batch_struct(cfg, b, s, with_mask=True)}
+    if sp.kind == "prefill":
+        return "prefill", {"params": params_struct(cfg),
+                           "batch": batch_struct(cfg, b, s),
+                           "cache": cache_struct(cfg, b, s)}
+    # decode: one new token against a cache of seq_len
+    return "decode", {"params": params_struct(cfg),
+                      "tokens": _sds((b, 1), jnp.int32),
+                      "cache": cache_struct(cfg, b, s)}
+
+
+def cell_shardings(cfg: ModelConfig, rules: ShardingRules,
+                   shape_name: str,
+                   opt_cfg: AdamWConfig = AdamWConfig()) -> Dict[str, Any]:
+    sp = SHAPES[shape_name]
+    b, s = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        return {"state": state_sharding(cfg, rules, opt_cfg),
+                "batch": batch_sharding(cfg, rules, b, s, with_mask=True)}
+    if sp.kind == "prefill":
+        return {"params": params_sharding(cfg, rules),
+                "batch": batch_sharding(cfg, rules, b, s),
+                "cache": cache_sharding(cfg, rules, b, s)}
+    return {"params": params_sharding(cfg, rules),
+            "tokens": jax.sharding.PartitionSpec(
+                rules.mesh_axes(("batch",), (b,))[0], None),
+            "cache": cache_sharding(cfg, rules, b, s)}

@@ -1,0 +1,242 @@
+"""Per-family transformer blocks: init / apply / logical-axes triples.
+
+Every block kind provides
+
+* ``init_<kind>(key, cfg)``   — parameter pytree for ONE layer,
+* ``<kind>_axes(cfg)``        — same-structure pytree of logical-axis tuples
+                                (see `repro.models.sharding`); stacked layers
+                                get a leading ``"layers"`` axis in model.py,
+* ``apply_<kind>(p, x, cfg, *, ...)`` — pure forward, returns
+  ``(x, new_cache_or_state)``.
+
+Residual structure is pre-norm everywhere.  ``rules`` (ShardingRules) is
+optional; when present, activations at block boundaries get sequence-
+parallel sharding constraints and MoE runs expert-parallel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers, mamba2, moe as moe_mod, xlstm
+from .layers import apply_norm, attention, ffn, init_attention, init_ffn, init_norm
+
+Params = Dict[str, Any]
+
+NORM_AX = ("embed_act",)
+
+
+def _norm_axes(cfg: ModelConfig) -> Params:
+    a = {"scale": NORM_AX}
+    if cfg.norm == "layernorm":
+        a["bias"] = NORM_AX
+    return a
+
+
+def _attn_axes(cfg: ModelConfig) -> Params:
+    a = {"wq": ("embed", "qkv_out"), "wk": ("embed", "qkv_out"),
+         "wv": ("embed", "qkv_out"), "wo": ("qkv_out", "embed")}
+    if cfg.qkv_bias:
+        a.update(bq=("qkv_out",), bk=("qkv_out",), bv=("qkv_out",))
+    return a
+
+
+def _ffn_axes(cfg: ModelConfig) -> Params:
+    a = {"wi": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    if cfg.act == "swiglu":
+        a["wg"] = ("embed", "ffn")
+    return a
+
+
+def shard_act(x, rules, spec=("batch", "seq_act", None)):
+    if rules is None:
+        return x
+    from .sharding import shard_like
+    return shard_like(rules, x, spec)
+
+
+# ---------------------------------------------------------------------------
+# dense decoder block (dense / vlm / moe-dense-first families)
+# ---------------------------------------------------------------------------
+
+
+def init_dense_block(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    ks = jax.random.split(key, 4)
+    return {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+            "ln2": init_norm(cfg), "ffn": init_ffn(ks[1], cfg, d_ff)}
+
+
+def dense_block_axes(cfg: ModelConfig) -> Params:
+    return {"ln1": _norm_axes(cfg), "attn": _attn_axes(cfg),
+            "ln2": _norm_axes(cfg), "ffn": _ffn_axes(cfg)}
+
+
+def apply_dense_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                      positions, prefix_len: int = 0, cache=None,
+                      rules=None) -> Tuple[jax.Array, Any]:
+    x = shard_act(x, rules)
+    a, new_cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                             positions=positions, prefix_len=prefix_len,
+                             cache=cache, rules=rules)
+    x = x + a
+    x = x + ffn(p["ffn"], apply_norm(p["ln2"], x, cfg), cfg)
+    return shard_act(x, rules), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE block
+# ---------------------------------------------------------------------------
+
+
+def init_moe_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+            "ln2": init_norm(cfg), "moe": moe_mod.init_moe(ks[1], cfg)}
+
+
+def moe_block_axes(cfg: ModelConfig) -> Params:
+    ma = {"router": ("embed", None),
+          "wi": ("experts", "embed", None), "wg": ("experts", "embed", None),
+          "wo": ("experts", None, "embed")}
+    if cfg.n_shared_experts:
+        ma.update(shared_wi=("embed", "ffn"), shared_wg=("embed", "ffn"),
+                  shared_wo=("ffn", "embed"))
+    return {"ln1": _norm_axes(cfg), "attn": _attn_axes(cfg),
+            "ln2": _norm_axes(cfg), "moe": ma}
+
+
+def apply_moe_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                    positions, cache=None, rules=None) -> Tuple[jax.Array, Any]:
+    x = shard_act(x, rules)
+    a, new_cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                             positions=positions, cache=cache, rules=rules)
+    x = x + a
+    x = x + moe_mod.moe_ffn(p["moe"], apply_norm(p["ln2"], x, cfg), cfg,
+                            rules=rules)
+    return shard_act(x, rules), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 hybrid)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    return {"ln": init_norm(cfg), "mamba": mamba2.init_mamba2(key, cfg)}
+
+
+def mamba_block_axes(cfg: ModelConfig) -> Params:
+    return {"ln": _norm_axes(cfg),
+            "mamba": {"in_proj": ("embed", "ssm_inner"),
+                      "conv_w": ("conv_k", None),
+                      "A_log": (None,), "D": (None,), "dt_bias": (None,),
+                      "out_proj": ("ssm_inner", "embed"),
+                      "norm_scale": (None,)}}
+
+
+def apply_mamba_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                      state=None, rules=None) -> Tuple[jax.Array, Any]:
+    x = shard_act(x, rules)
+    y, new_state = mamba2.mamba2_forward(p["mamba"], apply_norm(p["ln"], x, cfg),
+                                         cfg, state=state)
+    return shard_act(x + y, rules), new_state
+
+
+# shared attention block (zamba2): full attn + MLP, weights shared across
+# invocations (LoRA-free simplification of zamba2's shared block).
+init_shared_attn_block = init_dense_block
+shared_attn_block_axes = dense_block_axes
+apply_shared_attn_block = apply_dense_block
+
+
+# ---------------------------------------------------------------------------
+# xLSTM pair block (mLSTM + sLSTM)
+# ---------------------------------------------------------------------------
+
+
+def init_xlstm_pair(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln_m": init_norm(cfg), "mlstm": xlstm.init_mlstm(ks[0], cfg),
+            "ln_s": init_norm(cfg), "slstm": xlstm.init_slstm(ks[1], cfg)}
+
+
+def xlstm_pair_axes(cfg: ModelConfig) -> Params:
+    return {"ln_m": _norm_axes(cfg),
+            "mlstm": {"wq": ("embed", "qkv_out"), "wk": ("embed", "qkv_out"),
+                      "wv": ("embed", "qkv_out"), "wif": ("embed", None),
+                      "wo": ("qkv_out", "embed"), "ogate": ("embed", "qkv_out")},
+            "ln_s": _norm_axes(cfg),
+            "slstm": {"wx": ("embed", None), "wh": ("embed", None),
+                      "wo": ("embed", "embed")}}
+
+
+def apply_xlstm_pair(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                     state=None, rules=None) -> Tuple[jax.Array, Any]:
+    x = shard_act(x, rules)
+    sm = state["mlstm"] if state is not None else None
+    ym, new_m = xlstm.mlstm_forward(p["mlstm"], apply_norm(p["ln_m"], x, cfg),
+                                    cfg, state=sm)
+    x = x + ym
+    ss = state["slstm"] if state is not None else None
+    ys, new_s = xlstm.slstm_forward(p["slstm"], apply_norm(p["ln_s"], x, cfg),
+                                    cfg, state=ss)
+    x = x + ys
+    return shard_act(x, rules), {"mlstm": new_m, "slstm": new_s}
+
+
+# ---------------------------------------------------------------------------
+# encoder block (whisper encoder: bidirectional self-attn + FFN)
+# ---------------------------------------------------------------------------
+
+
+init_encoder_block = init_dense_block
+encoder_block_axes = dense_block_axes
+
+
+def apply_encoder_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                        positions, rules=None) -> Tuple[jax.Array, Any]:
+    x = shard_act(x, rules)
+    a, _ = attention(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                     positions=positions, causal=False, rules=rules)
+    x = x + a
+    x = x + ffn(p["ffn"], apply_norm(p["ln2"], x, cfg), cfg)
+    return shard_act(x, rules), None
+
+
+# ---------------------------------------------------------------------------
+# decoder block with cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_xdec_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg), "self": init_attention(ks[0], cfg),
+            "ln2": init_norm(cfg), "cross": init_attention(ks[1], cfg),
+            "ln3": init_norm(cfg), "ffn": init_ffn(ks[2], cfg)}
+
+
+def xdec_block_axes(cfg: ModelConfig) -> Params:
+    return {"ln1": _norm_axes(cfg), "self": _attn_axes(cfg),
+            "ln2": _norm_axes(cfg), "cross": _attn_axes(cfg),
+            "ln3": _norm_axes(cfg), "ffn": _ffn_axes(cfg)}
+
+
+def apply_xdec_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                     positions, enc: jax.Array, cache=None,
+                     rules=None) -> Tuple[jax.Array, Any]:
+    """``cache``: {"self": attn cache} (cross kv recomputed from ``enc``)."""
+    x = shard_act(x, rules)
+    a, new_self = attention(p["self"], apply_norm(p["ln1"], x, cfg), cfg,
+                            positions=positions,
+                            cache=None if cache is None else cache["self"])
+    x = x + a
+    c, _ = attention(p["cross"], apply_norm(p["ln2"], x, cfg), cfg,
+                     positions=positions, kv_source=enc)
+    x = x + c
+    x = x + ffn(p["ffn"], apply_norm(p["ln3"], x, cfg), cfg)
+    new_cache = None if cache is None else {"self": new_self}
+    return shard_act(x, rules), new_cache

@@ -1,0 +1,355 @@
+"""Shared transformer layers: norms, RoPE variants, GQA attention, FFN.
+
+All parameters are plain dict pytrees; all functions are pure.  Weight
+layout convention: 2-D weights are (d_in, d_out); scanned stacks get a
+leading layer axis.  Compute runs in ``config.compute_dtype`` with fp32
+logits/softmax/norm statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard, and chatglm-style 2d/partial)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    if cfg.rope == "none":
+        return x
+    dh = x.shape[-1]
+    rot = dh // 2 if cfg.rope == "2d" else dh      # chatglm rotates half dims
+    freqs = _rope_freqs(rot, cfg.rope_theta)       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    if rot < dh:
+        y = jnp.concatenate([y, x[..., rot:].astype(jnp.float32)], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + cache + masks)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    dh, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, pdtype(cfg)),
+        "wk": dense_init(ks[1], d, kv * dh, pdtype(cfg)),
+        "wv": dense_init(ks[2], d, kv * dh, pdtype(cfg)),
+        "wo": dense_init(ks[3], h * dh, d, pdtype(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), pdtype(cfg))
+        p["bk"] = jnp.zeros((kv * dh,), pdtype(cfg))
+        p["bv"] = jnp.zeros((kv * dh,), pdtype(cfg))
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _pick_q_chunk(s: int, t: int) -> int:
+    """Query-chunk heuristic bounding the live score block ~(qc x T)."""
+    if s * t <= 1 << 21 or s <= 256:
+        return s                      # small problem: one block
+    if t >= 8192:
+        return 256
+    return 512
+
+
+def _attn_block(qg: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+                q_start, t: int, causal: bool, prefix_len: int,
+                kv_len=None) -> jax.Array:
+    """One query block vs full K/V.
+
+    qg: (B, qc, kv, g, dh); k/v: (B, T, kv, dh), both in compute dtype.
+    ``q_start``: global index of the first query row (int or traced scalar).
+    ``kv_len``: number of valid cache rows (traced) — keys >= kv_len masked.
+    Returns (B, qc, kv, g, dh) fp32.
+
+    Numerics follow flash attention on MXU hardware: QK^T in the native
+    low precision with fp32 accumulation, masking+softmax in fp32, and
+    the probabilities cast back to the value dtype for the PV matmul —
+    the (qc, T) blocks that do leave registers are half-width.
+    """
+    qc = qg.shape[1]
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(qg.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    ki = jnp.arange(t)[None, :]
+    allow = jnp.ones((qc, t), bool)
+    if causal:
+        qi = q_start + jnp.arange(qc)[:, None]
+        allow = ki <= qi
+        if prefix_len:
+            allow = allow | (ki < prefix_len)
+    if kv_len is not None:
+        allow = allow & (ki < kv_len)
+    scores = jnp.where(allow[None, None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqt,btkd->bqkgd", attn.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def attn_core(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              prefix_len: int = 0, kv_len=None, q_start=0,
+              q_chunk: Optional[int] = None) -> jax.Array:
+    """Memory-bounded GQA attention core.
+
+    q: (B, S, H, dh); k/v: (B, T, KV, dh).  Chunks the query axis with a
+    ``lax.scan`` so the live score block is (B, KV, g, qc, T) instead of the
+    full (…, S, T) matrix — the pure-JAX analogue of flash attention's outer
+    loop (inner KV blocking is left to XLA fusion; see kernels/flash for the
+    Pallas TPU version).  Returns (B, S, H*dh) in q.dtype.
+    """
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, s, kvh, g, dh)
+    qc = q_chunk or _pick_q_chunk(s, t)
+
+    if qc >= s:
+        out = _attn_block(qg, k, v, scale=scale, q_start=q_start, t=t,
+                          causal=causal, prefix_len=prefix_len, kv_len=kv_len)
+        return out.reshape(b, s, h * dh).astype(q.dtype)
+
+    pad = (-s) % qc
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nq = (s + pad) // qc
+    qs = jnp.moveaxis(qg.reshape(b, nq, qc, kvh, g, dh), 1, 0)
+
+    def body(start, q_blk):
+        o = _attn_block(q_blk, k, v, scale=scale, q_start=start, t=t,
+                        causal=causal, prefix_len=prefix_len, kv_len=kv_len)
+        return start + qc, o
+
+    # remat the block: without this the backward pass stacks each block's
+    # (B, KV, g, qc, T) softmax + mask residuals across all nq chunks —
+    # that one tensor dominated train-step memory at 32k context.
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, jnp.asarray(q_start, jnp.int32), qs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * qc, h * dh)[:, :s]
+    return out.astype(q.dtype)
+
+
+def _constrain_attention_layout(q, k, v, cfg: ModelConfig, rules,
+                                include_heads: bool = False):
+    """Pin the attention activation layout (GSPMD left alone splits the
+    flattened h*dh projection across kv AND head_dim, yielding partial
+    (B, kv, g, qc, T) score blocks that it then ALL-REDUCES — measured as
+    the dominant collective for the non-16-divisible-head architectures).
+
+    * heads divisible by the model axis -> classic TP attention (scores
+      stay local per head shard).  Only applied when ``include_heads``:
+      on the train/no-cache path GSPMD's own choice measured slightly
+      better, but on the prefill path (where the cache layout anchors
+      propagation) the pin is a large collective win (§Perf).
+    * otherwise -> KV-parallel: shard the key/value LENGTH axis; softmax
+      statistics and the (B, qc, h, dh) output block are psum'd — tiny
+      next to score-sized transfers (flash-decoding style).
+    """
+    from .sharding import shard_like
+    if rules is None:
+        return q, k, v
+    h = q.shape[2]
+    if rules.resolve("heads", h) is not None:
+        if include_heads:
+            q = shard_like(rules, q, ("batch", None, "heads", None))
+            k = shard_like(rules, k, ("batch", None, "kv_heads", None))
+            v = shard_like(rules, v, ("batch", None, "kv_heads", None))
+        return q, k, v
+    if k.shape[1] % max(rules.model_size(), 1) == 0:
+        q = shard_like(rules, q, ("batch", None, None, None))
+        k = shard_like(rules, k, ("batch", "seq_act", None, None))
+        v = shard_like(rules, v, ("batch", "seq_act", None, None))
+    return q, k, v
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array,
+              prefix_len: int = 0,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              kv_source: Optional[jax.Array] = None,
+              causal: bool = True,
+              q_chunk: Optional[int] = None,
+              rules=None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention.
+
+    * ``cache``: {"k": (B, S_max, kv, dh), "v": ..., "len": ()} — new kv are
+      written at position ``len``; attention spans the valid prefix.  With
+      S > 1 this is the prefill path, with S == 1 decode.
+    * ``kv_source``: cross-attention source (encoder states); causal
+      masking is disabled and no RoPE is applied.
+    * ``prefix_len``: bidirectional prefix (prefix-LM, e.g. vision tokens).
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, s, h, dh)
+    src = kv_source if kv_source is not None else x
+    k = _proj(src, p["wk"], p.get("bk")).reshape(b, src.shape[1], kv, dh)
+    v = _proj(src, p["wv"], p.get("bv")).reshape(b, src.shape[1], kv, dh)
+
+    if kv_source is None:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+
+    if cache is None:
+        q, k, v = _constrain_attention_layout(q, k, v, cfg, rules)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        start = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, start, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": start + s}
+        k, v = ck, cv
+        kv_len = start + s
+        if s > 1:
+            # prefill: same pathology as the no-cache path (partial-score
+            # all-reduces), and here pinning helps divisible-head archs
+            # too (the cache layout otherwise anchors a bad propagation);
+            # one cache reshard per layer is orders of magnitude cheaper.
+            q, k, v = _constrain_attention_layout(q, k, v, cfg, rules,
+                                                  include_heads=True)
+
+    out = attn_core(q, k, v, causal=causal and kv_source is None,
+                    prefix_len=prefix_len, kv_len=kv_len,
+                    q_start=0 if cache is None else cache["len"],
+                    q_chunk=q_chunk)
+    return _proj(out, p["wo"]), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((batch, max_len, kv, dh), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(ks[0], d, f, pdtype(cfg)),
+                "wg": dense_init(ks[1], d, f, pdtype(cfg)),
+                "wo": dense_init(ks[2], f, d, pdtype(cfg))}
+    return {"wi": dense_init(ks[0], d, f, pdtype(cfg)),
+            "wo": dense_init(ks[2], f, d, pdtype(cfg))}
+
+
+def ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wi"].astype(x.dtype)) * (x @ p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    p = {"tok": jax.random.normal(key, (cfg.vocab, cfg.d_model),
+                                  pdtype(cfg)) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 7), cfg.d_model,
+                                  cfg.vocab, pdtype(cfg))
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["tok"].astype(cdtype(cfg))[tokens]
+
+
+def logits(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,579 @@
+"""Model assembly for the assigned architecture pool.
+
+Families (``cfg.family``):
+
+* ``dense``  — decoder-only: scan over identical dense blocks.
+* ``moe``    — ``first_dense_layers`` dense blocks, then MoE blocks (EP).
+* ``hybrid`` — zamba2: groups of ``shared_attn_every`` Mamba2 blocks, each
+  group preceded by ONE shared attention block (weights shared across all
+  invocations — the zamba2 design; per-invocation LoRA omitted, DESIGN.md).
+* ``ssm``    — xLSTM: scan over (mLSTM, sLSTM) pair blocks.
+* ``vlm``    — PaliGemma: [vision patch embeddings; text] with a prefix-LM
+  mask; vision tower is a stub (inputs are precomputed patch embeddings).
+* ``audio``  — Whisper: encoder over precomputed frame embeddings (conv
+  frontend stubbed) + decoder with cross attention.
+
+All layer stacks are ``lax.scan`` over stacked parameters (compile-time
+O(1) in depth); training remat wraps the scan body per ``cfg.remat``.
+Caches are layer-stacked pytrees threaded through the same scans.
+
+Three public entry points (all pure):
+
+* ``forward(params, cfg, batch, rules)``            -> logits (train path)
+* ``prefill(params, cfg, batch, cache, rules)``     -> (last logits, cache)
+* ``decode_step(params, cfg, tokens, cache, rules)``-> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks
+from .blocks import shard_act
+from .config import ModelConfig
+from .layers import (apply_norm, attn_core, cdtype, embed, init_embedding,
+                     init_norm, logits as unembed_logits, pdtype, _proj)
+from . import mamba2 as mamba_mod, xlstm as xlstm_mod
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over ``n`` layer keys -> stacked (n, ...) params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _with_layers(axes_tree):
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) int -> (B, S, d) float32 sinusoidal embedding (whisper stub)."""
+    half = d // 2
+    freq = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    per = max(1, cfg.shared_attn_every)
+    n_groups = -(-cfg.n_layers // per)
+    return n_groups, per
+
+
+def _pairs(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_layers // 2)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_emb, k_blocks, k_extra = jax.random.split(key, 3)
+    p: Params = {"embed": init_embedding(k_emb, cfg),
+                 "final_norm": init_norm(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(lambda k: blocks.init_dense_block(k, cfg),
+                                  k_blocks, cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            dff = cfg.dense_d_ff or cfg.d_ff
+            p["dense_blocks"] = _stack_init(
+                lambda k: blocks.init_dense_block(k, cfg, dff), k_extra, nd)
+        p["moe_blocks"] = _stack_init(lambda k: blocks.init_moe_block(k, cfg),
+                                      k_blocks, cfg.n_layers - nd)
+    elif fam == "hybrid":
+        ng, per = _groups(cfg)
+        p["mamba_blocks"] = _stack_init(
+            lambda k: blocks.init_mamba_block(k, cfg), k_blocks, ng * per)
+        p["shared_attn"] = blocks.init_shared_attn_block(k_extra, cfg)
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(lambda k: blocks.init_xlstm_pair(k, cfg),
+                                  k_blocks, _pairs(cfg))
+    elif fam == "audio":
+        p["enc_blocks"] = _stack_init(
+            lambda k: blocks.init_encoder_block(k, cfg), k_extra,
+            cfg.n_encoder_layers)
+        p["enc_norm"] = init_norm(cfg)
+        p["blocks"] = _stack_init(lambda k: blocks.init_xdec_block(k, cfg),
+                                  k_blocks, cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    emb = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb["unembed"] = ("embed", "vocab")
+    a: Params = {"embed": emb, "final_norm": blocks._norm_axes(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        a["blocks"] = _with_layers(blocks.dense_block_axes(cfg))
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            a["dense_blocks"] = _with_layers(blocks.dense_block_axes(cfg))
+        a["moe_blocks"] = _with_layers(blocks.moe_block_axes(cfg))
+    elif fam == "hybrid":
+        a["mamba_blocks"] = _with_layers(blocks.mamba_block_axes(cfg))
+        a["shared_attn"] = blocks.shared_attn_block_axes(cfg)
+    elif fam == "ssm":
+        a["blocks"] = _with_layers(blocks.xlstm_pair_axes(cfg))
+    elif fam == "audio":
+        a["enc_blocks"] = _with_layers(blocks.encoder_block_axes(cfg))
+        a["enc_norm"] = blocks._norm_axes(cfg)
+        a["blocks"] = _with_layers(blocks.xdec_block_axes(cfg))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache(cfg: ModelConfig, n_layers: int, b: int, m: int,
+                dtype=jnp.bfloat16) -> Params:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, b, m, kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+_ATTN_CACHE_AX = ("layers", "cache_batch", "cache_seq", "cache_kv", "cache_dim")
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _attn_cache(cfg, cfg.n_layers, batch, max_len)
+    if fam == "vlm":
+        return _attn_cache(cfg, cfg.n_layers, batch,
+                           max_len + cfg.n_vision_tokens)
+    if fam == "hybrid":
+        ng, per = _groups(cfg)
+        d_inner, nh, dh, ds = mamba_mod._dims(cfg)
+        return {
+            "attn": _attn_cache(cfg, ng, batch, max_len),
+            "mamba": {"ssm": jnp.zeros((ng, per, batch, nh, dh, ds),
+                                       jnp.float32),
+                      "conv": jnp.zeros((ng, per, batch, cfg.ssm_conv - 1,
+                                         d_inner + 2 * ds), jnp.bfloat16)},
+        }
+    if fam == "ssm":
+        lp = _pairs(cfg)
+        nh, dh = xlstm_mod._dims(cfg)
+        d = cfg.d_model
+        return {
+            "mlstm": {"C": jnp.zeros((lp, batch, nh, dh, dh), jnp.float32),
+                      "n": jnp.zeros((lp, batch, nh, dh), jnp.float32),
+                      "m": jnp.zeros((lp, batch, nh), jnp.float32)},
+            "slstm": {"h": jnp.zeros((lp, batch, d), jnp.float32),
+                      "c": jnp.zeros((lp, batch, d), jnp.float32),
+                      "n": jnp.zeros((lp, batch, d), jnp.float32),
+                      "m": jnp.full((lp, batch, d), -1e30, jnp.float32)},
+        }
+    if fam == "audio":
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        cs = (cfg.n_layers, batch, cfg.encoder_seq, kv, dh)
+        return {"self": _attn_cache(cfg, cfg.n_layers, batch, max_len),
+                "cross": {"k": jnp.zeros(cs, jnp.bfloat16),
+                          "v": jnp.zeros(cs, jnp.bfloat16)}}
+    raise ValueError(fam)
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    ac = {"k": _ATTN_CACHE_AX, "v": _ATTN_CACHE_AX, "len": ()}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return dict(ac)
+    if fam == "hybrid":
+        return {"attn": dict(ac),
+                "mamba": {"ssm": (None, None, "cache_batch", "heads", None,
+                                  None),
+                          "conv": (None, None, "cache_batch", None,
+                                   "ssm_inner")}}
+    if fam == "ssm":
+        return {"mlstm": {"C": (None, "cache_batch", "heads", None, None),
+                          "n": (None, "cache_batch", "heads", None),
+                          "m": (None, "cache_batch", None)},
+                "slstm": {k: (None, "cache_batch", "embed_act")
+                          for k in ("h", "c", "n", "m")}}
+    if fam == "audio":
+        return {"self": dict(ac),
+                "cross": {"k": _ATTN_CACHE_AX, "v": _ATTN_CACHE_AX}}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# family-specific block stacks: one function per family, used by both the
+# train path (cache=None) and the serve paths (cache threaded through scan)
+# ---------------------------------------------------------------------------
+
+
+def _sub_cache(cache, name):
+    return None if cache is None else cache[name]
+
+
+def _run_dense_stack(stack: Params, x, cfg, *, positions, prefix_len=0,
+                     cache=None, rules=None, train=False):
+    """Generic scan over a stacked block list with optional attn cache."""
+
+    def body(carry, xs):
+        xc, ln = carry
+        p_l = xs[0]
+        cache_l = None
+        if cache is not None:
+            cache_l = {"k": xs[1], "v": xs[2], "len": ln}
+        fam_apply = blocks.apply_moe_block if "moe" in p_l else \
+            blocks.apply_dense_block
+        kw = {}
+        if fam_apply is blocks.apply_dense_block:
+            kw["prefix_len"] = prefix_len
+        xc, new_cache = fam_apply(p_l, xc, cfg, positions=positions,
+                                  cache=cache_l, rules=rules, **kw)
+        ys = (new_cache["k"], new_cache["v"]) if cache is not None else 0
+        return (xc, ln), ys
+
+    fn = _maybe_remat(body, cfg) if train else body
+    xs = (stack,) if cache is None else (stack, cache["k"], cache["v"])
+    (x, _), ys = jax.lax.scan(fn, (x, 0 if cache is None else cache["len"]), xs)
+    new_cache = None
+    if cache is not None:
+        s = x.shape[1]
+        new_cache = {"k": ys[0], "v": ys[1], "len": cache["len"] + s}
+    return x, new_cache
+
+
+def _run_hybrid(p: Params, x, cfg, *, positions, cache=None, rules=None,
+                train=False):
+    ng, per = _groups(cfg)
+    mstack = jax.tree.map(
+        lambda a: a.reshape((ng, per) + a.shape[1:]), p["mamba_blocks"])
+    shared = p["shared_attn"]
+
+    def group_body(carry, xs):
+        xc, ln = carry
+        if cache is None:
+            m_l = xs
+            attn_cache = None
+        else:
+            m_l, mamba_states, ck, cv = xs
+            attn_cache = {"k": ck, "v": cv, "len": ln}
+        xc, new_attn = blocks.apply_shared_attn_block(
+            shared, xc, cfg, positions=positions, cache=attn_cache,
+            rules=rules)
+
+        def mamba_body(xc2, xs2):
+            if cache is None:
+                blk = xs2
+                st = None
+            else:
+                blk, st = xs2
+            xc2, new_st = blocks.apply_mamba_block(blk, xc2, cfg, state=st,
+                                                   rules=rules)
+            return xc2, (new_st if cache is not None else 0)
+
+        xs2 = m_l if cache is None else (m_l, mamba_states)
+        xc, new_states = jax.lax.scan(mamba_body, xc, xs2)
+        ys = ((new_attn["k"], new_attn["v"], new_states)
+              if cache is not None else 0)
+        return (xc, ln), ys
+
+    fn = _maybe_remat(group_body, cfg) if train else group_body
+    if cache is None:
+        (x, _), _ = jax.lax.scan(fn, (x, 0), mstack)
+        return x, None
+    xs = (mstack, cache["mamba"], cache["attn"]["k"], cache["attn"]["v"])
+    (x, _), ys = jax.lax.scan(fn, (x, cache["attn"]["len"]), xs)
+    s = x.shape[1]
+    new_cache = {"attn": {"k": ys[0], "v": ys[1],
+                          "len": cache["attn"]["len"] + s},
+                 "mamba": ys[2]}
+    return x, new_cache
+
+
+def _run_ssm(p: Params, x, cfg, *, cache=None, rules=None, train=False):
+    def body(carry, xs):
+        xc = carry
+        if cache is None:
+            blk = xs
+            st = None
+        else:
+            blk, st = xs
+        xc, new_st = blocks.apply_xlstm_pair(blk, xc, cfg, state=st,
+                                             rules=rules)
+        return xc, (new_st if cache is not None else 0)
+
+    fn = _maybe_remat(body, cfg) if train else body
+    xs = p["blocks"] if cache is None else (p["blocks"], cache)
+    x, ys = jax.lax.scan(fn, x, xs)
+    return x, (ys if cache is not None else None)
+
+
+def _run_encoder(p: Params, frames, cfg, *, rules=None, train=False):
+    b, t, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = frames.astype(cdtype(cfg)) + _sinusoidal(pos, cfg.d_model).astype(
+        cdtype(cfg))
+
+    def body(xc, blk):
+        xc, _ = blocks.apply_encoder_block(blk, xc, cfg, positions=pos,
+                                           rules=rules)
+        return xc, 0
+
+    fn = _maybe_remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(fn, x, p["enc_blocks"])
+    return apply_norm(p["enc_norm"], x, cfg)
+
+
+def _cross_kv(p_attn: Params, enc: jax.Array, cfg: ModelConfig):
+    b, t, _ = enc.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = _proj(enc, p_attn["wk"], p_attn.get("bk")).reshape(b, t, kv, dh)
+    v = _proj(enc, p_attn["wv"], p_attn.get("bv")).reshape(b, t, kv, dh)
+    return k, v
+
+
+def _cross_attend(p_attn: Params, xn: jax.Array, cfg: ModelConfig, ck, cv):
+    b, s, _ = xn.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = _proj(xn, p_attn["wq"], p_attn.get("bq")).reshape(b, s, h, dh)
+    out = attn_core(q, ck.astype(xn.dtype), cv.astype(xn.dtype), causal=False)
+    return _proj(out, p_attn["wo"])
+
+
+def _run_xdec(p: Params, x, cfg, *, positions, enc=None, cache=None,
+              rules=None, train=False):
+    """Decoder stack; cross-KV comes from ``enc`` (train/prefill computes it
+    per layer) or from the cache (decode)."""
+
+    def body(carry, xs):
+        xc, ln = carry
+        if cache is None:
+            blk = xs
+            self_cache = None
+            ck = cv = None
+        else:
+            blk, sk, sv, ck, cv = xs
+            self_cache = {"k": sk, "v": sv, "len": ln}
+        xc0 = shard_act(xc, rules)
+        xn = apply_norm(blk["ln1"], xc0, cfg)
+        from .layers import attention
+        a, new_self = attention(blk["self"], xn, cfg, positions=positions,
+                                cache=self_cache, rules=rules)
+        xc = xc0 + a
+        xn2 = apply_norm(blk["ln2"], xc, cfg)
+        if ck is None:
+            ck, cv = _cross_kv(blk["cross"], enc, cfg)
+        xc = xc + _cross_attend(blk["cross"], xn2, cfg, ck, cv)
+        from .layers import ffn as ffn_apply
+        xc = xc + ffn_apply(blk["ffn"], apply_norm(blk["ln3"], xc, cfg), cfg)
+        xc = shard_act(xc, rules)
+        ys = (new_self["k"], new_self["v"]) if cache is not None else 0
+        return (xc, ln), ys
+
+    fn = _maybe_remat(body, cfg) if train else body
+    if cache is None:
+        (x, _), _ = jax.lax.scan(fn, (x, 0), p["blocks"])
+        return x, None
+    xs = (p["blocks"], cache["self"]["k"], cache["self"]["v"],
+          cache["cross"]["k"], cache["cross"]["v"])
+    (x, _), ys = jax.lax.scan(fn, (x, cache["self"]["len"]), xs)
+    s = x.shape[1]
+    new_cache = {"self": {"k": ys[0], "v": ys[1],
+                          "len": cache["self"]["len"] + s},
+                 "cross": cache["cross"]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(p: Params, tokens, cfg, positions):
+    x = embed(p["embed"], tokens, cfg)
+    # absolute (sinusoidal) positions: audio decoder always; attention
+    # families configured without RoPE.  SSM/hybrid are position-free.
+    if cfg.family == "audio" or (
+            cfg.rope == "none" and cfg.family in ("dense", "moe", "vlm")):
+        x = x + _sinusoidal(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            rules=None, train: bool = True,
+            return_hidden: bool = False) -> jax.Array:
+    """Full-sequence logits (teacher forcing).  ``batch["tokens"]: (B, S)``.
+
+    vlm: ``batch["vision"]: (B, n_vision_tokens, d_model)`` prepended with a
+    bidirectional prefix mask; returned logits cover only text positions.
+    audio: ``batch["frames"]: (B, encoder_seq, d_model)`` through the
+    encoder; decoder is teacher-forced on ``tokens``.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    fam = cfg.family
+    prefix = cfg.n_vision_tokens if fam == "vlm" else 0
+    positions = jnp.broadcast_to(jnp.arange(prefix + s)[None], (b, prefix + s))
+
+    x = _embed_tokens(params, tokens, cfg, positions[:, prefix:])
+    if fam == "vlm":
+        vis = batch["vision"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    x = shard_act(x, rules)
+
+    if fam in ("dense", "vlm"):
+        x, _ = _run_dense_stack(params["blocks"], x, cfg, positions=positions,
+                                prefix_len=prefix, rules=rules, train=train)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            x, _ = _run_dense_stack(params["dense_blocks"], x, cfg,
+                                    positions=positions, rules=rules,
+                                    train=train)
+        x, _ = _run_dense_stack(params["moe_blocks"], x, cfg,
+                                positions=positions, rules=rules, train=train)
+    elif fam == "hybrid":
+        x, _ = _run_hybrid(params, x, cfg, positions=positions, rules=rules,
+                           train=train)
+    elif fam == "ssm":
+        x, _ = _run_ssm(params, x, cfg, rules=rules, train=train)
+    elif fam == "audio":
+        enc = _run_encoder(params, batch["frames"], cfg, rules=rules,
+                           train=train)
+        x, _ = _run_xdec(params, x, cfg, positions=positions, enc=enc,
+                         rules=rules, train=train)
+    if fam == "vlm":
+        x = x[:, prefix:]
+    x = apply_norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x
+    return unembed_logits(params["embed"], x, cfg)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Params, rules=None) -> Tuple[jax.Array, Params]:
+    """Prefill the cache with ``batch["tokens"]``; returns last-pos logits."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    fam = cfg.family
+    prefix = cfg.n_vision_tokens if fam == "vlm" else 0
+    positions = jnp.broadcast_to(jnp.arange(prefix + s)[None], (b, prefix + s))
+
+    x = _embed_tokens(params, tokens, cfg, positions[:, prefix:])
+    if fam == "vlm":
+        x = jnp.concatenate([batch["vision"].astype(x.dtype), x], axis=1)
+    x = shard_act(x, rules)
+
+    if fam in ("dense", "vlm"):
+        x, cache = _run_dense_stack(params["blocks"], x, cfg,
+                                    positions=positions, prefix_len=prefix,
+                                    cache=cache, rules=rules)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            dense_cache = {"k": cache["k"][:nd], "v": cache["v"][:nd],
+                           "len": cache["len"]}
+            x, dc = _run_dense_stack(params["dense_blocks"], x, cfg,
+                                     positions=positions, cache=dense_cache,
+                                     rules=rules)
+        moe_cache = {"k": cache["k"][nd:], "v": cache["v"][nd:],
+                     "len": cache["len"]}
+        x, mc = _run_dense_stack(params["moe_blocks"], x, cfg,
+                                 positions=positions, cache=moe_cache,
+                                 rules=rules)
+        k = jnp.concatenate([dc["k"], mc["k"]], 0) if nd else mc["k"]
+        v = jnp.concatenate([dc["v"], mc["v"]], 0) if nd else mc["v"]
+        cache = {"k": k, "v": v, "len": mc["len"]}
+    elif fam == "hybrid":
+        x, cache = _run_hybrid(params, x, cfg, positions=positions,
+                               cache=cache, rules=rules)
+    elif fam == "ssm":
+        x, cache = _run_ssm(params, x, cfg, cache=cache, rules=rules)
+    elif fam == "audio":
+        enc = _run_encoder(params, batch["frames"], cfg, rules=rules)
+        ck, cv = jax.vmap(
+            lambda blk: _cross_kv(blk["cross"], enc, cfg))(params["blocks"])
+        cache = {"self": cache["self"], "cross": {"k": ck, "v": cv}}
+        x, cache = _run_xdec(params, x, cfg, positions=positions, cache=cache,
+                             rules=rules)
+
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    return unembed_logits(params["embed"], x, cfg), cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Params, rules=None) -> Tuple[jax.Array, Params]:
+    """One decode step.  tokens: (B, 1) -> logits (B, 1, V), new cache."""
+    b, s = tokens.shape
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        ln = cache["len"]
+    elif fam == "hybrid":
+        ln = cache["attn"]["len"]
+    elif fam == "audio":
+        ln = cache["self"]["len"]
+    else:  # ssm: position only matters for rope-free recurrence
+        ln = jnp.zeros((), jnp.int32)
+    positions = jnp.broadcast_to(ln[None, None], (b, s)) + jnp.arange(s)[None]
+
+    x = _embed_tokens(params, tokens, cfg, positions)
+    x = shard_act(x, rules, ("batch", None, None))
+
+    if fam in ("dense", "vlm"):
+        prefix = cfg.n_vision_tokens if fam == "vlm" else 0
+        x, cache = _run_dense_stack(params["blocks"], x, cfg,
+                                    positions=positions, prefix_len=prefix,
+                                    cache=cache, rules=rules)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            dense_cache = {"k": cache["k"][:nd], "v": cache["v"][:nd],
+                           "len": cache["len"]}
+            x, dc = _run_dense_stack(params["dense_blocks"], x, cfg,
+                                     positions=positions, cache=dense_cache,
+                                     rules=rules)
+        moe_cache = {"k": cache["k"][nd:], "v": cache["v"][nd:],
+                     "len": cache["len"]}
+        x, mc = _run_dense_stack(params["moe_blocks"], x, cfg,
+                                 positions=positions, cache=moe_cache,
+                                 rules=rules)
+        k = jnp.concatenate([dc["k"], mc["k"]], 0) if nd else mc["k"]
+        v = jnp.concatenate([dc["v"], mc["v"]], 0) if nd else mc["v"]
+        cache = {"k": k, "v": v, "len": mc["len"]}
+    elif fam == "hybrid":
+        x, cache = _run_hybrid(params, x, cfg, positions=positions,
+                               cache=cache, rules=rules)
+    elif fam == "ssm":
+        x, cache = _run_ssm(params, x, cfg, cache=cache, rules=rules)
+    elif fam == "audio":
+        x, cache = _run_xdec(params, x, cfg, positions=positions, cache=cache,
+                             rules=rules)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return unembed_logits(params["embed"], x, cfg), cache

@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+The production meshes are fixed by the launch spec (16x16 ``(data, model)``
+single-pod, 2x16x16 ``(pod, data, model)`` multi-pod), but the assigned
+architectures have head/kv/vocab counts that are not all divisible by 16
+(qwen has 40 heads, paligemma 8/1, whisper's vocab is odd).  JAX rejects
+uneven shardings outright, so every logical tensor dimension carries a
+*fallback chain*: the first mesh-axis assignment whose size divides the
+dimension wins; otherwise the dimension is replicated.
+
+The scheme is Megatron-style TP+SP crossed with ZeRO-3/FSDP:
+
+* ``model`` axis: attention heads / kv heads (or head_dim when head counts
+  don't divide), FFN hidden, experts (EP), vocab, and the *sequence* axis of
+  layer-boundary activations (sequence parallelism — saved activations under
+  scan+remat are S-sharded, gathered inside the layer).
+* ``data`` axis (plus ``pod`` outer axis when present): batch, and the
+  d_model axis of every weight (FSDP; gathered per-layer inside scan).
+
+``ShardingRules.spec(logical_axes, shape)`` resolves one tensor;
+``mesh_axes(...)`` gives the raw tuple form for tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "LOGICAL_RULES", "logical_spec", "shard_like",
+           "axis_size"]
+
+AxisChoice = Union[str, Tuple[str, ...]]
+
+#: logical dimension name -> ordered fallback chain of mesh-axis assignments.
+#: Entries may be a single mesh axis or a tuple (sharded over the product).
+LOGICAL_RULES: Dict[str, Sequence[AxisChoice]] = {
+    # activations
+    "batch": (("pod", "data"), "data"),
+    "seq_act": ("model",),          # layer-boundary activations (SP)
+    "seq": (),                       # in-layer sequence: replicated
+    "embed_act": (),                 # activation d_model: replicated
+    # weights
+    "embed": ("data",),              # weight d_model axis (FSDP)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),          # fallback used by KV caches
+    "qkv_out": ("model",),           # flattened h*dh weight output axis
+    "ffn": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "layers": (),                    # scan axis: never sharded
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "conv_k": (),
+    # cache
+    "cache_batch": (("pod", "data"), "data"),
+    "cache_seq": (),
+    "cache_kv": ("model", ),
+    "cache_dim": ("model",),
+}
+
+
+def _flat(choice: AxisChoice) -> Tuple[str, ...]:
+    return (choice,) if isinstance(choice, str) else tuple(choice)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Resolves logical axis names to mesh axes for a concrete mesh."""
+
+    mesh: Mesh
+    rules: Dict[str, Sequence[AxisChoice]] = field(
+        default_factory=lambda: dict(LOGICAL_RULES))
+
+    def _axis_prod(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, logical: Optional[str], dim: int) -> Optional[AxisChoice]:
+        """First candidate whose mesh size divides ``dim`` (and exists)."""
+        if logical is None:
+            return None
+        for choice in self.rules.get(logical, ()):
+            axes = _flat(choice)
+            if not all(a in self.mesh.shape for a in axes):
+                continue
+            if dim % self._axis_prod(axes) == 0:
+                return choice if isinstance(choice, str) else tuple(choice)
+        return None
+
+    def mesh_axes(self, logical_axes: Sequence[Optional[str]],
+                  shape: Sequence[int]) -> Tuple[Optional[AxisChoice], ...]:
+        if len(logical_axes) != len(shape):
+            raise ValueError(f"rank mismatch: {logical_axes} vs {shape}")
+        out = []
+        used: set = set()
+        for name, dim in zip(logical_axes, shape):
+            choice = self.resolve(name, dim)
+            # one mesh axis may shard only one dim of a tensor
+            if choice is not None:
+                axes = set(_flat(choice))
+                if axes & used:
+                    choice = None
+                else:
+                    used |= axes
+            out.append(choice)
+        return tuple(out)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        return P(*self.mesh_axes(logical_axes, shape))
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    # -- conveniences ------------------------------------------------------
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Mesh axes that carry data parallelism (for psum of grads etc.)."""
+        choice = None
+        for c in self.rules["batch"]:
+            axes = _flat(c)
+            if all(a in self.mesh.shape for a in axes):
+                choice = axes
+                break
+        return choice or ()
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return "model" if "model" in self.mesh.shape else None
+
+    def data_size(self) -> int:
+        return self._axis_prod(self.batch_axes)
+
+    def model_size(self) -> int:
+        return self.mesh.shape.get("model", 1)
+
+
+def logical_spec(rules: ShardingRules, tree: Any, axes_tree: Any) -> Any:
+    """Maps a pytree of logical-axis tuples to PartitionSpecs."""
+    flat_t, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: hasattr(x, "shape"))
+    flat_a = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten(
+        [rules.spec(a, x.shape) for x, a in zip(flat_t, flat_a)])
+
+
+def shard_like(rules: ShardingRules, x: jax.Array,
+               logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, rules.sharding(logical_axes, x.shape))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)

@@ -1,0 +1,225 @@
+"""Train / serve step factories.
+
+``make_train_step(cfg, rules, schedule, opt_cfg)`` builds the pure
+``(state, batch) -> (state, metrics)`` function that launch/train.py jits
+with explicit in/out shardings; ``make_prefill_step`` / ``make_decode_step``
+do the same for serving.  The loss is next-token cross entropy computed
+blockwise over the sequence so the (B, S, V) logits tensor never
+materializes in full (the live block is (B, s_blk, V)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+from .config import ModelConfig
+from .layers import apply_norm, cdtype
+from ..optim import AdamWConfig, OptState, adamw_init, adamw_update, Schedule
+
+Params = Dict[str, Any]
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+    step: jax.Array
+    comp: Any = ()          # gradient-compression error-feedback state
+
+
+def init_train_state(key, cfg: ModelConfig, compressor=None,
+                     opt_cfg: AdamWConfig = AdamWConfig()) -> TrainState:
+    params = model_mod.init_params(key, cfg)
+    comp = compressor.init(params) if compressor is not None else ()
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32), comp=comp)
+
+
+# ---------------------------------------------------------------------------
+# blockwise cross entropy
+# ---------------------------------------------------------------------------
+
+
+def _xent_block(logits: jax.Array, labels: jax.Array,
+                mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sum of masked token losses + correct-token count for one block."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll) * mask
+    acc = (jnp.argmax(logits, -1) == labels) * mask
+    return loss.sum(), acc.sum()
+
+
+def blockwise_xent(hidden: jax.Array, labels: jax.Array, mask: jax.Array,
+                   params: Params, cfg: ModelConfig,
+                   block: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Cross entropy from final *hidden* states, unembedding block-by-block.
+
+    hidden: (B, S, D) post-final-norm; labels/mask: (B, S).
+    Returns (mean loss, mean accuracy) over mask.
+    """
+    from .layers import logits as unembed
+    b, s, d = hidden.shape
+    blk = min(block, s)
+    if s % blk:
+        pad = blk - s % blk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s += pad
+    nb = s // blk
+    hs = jnp.moveaxis(hidden.reshape(b, nb, blk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nb, blk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nb, blk), 1, 0)
+
+    def body(carry, xs):
+        h, l, m = xs
+        lg = unembed(params["embed"], h.astype(cdtype(cfg)), cfg)
+        lsum, asum = _xent_block(lg, l, m)
+        return (carry[0] + lsum, carry[1] + asum), 0
+
+    (loss_sum, acc_sum), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return loss_sum / denom, acc_sum / denom
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            rules=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token LM loss.  ``batch["tokens"] (B, S)``; labels are the
+    tokens shifted left; the final position is masked out.  Extra modality
+    inputs (vision/frames) pass through to the model."""
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if "mask" in batch:
+        mask = mask * batch["mask"].astype(jnp.float32)
+
+    # forward WITHOUT the unembedding: redo final norm here so the logits
+    # can be formed blockwise (model.forward returns full logits; we reuse
+    # its internals via the hidden path).
+    hidden = forward_hidden(params, cfg, batch, rules)
+    loss, acc = blockwise_xent(hidden, labels, mask, params, cfg)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def forward_hidden(params: Params, cfg: ModelConfig,
+                   batch: Dict[str, jax.Array], rules=None) -> jax.Array:
+    """model.forward minus the unembedding (returns post-norm hidden)."""
+    # Reuse model.forward's plumbing by monkey-free composition: the model
+    # module exposes the same stacks; here we replicate the tail.
+    return model_mod.forward(params, cfg, batch, rules=rules, train=True,
+                             return_hidden=True)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, schedule: Schedule,
+                    opt_cfg: AdamWConfig = AdamWConfig(), rules=None,
+                    compressor=None, microbatches: int = 1,
+                    acc_dtype: str = "float32"):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure).
+
+    ``compressor``: optional error-feedback gradient compressor
+    (`repro.distributed.compression`); its residual state rides in
+    ``state.comp`` and is sharded like the parameters.
+
+    ``microbatches > 1``: gradient accumulation — the global batch is split
+    into ``k`` sequential microbatches (``lax.scan``), dividing the live
+    activation footprint (remat-saved layer inputs and transients) by ``k``
+    at the cost of ``k`` forward/backward passes over ``1/k`` of the data.
+    The per-device batch dim must stay divisible by the data axis, so ``k``
+    must divide ``global_batch / data_parallelism``.
+    """
+
+    def constrain_grads(g):
+        """Pin gradients to the parameters' (FSDP x TP) sharding.
+
+        Without this GSPMD reduces data-parallel gradients with FULL-tensor
+        fp32 all-reduces per layer (measured: the dominant collective term
+        for large dense models); the constraint turns them into
+        reduce-scatters onto the ZeRO shard — 2(n-1)/n -> (n-1)/n ring cost
+        on 1/16th the bytes."""
+        if rules is None:
+            return g
+        from jax.sharding import NamedSharding
+        from .model import param_axes
+        from .sharding import logical_spec
+        spec = logical_spec(rules, g, param_axes(cfg))
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(rules.mesh, s)), g, spec)
+
+    def grad_of(params, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, rules), has_aux=True)(params)
+        return (loss, m), constrain_grads(g)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_of(state.params, batch)
+        else:
+            k = microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return jnp.moveaxis(
+                    x.reshape((k, b // k) + x.shape[1:]), 0, 0)
+
+            mb = jax.tree.map(split, batch)
+
+            acc_dt = jnp.dtype(acc_dtype)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                (loss, m), g = grad_of(state.params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32) / k).astype(acc_dt),
+                    g_acc, g)
+                return (g_acc, l_acc + loss / k,
+                        a_acc + m["accuracy"] / k), 0
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params)
+            (grads, loss, acc), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            metrics = {"loss": loss, "accuracy": acc}
+
+        comp_state = state.comp
+        if compressor is not None:
+            grads, comp_state = compressor(grads, comp_state)
+        lr = schedule(state.step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "step": state.step}
+        return TrainState(new_params, new_opt, state.step + 1,
+                          comp_state), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, rules=None):
+    def prefill_step(params: Params, batch: Dict[str, jax.Array],
+                     cache: Params):
+        return model_mod.prefill(params, cfg, batch, cache, rules=rules)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules=None):
+    def decode_step(params: Params, tokens: jax.Array, cache: Params):
+        return model_mod.decode_step(params, cfg, tokens, cache, rules=rules)
+    return decode_step

@@ -1,0 +1,230 @@
+"""xLSTM blocks (sLSTM + mLSTM) for the xlstm-125m architecture.
+
+mLSTM: matrix-memory LSTM — ``C_t = f_t C_{t-1} + i_t v_t k_t^T``, read out
+as ``h_t = (C_t q_t) / max(|n_t . q_t|, 1)``; exponential gating with a
+log-domain stabilizer state ``m_t``.  Parallelized over the sequence with
+the same chunked-scan trick as Mamba2 (decay products inside a chunk are
+cumulative sums of log f).
+
+sLSTM: scalar-memory LSTM with exponential input gate and normalizer state;
+sequential by construction — implemented as a per-head ``lax.scan`` over
+time (the paper's own formulation; its recurrence is cheap: O(d) per step).
+
+Both are O(S) in sequence length, qualifying xlstm for ``long_500k``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init, pdtype
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int]:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    return nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, pdtype(cfg)),
+        "wk": dense_init(ks[1], d, d, pdtype(cfg)),
+        "wv": dense_init(ks[2], d, d, pdtype(cfg)),
+        "wif": dense_init(ks[3], d, 2 * nh, pdtype(cfg)),   # input+forget gate
+        "wo": dense_init(ks[4], d, d, pdtype(cfg)),
+        "ogate": dense_init(ks[5], d, d, pdtype(cfg)),
+    }
+
+
+_IG_CLIP = 15.0   # input-gate pre-activation clip (both paths, identical)
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  state: Optional[Dict[str, jax.Array]] = None,
+                  chunk: int = 256
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D).  state: {"C": (B,nh,dh,dh), "n": (B,nh,dh), "m": (B,nh)}.
+
+    Prefill uses a chunked scan (O(S) like Mamba2's SSD): quadratic gated
+    linear attention inside each chunk, matrix-state carry across chunks.
+    The chunked path carries the SAME log-domain running-max stabilizer
+    ``m`` as the exact decode recurrence (xLSTM's ``max(|n.q|, 1)``
+    read-out clamp is scale-dependent, so the stabilized and unstabilized
+    forms are NOT output-equivalent — tests pin chunked == stepwise).
+    """
+    b, s, d = x.shape
+    nh, dh = _dims(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nh, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, nh, dh) / np.sqrt(dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, nh, dh)
+    gates = (x @ p["wif"].astype(x.dtype)).astype(jnp.float32)
+    ig = jnp.clip(gates[..., :nh], -_IG_CLIP, _IG_CLIP)     # (B,S,nh)
+    logf = jax.nn.log_sigmoid(gates[..., nh:])
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    if state is not None and s == 1:
+        m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+        m_t = jnp.maximum(logf[:, 0] + m_prev, ig[:, 0])
+        fsc = jnp.exp(logf[:, 0] + m_prev - m_t)
+        isc = jnp.exp(ig[:, 0] - m_t)
+        C = fsc[..., None, None] * C_prev \
+            + isc[..., None, None] * (vf[:, 0, :, :, None] * kf[:, 0, :, None, :])
+        n = fsc[..., None] * n_prev + isc[..., None] * kf[:, 0]
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf[:, 0])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf[:, 0])), 1.0)
+        h = (num / den[..., None]).reshape(b, 1, d)
+        new_state = {"C": C, "n": n, "m": m_t}
+    else:
+        pad = (-s) % chunk
+        cs = min(chunk, s + pad)
+        if pad:
+            qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            # -inf input gate: padded positions contribute exactly zero to
+            # the carried state (exp(-inf) = 0)
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e30)
+            logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        nc = (s + pad) // cs
+
+        def to_chunks(t, extra):
+            return jnp.moveaxis(t.reshape((b, nc, cs) + extra), 1, 0)
+
+        inputs = (to_chunks(qf, (nh, dh)), to_chunks(kf, (nh, dh)),
+                  to_chunks(vf, (nh, dh)), to_chunks(ig, (nh,)),
+                  to_chunks(logf, (nh,)))
+        tril = jnp.tril(jnp.ones((cs, cs), jnp.float32))
+
+        def chunk_body(carry, inp):
+            C, n, m = carry                  # stabilized state @ scale e^m
+            qc, kc, vc, igc, lfc = inp
+            cumf = jnp.cumsum(lfc, axis=1)                       # L_i (b,cs,nh)
+            # per-position stabilizer: m_i = max(L_i + m_prev,
+            #                                    max_{j<=i}(L_i - L_j + ig_j))
+            a = cumf + m[:, None, :]                             # carry path
+            intra = jax.lax.cummax(igc - cumf, axis=1) + cumf    # intra path
+            m_i = jnp.maximum(a, intra)                          # (b,cs,nh)
+            dmat = (cumf[:, :, None, :] - cumf[:, None, :, :]
+                    + igc[:, None, :, :] - m_i[:, :, None, :])
+            # mask the upper triangle BEFORE exp: dmat is only <= 0 for
+            # j <= i; exp of the (positive) upper triangle overflows and
+            # inf * 0 = NaN under a post-exp tril multiply
+            dmat = jnp.where(tril[None, :, :, None] > 0, dmat, -jnp.inf)
+            w = jnp.exp(dmat)
+            qk = jnp.einsum("bihk,bjhk->bijh", qc, kc)
+            aw = w * qk
+            num = jnp.einsum("bijh,bjhv->bihv", aw, vc)
+            den = aw.sum(2)                                      # (b,cs,nh)
+            # inter-chunk contribution from carried (stabilized) state
+            dec_i = jnp.exp(a - m_i)                             # <= 1
+            num = num + jnp.einsum("bhvk,bihk,bih->bihv", C, qc, dec_i)
+            den = den + jnp.einsum("bhk,bihk,bih->bih", n, qc, dec_i)
+            h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+            # state update at the end-of-chunk stabilizer m_c
+            m_c = m_i[:, -1, :]
+            tot = cumf[:, -1:, :]
+            wj = jnp.exp(tot - cumf + igc - m_c[:, None, :])
+            fsc = jnp.exp(tot[:, 0, :] + m - m_c)
+            C = fsc[:, :, None, None] * C \
+                + jnp.einsum("bjh,bjhv,bjhk->bhvk", wj, vc, kc)
+            n = fsc[:, :, None] * n \
+                + jnp.einsum("bjh,bjhk->bhk", wj, kc)
+            return (C, n, m_c), h
+
+        C0 = state["C"] if state is not None else jnp.zeros((b, nh, dh, dh),
+                                                            jnp.float32)
+        n0 = state["n"] if state is not None else jnp.zeros((b, nh, dh),
+                                                            jnp.float32)
+        m0 = state["m"] if state is not None else jnp.zeros((b, nh),
+                                                            jnp.float32)
+        # remat per chunk (see mamba2: avoids stacking (b, cs, cs, nh)
+        # gated-attention residuals across chunks in the backward pass)
+        (C, n, m_fin), hs = jax.lax.scan(jax.checkpoint(chunk_body),
+                                         (C0, n0, m0), inputs)
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, nc * cs, nh, dh)[:, :s]
+        h = h.reshape(b, s, d)
+        new_state = {"C": C, "n": n, "m": m_fin}
+    og = jax.nn.sigmoid((x @ p["ogate"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * og).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, pdtype(cfg)),   # z, i, f, o pre-acts
+        "wh": dense_init(ks[1], d, 4 * d, pdtype(cfg)),   # recurrent
+        "wo": dense_init(ks[2], d, d, pdtype(cfg)),
+    }
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  state: Optional[Dict[str, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sequential scan over time.  state: {"h","c","n","m"} each (B, D)."""
+    b, s, d = x.shape
+    pre = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32)   # (B,S,4D)
+    wh = p["wh"].astype(jnp.float32)
+
+    if state is None:
+        state = {k: jnp.zeros((b, d), jnp.float32) for k in ("h", "c", "n")}
+        state["m"] = jnp.full((b, d), -1e30, jnp.float32)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        g = pre_t + h @ wh
+        z, i, f, o = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(z)
+        ot = jax.nn.sigmoid(o)
+        logf = jax.nn.log_sigmoid(f)
+        m_t = jnp.maximum(logf + m, i)
+        isc = jnp.exp(i - m_t)
+        fsc = jnp.exp(logf + m - m_t)
+        c_t = fsc * c + isc * zt
+        n_t = fsc * n + isc
+        h_t = ot * c_t / jnp.maximum(jnp.abs(n_t), 1.0)
+        return (h_t, c_t, n_t, m_t), h_t
+
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(pre, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,D)
+    out = h_seq @ p["wo"].astype(x.dtype)
+    new_state = dict(zip(("h", "c", "n", "m"), carry))
+    return out, new_state
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int, kind: str
+                     ) -> Dict[str, jax.Array]:
+    nh, dh = _dims(cfg)
+    d = cfg.d_model
+    if kind == "mlstm":
+        return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh), jnp.float32),
+                "m": jnp.zeros((batch, nh), jnp.float32)}
+    st = {k: jnp.zeros((batch, d), jnp.float32) for k in ("h", "c", "n")}
+    st["m"] = jnp.full((batch, d), -1e30, jnp.float32)
+    return st

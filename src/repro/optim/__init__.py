@@ -1,0 +1,19 @@
+"""Sharded optimizer substrate (no external deps — optax is not available).
+
+AdamW with decoupled weight decay, global-norm clipping, and
+warmup+cosine/linear schedules.  Optimizer state mirrors the parameter
+pytree, so the ZeRO-3 sharding of the parameters applies verbatim to the
+moments and the fp32 master copy.
+
+Also hosts the distributed-optimization knobs used by the train step:
+
+* ``GradientCompression`` — error-feedback int8 / top-k compressors applied
+  to data-parallel gradient all-reduces (see `repro.distributed.compression`).
+"""
+
+from .adamw import AdamWConfig, OptState, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import Schedule, warmup_cosine, warmup_linear, constant
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "Schedule", "warmup_cosine",
+           "warmup_linear", "constant"]

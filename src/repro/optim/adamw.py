@@ -1,0 +1,130 @@
+"""AdamW with fp32 master weights, built directly on pytrees.
+
+State layout (one leaf per parameter leaf, same tree structure — so any
+parameter sharding spec lifts to the optimizer state by construction):
+
+* ``mu`` / ``nu``: fp32 first/second moments,
+* ``master``: fp32 master copy of the parameters (params themselves may be
+  bf16; updates are computed in fp32 and cast back),
+* ``count``: int32 step counter (replicated scalar).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # leaves whose path contains one of these substrings skip weight decay
+    no_decay_keys: Tuple[str, ...] = ("scale", "bias", "norm", "A_log", "D",
+                                      "dt_bias")
+    # distributed-memory knobs (§Perf): Adafactor-style factored second
+    # moment for >=2-D leaves (O(rows+cols) instead of O(rows*cols)) and a
+    # reduced-precision first moment.  The fp32 master copy is unaffected.
+    factored_nu: bool = False
+    mu_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    master: Any
+    count: jax.Array
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _is_factored(p, cfg: AdamWConfig) -> bool:
+    return cfg.factored_nu and p.ndim >= 2
+
+
+def _nu_init(p, cfg: AdamWConfig):
+    if _is_factored(p, cfg):
+        return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+    return jnp.zeros_like(p, dtype=jnp.float32)
+
+
+def adamw_init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    mu_dt = jnp.dtype(cfg.mu_dtype)
+    return OptState(
+        mu=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dt), params),
+        nu=jax.tree.map(lambda p: _nu_init(p, cfg), params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads: Any, state: OptState, params: Any, lr: jax.Array,
+                 cfg: AdamWConfig = AdamWConfig()) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(m.dtype), state.mu, grads)
+
+    def nu_update(v, g):
+        if isinstance(v, dict):                    # factored (Adafactor)
+            g2 = g * g + 1e-30
+            return {"vr": cfg.b2 * v["vr"] + (1 - cfg.b2) * g2.mean(-1),
+                    "vc": cfg.b2 * v["vc"] + (1 - cfg.b2) * g2.mean(-2)}
+        return cfg.b2 * v + (1 - cfg.b2) * g * g
+
+    nu = jax.tree.map(nu_update, state.nu, grads,
+                      is_leaf=lambda x: isinstance(x, dict) and "vr" in x)
+
+    def denom(v):
+        if isinstance(v, dict):
+            vr, vc = v["vr"] / c2, v["vc"] / c2
+            vhat = (vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+                    )[..., None] * vc[..., None, :]
+            return jnp.sqrt(vhat) + cfg.eps
+        return jnp.sqrt(v / c2) + cfg.eps
+
+    # per-leaf weight-decay mask from path names
+    paths = [
+        _path_str(p) for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    ]
+    flat_m, treedef = jax.tree_util.tree_flatten(mu)
+    flat_v = jax.tree.leaves(
+        nu, is_leaf=lambda x: isinstance(x, dict) and "vr" in x)
+    flat_w = jax.tree.leaves(state.master)
+
+    new_master = []
+    for path, m, v, w in zip(paths, flat_m, flat_v, flat_w):
+        upd = (m.astype(jnp.float32) / c1) / denom(v)
+        if cfg.weight_decay and not any(k in path for k in cfg.no_decay_keys):
+            upd = upd + cfg.weight_decay * w
+        new_master.append(w - lr * upd)
+    master = jax.tree_util.tree_unflatten(treedef, new_master)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu, nu, master, count), metrics

@@ -1,0 +1,37 @@
+"""Learning-rate schedules as pure step -> lr callables."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+__all__ = ["Schedule", "warmup_cosine", "warmup_linear", "constant"]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(lr: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Schedule:
+    def fn(step):
+        s = step.astype(jnp.float32) + 1.0
+        warm = s / jnp.maximum(warmup, 1)
+        decay = 1.0 - (s - warmup) / jnp.maximum(total - warmup, 1)
+        return lr * jnp.clip(jnp.minimum(warm, decay), floor / lr, 1.0)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        s = step.astype(jnp.float32) + 1.0
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,87 @@
+"""ArchSpec + executor coverage: serialization, match types, encodings."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArchSpec, CamType, OptimizationTarget,
+                        PAPER_BASE_ARCH)
+from repro.core.arch import AccessMode
+from repro.kernels import ops, ref
+
+
+def test_archspec_json_roundtrip():
+    a = ArchSpec(rows=64, cols=128, cam_type=CamType.ACAM,
+                 banks=8).with_target("power+density")
+    b = ArchSpec.from_json(a.to_json())
+    assert a == b
+
+
+def test_archspec_validation():
+    with pytest.raises(ValueError):
+        ArchSpec(cam_type="nvram")
+    with pytest.raises(ValueError):
+        ArchSpec(target="speed")
+    with pytest.raises(ValueError):
+        ArchSpec(access={"bank": "parallel", "mat": "parallel",
+                         "array": "diagonal", "subarray": "parallel"})
+
+
+def test_with_target_knobs():
+    base = PAPER_BASE_ARCH
+    p = base.with_target(OptimizationTarget.POWER)
+    assert p.max_active_subarrays == 1 and not p.selective_search
+    d = base.with_target(OptimizationTarget.DENSITY)
+    assert d.selective_search and d.max_active_subarrays == 0
+    pd = base.with_target(OptimizationTarget.POWER_DENSITY)
+    assert pd.selective_search and pd.max_active_subarrays == 1
+
+
+def test_capacity_accounting():
+    a = ArchSpec(rows=32, cols=32, subarrays_per_array=8, arrays_per_mat=4,
+                 mats_per_bank=4)
+    assert a.subarrays_per_bank == 128
+    assert a.cells_per_bank == 128 * 1024
+    assert a.banks_needed(10, 8192) == 2      # 256 tiles over 128/bank
+
+
+def test_exact_match_semantics(rng):
+    """EX match: only identical rows fire (paper match-type EX)."""
+    p = (rng.random((20, 48)) > 0.5).astype(np.float32)
+    q = p[[4, 9]].copy()
+    ex = np.asarray(ref.cam_exact(jnp.asarray(q), jnp.asarray(p)))
+    assert ex[0].sum() >= 1 and ex[0, 4]
+    assert ex[1, 9]
+
+
+def test_threshold_match_monotone(rng):
+    """TH match: match set grows monotonically with the threshold."""
+    q = (rng.random((3, 64)) > 0.5).astype(np.float32)
+    p = (rng.random((50, 64)) > 0.5).astype(np.float32)
+    sizes = []
+    for th in (0, 8, 16, 32, 64):
+        m = np.asarray(ref.cam_range(jnp.asarray(q), jnp.asarray(p),
+                                     float(th)))
+        sizes.append(m.sum())
+    assert all(b >= a for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] == 3 * 50                 # threshold D matches all
+
+
+def test_sequential_access_mode_raises_latency():
+    from repro.core import compile_fn
+
+    def k(inp, w):
+        mm = inp.matmul(w.transpose(-2, -1))
+        return mm.topk(1, largest=False)
+
+    seq = ArchSpec(rows=32, cols=32,
+                   access={"bank": AccessMode.PARALLEL,
+                           "mat": AccessMode.PARALLEL,
+                           "array": AccessMode.SEQUENTIAL,
+                           "subarray": AccessMode.PARALLEL})
+    par = ArchSpec(rows=32, cols=32)
+    rs = compile_fn(k, [(100, 4096), (10, 4096)], seq,
+                    unroll_limit=0).cost_report()
+    rp = compile_fn(k, [(100, 4096), (10, 4096)], par,
+                    unroll_limit=0).cost_report()
+    assert rs.latency_ns > rp.latency_ns

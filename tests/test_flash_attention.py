@@ -1,0 +1,73 @@
+"""Pallas flash-attention kernel vs the pure-jnp chunked oracle
+(`models/layers.attn_core`), interpret mode on CPU."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.layers import attn_core
+
+
+def _data(rng, b, s, t, h, kvh, dh, dtype=np.float32):
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, t, kvh, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, t, kvh, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 64, 4, 2, 32), (1, 100, 100, 8, 8, 16),
+    (2, 32, 96, 4, 1, 64), (1, 257, 257, 2, 2, 128),
+    (1, 16, 512, 4, 4, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(shape, causal, rng):
+    b, s, t, h, kvh, dh = shape
+    q, k, v = _data(rng, *shape)
+    o1 = flash_attention_pallas(q, k, v, causal=causal,
+                                block_q=32, block_k=64)
+    o2 = attn_core(q, k, v, causal=causal).reshape(b, s, h, dh)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3)
+
+
+def test_flash_prefix_lm(rng):
+    q, k, v = _data(rng, 1, 32, 32, 2, 2, 16)
+    o1 = flash_attention_pallas(q, k, v, causal=True, prefix_len=8,
+                                block_q=16, block_k=16)
+    o2 = attn_core(q, k, v, causal=True, prefix_len=8).reshape(1, 32, 2, 16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3)
+
+
+def test_flash_kv_len_masking(rng):
+    """Cache-style: only the first kv_len rows are valid."""
+    q, k, v = _data(rng, 1, 8, 64, 2, 2, 16)
+    o1 = flash_attention_pallas(q, k, v, causal=False, kv_len=40,
+                                block_q=8, block_k=16)
+    o2 = attn_core(q, k[:, :40], v[:, :40], causal=False
+                   ).reshape(1, 8, 2, 16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _data(rng, 1, 64, 64, 4, 2, 32, np.float32)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    o1 = flash_attention_pallas(qb, kb, vb, causal=True)
+    o2 = attn_core(q, k, v, causal=True).reshape(1, 64, 4, 32)
+    np.testing.assert_allclose(np.asarray(o1, np.float32), np.asarray(o2),
+                               atol=0.05)
+
+
+@given(s=st.integers(1, 80), t=st.integers(1, 80),
+       g=st.sampled_from([1, 2, 4]), dh=st.sampled_from([8, 16, 32]),
+       bq=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16, 32]))
+@settings(max_examples=12, deadline=None)
+def test_flash_block_shape_invariance(s, t, g, dh, bq, bk):
+    """Property: results are independent of the VMEM tiling."""
+    rng = np.random.default_rng(s * 100 + t)
+    kvh = 2
+    q, k, v = _data(rng, 1, s, t, kvh * g, kvh, dh)
+    o1 = flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_k=bk)
+    o2 = attn_core(q, k, v, causal=True).reshape(1, s, kvh * g, dh)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3)

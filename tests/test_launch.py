@@ -1,0 +1,79 @@
+"""Launch-layer logic tests (no multi-device mesh needed: ShardingRules
+only reads ``mesh.shape``)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import (SHAPES, batch_struct, default_microbatches,
+                                input_specs, skip_reason, state_sharding,
+                                train_state_struct)
+from repro.models.sharding import ShardingRules
+from repro.optim import AdamWConfig
+
+
+class _FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+RULES = ShardingRules(mesh=_FakeMesh(data=16, model=16))
+
+
+def test_shapes_table_matches_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_skips_exactly_the_full_attention_archs():
+    runs = {a for a in ARCH_IDS
+            if skip_reason(get_config(a), "long_500k") is None}
+    assert runs == {"zamba2-2.7b", "xlstm-125m"}
+    for a in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(get_config(a), shape) is None
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if skip_reason(cfg, shape):
+                continue
+            kind, specs = input_specs(cfg, shape)
+            assert kind in ("train", "prefill", "decode")
+            # every leaf is an abstract ShapeDtypeStruct (no allocation)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), leaf
+
+
+def test_microbatch_heuristic_scales_with_model():
+    assert default_microbatches(get_config("mistral-large-123b"),
+                                "train_4k", RULES) >= 4
+    assert default_microbatches(get_config("xlstm-125m"),
+                                "train_4k", RULES) == 1
+    # serve shapes never microbatch
+    assert default_microbatches(get_config("mistral-large-123b"),
+                                "decode_32k", RULES) == 1
+
+
+def test_state_sharding_tree_matches_state_struct():
+    for factored in (False, True):
+        opt = AdamWConfig(factored_nu=factored)
+        cfg = get_config("chatglm3-6b")
+        struct = train_state_struct(cfg, opt)
+        spec = state_sharding(cfg, RULES, opt)
+        assert jax.tree_util.tree_structure(struct) == \
+            jax.tree_util.tree_structure(spec)
+
+
+def test_vlm_audio_frontends_are_stub_inputs():
+    vlm = batch_struct(get_config("paligemma-3b"), 4, 16)
+    assert vlm["vision"].shape == (4, 256, 2048)
+    audio = batch_struct(get_config("whisper-medium"), 4, 16)
+    assert audio["frames"].shape == (4, 1500, 1024)

@@ -1,0 +1,254 @@
+"""Model-substrate tests: all 10 reduced architectures + layer semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import layers, model, steps
+from repro.models.config import ModelConfig
+from repro.optim import warmup_cosine
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Assignment requirement: reduced config, one forward + train step on
+    CPU, output shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+    params = model.init_params(key, cfg)
+    logits = model.forward(params, cfg, batch, train=False)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    state = steps.init_train_state(key, cfg)
+    fn = jax.jit(steps.make_train_step(cfg, warmup_cosine(1e-3, 5, 50)))
+    state, m = fn(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Decode path correctness: prefill(t[:n]) + decode steps must produce
+    the same logits as the teacher-forced forward pass.
+
+    Run in f32 so this checks the *algorithm* (cache indexing, chunked-scan
+    vs recurrent state equivalence) rather than bf16 noise — the hybrid's
+    exponential-state recurrences amplify bf16 rounding between the two
+    mathematically-equivalent execution orders.  MoE capacity is raised so
+    no tokens drop: Switch-style capacity dropping is batch-context
+    dependent by design, so teacher-forcing and incremental decode only
+    agree in the drop-free regime."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              param_dtype="float32",
+                              compute_dtype="float32",
+                              capacity_factor=64.0)
+    key = jax.random.PRNGKey(1)
+    b, s = 2, 12
+    batch = _batch(cfg, key, b, s)
+    params = model.init_params(key, cfg)
+
+    full = model.forward(params, cfg, batch, train=False).astype(jnp.float32)
+
+    n_prefill = 8
+    pre_batch = dict(batch, tokens=batch["tokens"][:, :n_prefill])
+    cache = model.init_decode_cache(cfg, b, s + 2)
+    lg, cache = model.prefill(params, cfg, pre_batch, cache)
+    outs = [lg.astype(jnp.float32)]
+    for t in range(n_prefill, s):
+        lg, cache = model.decode_step(params, cfg, batch["tokens"][:, t:t + 1],
+                                      cache)
+        outs.append(lg.astype(jnp.float32))
+    stitched = jnp.concatenate(outs, axis=1)            # pos n_prefill-1 .. s-1
+    want = full[:, n_prefill - 1:s]
+    # bf16 compute: allow loose tolerance but demand argmax agreement
+    np.testing.assert_allclose(np.asarray(stitched), np.asarray(want),
+                               atol=0.75, rtol=0.2)
+    agree = (stitched.argmax(-1) == want.argmax(-1)).mean()
+    assert float(agree) > 0.95, f"argmax agreement {agree}"
+
+
+def test_param_axes_tree_matches_params():
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        params = jax.eval_shape(lambda k, c=cfg: model.init_params(k, c),
+                                jax.random.PRNGKey(0))
+        axes = model.param_axes(cfg)
+        ps = jax.tree_util.tree_structure(params)
+        ass = jax.tree_util.tree_structure(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        assert ps == ass, f"{arch}: axes tree != params tree"
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_a = jax.tree_util.tree_leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        for p, a in zip(flat_p, flat_a):
+            assert len(p.shape) == len(a), f"{arch}: rank mismatch {p.shape} {a}"
+
+
+def test_cache_axes_tree_matches_cache():
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        cache = jax.eval_shape(lambda c=cfg: model.init_decode_cache(c, 2, 8))
+        axes = model.cache_axes(cfg)
+        assert jax.tree_util.tree_structure(cache) == \
+            jax.tree_util.tree_structure(
+                axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# attention semantics
+# ---------------------------------------------------------------------------
+
+
+def _mini_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_chunked_attention_equals_full():
+    cfg = _mini_cfg()
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+    full = layers.attn_core(q, k, v, causal=True, q_chunk=64)
+    chunked = layers.attn_core(q, k, v, causal=True, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_prefix_lm_mask():
+    """With a prefix, early tokens attend bidirectionally into the prefix."""
+    q = jnp.ones((1, 8, 1, 4))
+    k = jnp.ones((1, 8, 1, 4))
+    v = jnp.arange(8, dtype=jnp.float32)[None, :, None, None] * jnp.ones(
+        (1, 8, 1, 4))
+    causal = layers.attn_core(q, k, v, causal=True, q_chunk=8)
+    prefix = layers.attn_core(q, k, v, causal=True, prefix_len=4, q_chunk=8)
+    # token 0 under pure causal sees only v0 (=0); with prefix sees v0..v3
+    assert float(causal[0, 0, 0]) == 0.0
+    assert abs(float(prefix[0, 0, 0]) - 1.5) < 1e-5
+
+
+def test_gqa_cache_decode_matches_nocache():
+    cfg = _mini_cfg()
+    key = jax.random.PRNGKey(3)
+    p = layers.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 10, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    full, _ = layers.attention(p, x, cfg, positions=pos)
+    cache = layers.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    outs = []
+    for t in range(10):
+        o, cache = layers.attention(p, x[:, t:t + 1], cfg,
+                                    positions=pos[:, t:t + 1], cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-2,
+                               rtol=1e-2)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend on relative distance: shifting all positions by a
+    constant must not change attention outputs."""
+    cfg = _mini_cfg()
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1, 8, 4, 16), jnp.float32)
+    p0 = jnp.arange(8)[None]
+    p1 = p0 + 100
+    r0 = layers.apply_rope(x, p0, cfg)
+    r1 = layers.apply_rope(x, p1, cfg)
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", r0, r0)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", r1, r1)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE: CAM-offloaded router == dense router (the paper-technique hook)
+# ---------------------------------------------------------------------------
+
+
+def test_moe_cam_router_matches_dense_router():
+    from repro.models import moe as moe_mod
+    cfg_d = _mini_cfg(family="moe", n_experts=8, moe_top_k=2,
+                      d_expert=32, first_dense_layers=0,
+                      router_offload="dense")
+    key = jax.random.PRNGKey(5)
+    xt = jax.random.normal(key, (32, 64), jnp.float32)
+    rw = jax.random.normal(jax.random.fold_in(key, 1), (64, 8), jnp.float32)
+    vd, idd = moe_mod.router_topk(xt, rw, 2, "dense")
+    vc, idc = moe_mod.router_topk(xt, rw, 2, "cam")
+    np.testing.assert_array_equal(np.asarray(idd), np.asarray(idc))
+    np.testing.assert_allclose(np.asarray(vd), np.asarray(vc), atol=1e-4)
+
+
+def test_moe_ffn_cam_equals_dense_output():
+    from repro.models import moe as moe_mod
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (2, 8, 64), jnp.float32)
+    cfg_d = _mini_cfg(family="moe", n_experts=8, moe_top_k=2, d_expert=32,
+                      n_shared_experts=1, router_offload="dense")
+    cfg_c = _mini_cfg(family="moe", n_experts=8, moe_top_k=2, d_expert=32,
+                      n_shared_experts=1, router_offload="cam")
+    p = moe_mod.init_moe(key, cfg_d)
+    yd = moe_mod.moe_ffn(p, x, cfg_d)
+    yc = moe_mod.moe_ffn(p, x, cfg_c)
+    np.testing.assert_allclose(np.asarray(yd, np.float32),
+                               np.asarray(yc, np.float32), atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (pure logic — no devices needed)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_sharding_divisibility_fallbacks():
+    from repro.models.sharding import ShardingRules
+    rules = ShardingRules(mesh=_FakeMesh(data=16, model=16))
+    # 40 heads don't divide 16 -> replicated
+    assert rules.mesh_axes(("heads",), (40,)) == (None,)
+    assert rules.mesh_axes(("heads",), (96,)) == ("model",)
+    # whisper's odd vocab falls back to replicated
+    assert rules.mesh_axes(("vocab",), (51865,)) == (None,)
+    assert rules.mesh_axes(("vocab",), (152064,)) == ("model",)
+    # kv=8 cache: kv replicated, head_dim picks up the model axis
+    axes = rules.mesh_axes(
+        ("layers", "cache_batch", "cache_seq", "cache_kv", "cache_dim"),
+        (88, 128, 32768, 8, 128))
+    assert axes[3] is None and axes[4] == "model"
+    # ...but kv=32 takes model and head_dim must NOT reuse it
+    axes = rules.mesh_axes(
+        ("layers", "cache_batch", "cache_seq", "cache_kv", "cache_dim"),
+        (54, 1, 1024, 32, 80))
+    assert axes[3] == "model" and axes[4] is None
+
+
+def test_sharding_multipod_batch_axes():
+    from repro.models.sharding import ShardingRules
+    rules = ShardingRules(mesh=_FakeMesh(pod=2, data=16, model=16))
+    assert rules.batch_axes == ("pod", "data")
+    assert rules.mesh_axes(("batch", None), (256, 4096))[0] == ("pod", "data")
+    # batch=1 (long_500k): replicated
+    assert rules.mesh_axes(("batch", None), (1, 4096))[0] is None

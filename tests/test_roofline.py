@@ -1,0 +1,93 @@
+"""Roofline HLO-parser unit tests on a hand-written post-SPMD module."""
+
+import numpy as np
+
+from repro.launch import roofline as rl
+
+HLO = """\
+HloModule jit_step, is_scheduled=true
+
+%cond.1 (arg: (s32[], f32[4,8])) -> pred[] {
+  %arg = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %arg = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[4,8]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %y = f32[4,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r = f32[4,8]{1,0} all-reduce(%y), replica_groups=[2,8]<=[16], to_apply=%add.0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,8]) tuple(%ip, %r)
+}
+
+%add.0 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (p0: f32[4,8]) -> f32[4,8] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4,8]) tuple(%zero, %p0)
+  %w2 = f32[16,4]{1,0} constant({...})
+  %loop = (s32[], f32[4,8]) while(%init), condition=%cond.1, body=%body.1
+  %out = f32[4,8]{1,0} get-tuple-element(%loop), index=1
+  %g = f32[4,16]{1,0} all-gather(%out), replica_groups={{0,1},{2,3}}, dimensions={1}
+  ROOT %fin = f32[4,8]{1,0} dot(%g, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_parser_counts_while_weighted_flops():
+    rep = rl.analyze_hlo(HLO, n_devices=16)
+    # dot inside the while: 2*4*8*8 = 512 flops x 12 trips; entry dot:
+    # 2*4*8*16 = 1024
+    assert rep.while_trip_counts == [12]
+    assert rep.dot_count == 12 + 1
+    np.testing.assert_allclose(rep.flops, 512 * 12 + 1024)
+
+
+def test_parser_collective_ring_costs():
+    rep = rl.analyze_hlo(HLO, n_devices=16)
+    # all-reduce of f32[4,8]=128B in groups of 8: 2*(7/8)*128 = 224B x 12
+    # all-gather result f32[4,16]=256B in groups of 2: (1/2)*256 = 128B
+    np.testing.assert_allclose(
+        rep.collective_bytes_by_kind["all-reduce"], 224 * 12)
+    np.testing.assert_allclose(
+        rep.collective_bytes_by_kind["all-gather"], 128)
+    assert rep.collective_counts == {"all-reduce": 12, "all-gather": 1}
+
+
+def test_parser_compression_scales_dp_collectives():
+    a = rl.analyze_hlo(HLO, n_devices=16)
+    b = rl.analyze_hlo(HLO, n_devices=16, compression_ratio=0.25,
+                       dp_collective_kinds=("all-reduce",))
+    np.testing.assert_allclose(
+        b.collective_bytes_by_kind["all-reduce"],
+        0.25 * a.collective_bytes_by_kind["all-reduce"])
+
+
+def test_bottleneck_classification():
+    rep = rl.RooflineReport(flops=197e12, hbm_bytes=1.0,
+                            collective_bytes=1.0)
+    assert rep.bottleneck == "compute"
+    assert abs(rep.t_compute - 1.0) < 1e-9
+    rep2 = rl.RooflineReport(flops=1.0, hbm_bytes=819e9,
+                             collective_bytes=1.0)
+    assert rep2.bottleneck == "memory"
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config
+    from repro.launch.specs import SHAPES
+    moe = get_config("deepseek-moe-16b")
+    assert moe.active_param_count() < 0.5 * moe.param_count()
+    f = rl.model_flops(moe, SHAPES["train_4k"])
+    assert f == 6.0 * moe.active_param_count() * 256 * 4096

@@ -1,0 +1,260 @@
+"""Substrate tests: optimizer, schedules, data, checkpoint, compression,
+straggler monitor, recovery supervisor."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, restore_pytree,
+                              save_pytree)
+from repro.data import ShardedLoader, TokenStream, hdc_dataset, knn_dataset
+from repro.distributed import (ErrorFeedbackInt8, ErrorFeedbackTopK,
+                               RecoveryConfig, SimulatedFailure,
+                               StragglerMonitor, Supervisor)
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, warmup_cosine, warmup_linear)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "scale": jnp.asarray([2.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=100.0)
+    lr = jnp.asarray(0.1)
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2)
+                         + jnp.sum((p["scale"] - 1.0) ** 2))(params)
+        params, state, m = adamw_update(grads, state, params, lr, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert abs(float(params["scale"][0]) - 1.0) < 1e-2
+
+
+def test_adamw_no_decay_on_norm_leaves():
+    params = {"w": jnp.ones((4,)), "norm_scale": jnp.ones((4,))}
+    state = adamw_init(params)
+    grads = {"w": jnp.zeros((4,)), "norm_scale": jnp.zeros((4,))}
+    cfg = AdamWConfig(weight_decay=0.5)
+    params2, _, _ = adamw_update(grads, state, params, jnp.asarray(0.1), cfg)
+    assert float(params2["w"][0]) < 1.0            # decayed
+    assert float(params2["norm_scale"][0]) == 1.0  # excluded
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(gn) > 30.0
+
+
+def test_bf16_params_master_accumulates_small_updates():
+    """bf16 params alone would lose 1e-3-scale updates; the fp32 master
+    must accumulate them."""
+    params = {"w": jnp.ones((4,), jnp.bfloat16) * 100.0}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+    g = {"w": jnp.ones((4,), jnp.float32)}
+    for _ in range(100):
+        params, state, _ = adamw_update(g, state, params, jnp.asarray(1e-3),
+                                        cfg)
+    # 100 steps x ~1e-3 -> master moved ~0.1 even though bf16 eps(100)=0.5
+    assert float(state.master["w"][0]) < 99.95
+
+
+def test_schedules_monotone_warmup():
+    s = warmup_cosine(1e-3, 10, 100)
+    vals = [float(s(jnp.asarray(i))) for i in range(15)]
+    assert vals[0] > 0                    # first step is not dead
+    assert all(b >= a for a, b in zip(vals[:9], vals[1:10]))
+    assert abs(vals[9] - 1e-3) < 1e-9
+    lin = warmup_linear(1e-3, 10, 100)
+    assert float(lin(jnp.asarray(99))) < 2e-5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_tokenstream_deterministic_and_resumable():
+    a = TokenStream(vocab=1000, seq_len=64, global_batch=4, seed=7)
+    b = TokenStream(vocab=1000, seq_len=64, global_batch=4, seed=7)
+    np.testing.assert_array_equal(a.batch(5)["tokens"], b.batch(5)["tokens"])
+    assert not np.array_equal(a.batch(5)["tokens"], a.batch(6)["tokens"])
+    assert a.batch(0)["tokens"].max() < 1000
+    # loader state round-trip
+    ld = ShardedLoader(a)
+    ld.next(), ld.next()
+    st_ = ld.state_dict()
+    x3 = ld.next()["tokens"]
+    ld2 = ShardedLoader(b)
+    ld2.load_state_dict(st_)
+    np.testing.assert_array_equal(ld2.next()["tokens"], x3)
+
+
+def test_hdc_dataset_recall_structure():
+    classes, queries, labels = hdc_dataset(n_classes=10, dim=1024,
+                                           n_queries=200, noise=0.1)
+    d = (queries[:, None] != classes[None]).sum(-1)
+    assert (d.argmin(-1) == labels).mean() > 0.99
+
+
+def test_knn_dataset_separable():
+    g, gl, q, ql = knn_dataset(n_gallery=2000, dim=64, n_queries=50)
+    d = ((q[:, None] - g[None]) ** 2).sum(-1)
+    nn = gl[d.argmin(-1)]
+    assert (nn == ql).mean() > 0.9
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nest": {"b": jnp.arange(6, dtype=jnp.int32)},
+            "t": (jnp.ones(3), jnp.zeros(2))}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 7)
+    assert latest_step(str(tmp_path)) == 7
+    out = restore_pytree(jax.tree.map(jnp.zeros_like, tree), str(tmp_path))
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), tree, out)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_pytree({"a": jnp.ones((4,))}, str(tmp_path), 1)
+    with pytest.raises(ValueError):
+        restore_pytree({"a": jnp.ones((5,))}, str(tmp_path))
+
+
+def test_checkpoint_atomicity_partial_write_invisible(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 3)
+    # simulate a crashed writer: stale tmp dir must be ignored
+    os.makedirs(tmp_path / "step_000000009.tmp.0" )
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(_tree(s), s)
+    ck.wait()
+    steps_left = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps_left == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comp", [ErrorFeedbackInt8(),
+                                  ErrorFeedbackTopK(density=0.25)])
+def test_error_feedback_is_unbiased_over_time(comp):
+    """sum(compressed) -> sum(true grads): the residual stays bounded."""
+    params = {"w": jnp.zeros((64,))}
+    state = comp.init(params)
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+    total = jnp.zeros((64,))
+    for _ in range(50):
+        c, state = comp(g_true, state)
+        total = total + c["w"]
+    np.testing.assert_allclose(np.asarray(total) / 50,
+                               np.asarray(g_true["w"]), atol=0.1)
+
+
+def test_topk_compression_sparsity():
+    comp = ErrorFeedbackTopK(density=0.1)
+    params = {"w": jnp.zeros((100,))}
+    state = comp.init(params)
+    g = {"w": jnp.asarray(np.random.default_rng(1).standard_normal(100),
+                          jnp.float32)}
+    c, state = comp(g, state)
+    assert int((np.asarray(c["w"]) != 0).sum()) <= 10
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detection_flags_outlier():
+    mon = StragglerMonitor(window=16, z_threshold=4.0)
+    for _ in range(16):
+        mon.record(0.100 + np.random.default_rng(0).normal(0, 0.001))
+    assert mon.record(0.5) is True
+    assert mon.record(0.101) is False
+
+
+def test_straggler_rebalance_suggestion():
+    mon = StragglerMonitor(window=16)
+    for _ in range(16):
+        mon.record(0.1)
+    for _ in range(8):
+        mon.record(0.3)                # persistent slowdown
+    assert mon.suggest_rebalance() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# recovery supervisor
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_recovers_from_injected_failure(tmp_path):
+    sup = Supervisor(RecoveryConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                                    max_restarts=2))
+    calls = {"fails": 0}
+
+    def step_fn(state, step):
+        if step == 5 and calls["fails"] == 0:
+            calls["fails"] += 1
+            raise SimulatedFailure("boom")
+        return {"x": state["x"] + 1}, {"loss": 1.0 / (step + 1)}
+
+    final, metrics = sup.run({"x": jnp.zeros(())}, 8, step_fn)
+    assert sup.restarts == 1
+    assert float(final["x"]) == 8          # replayed correctly from ckpt
+    assert any("restored_to" in e for e in sup.log)
+
+
+def test_supervisor_nan_loss_triggers_restore(tmp_path):
+    sup = Supervisor(RecoveryConfig(ckpt_dir=str(tmp_path), ckpt_every=1,
+                                    max_restarts=3))
+    hit = {"n": 0}
+
+    def step_fn(state, step):
+        loss = float("nan") if step == 3 and hit["n"] == 0 else 0.5
+        if step == 3 and hit["n"] == 0:
+            hit["n"] = 1
+        return {"x": state["x"] + 1}, {"loss": loss}
+
+    final, _ = sup.run({"x": jnp.zeros(())}, 5, step_fn)
+    assert sup.restarts == 1
+
+
+def test_supervisor_retry_budget_exhausts(tmp_path):
+    sup = Supervisor(RecoveryConfig(ckpt_dir=str(tmp_path), ckpt_every=1,
+                                    max_restarts=1))
+
+    def step_fn(state, step):
+        if step == 2:
+            raise SimulatedFailure("always")
+        return state, {"loss": 1.0}
+
+    with pytest.raises(RuntimeError, match="retry budget"):
+        sup.run({"x": jnp.zeros(())}, 5, step_fn)
