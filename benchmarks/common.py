@@ -6,13 +6,22 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
-ART = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "artifacts", "bench")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts", "bench")
 
 
 def save_json(name: str, payload: Any) -> str:
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def save_bench_json(name: str, payload: Any) -> str:
+    """Timing record for the perf trajectory: ``BENCH_<name>.json`` at the
+    repo root, so successive perf PRs have a comparable baseline."""
+    path = os.path.join(ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig8 knn   # substring filter
+
+Each suite additionally writes a ``BENCH_<name>.json`` timing record at
+the repo root — wall-clock plus the search-plan-cache hit/miss deltas —
+so future perf PRs have a measured baseline to compare against.
 """
 
 from __future__ import annotations
@@ -10,9 +14,11 @@ import sys
 import time
 import traceback
 
-from . import (fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
-               roofline_table, table1_density, table2_knn)
-from .common import banner
+from repro.core import plan_cache_stats
+
+from . import (bench_engine, fig7_validation, fig8_dse, fig9_isocapacity,
+               gpu_comparison, roofline_table, table1_density, table2_knn)
+from .common import banner, save_bench_json
 
 SUITES = [
     ("fig7_validation", fig7_validation.run),
@@ -22,6 +28,9 @@ SUITES = [
     ("fig9_isocapacity", fig9_isocapacity.run),
     ("gpu_comparison", gpu_comparison.run),
     ("roofline_table", roofline_table.run),
+    # writes the detailed BENCH_engine.json itself; the generic record
+    # for this suite lands in BENCH_engine_smoke.json
+    ("engine_smoke", bench_engine.run),
 ]
 
 
@@ -33,12 +42,26 @@ def main(argv=None) -> int:
         if argv and not any(a in name for a in argv):
             continue
         t0 = time.time()
+        cache0 = plan_cache_stats()
         try:
             fn()
-            print(f"\n[PASS] {name} ({time.time() - t0:.1f}s)")
+            elapsed = time.time() - t0
+            cache1 = plan_cache_stats()
+            save_bench_json(name, {
+                "benchmark": name, "status": "pass",
+                "wall_s": round(elapsed, 3),
+                "plan_cache": {
+                    "hits": cache1["hits"] - cache0["hits"],
+                    "misses": cache1["misses"] - cache0["misses"],
+                    "plans_total": cache1["plans"],
+                }})
+            print(f"\n[PASS] {name} ({elapsed:.1f}s)")
         except Exception as e:                     # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
+            save_bench_json(name, {"benchmark": name, "status": "fail",
+                                   "wall_s": round(time.time() - t0, 3),
+                                   "error": f"{type(e).__name__}: {e}"})
             print(f"\n[FAIL] {name}: {type(e).__name__}: {e}")
     banner(f"benchmark suite done in {time.time() - t00:.1f}s — "
            f"{'ALL PASS' if not failures else 'FAILURES: ' + ', '.join(failures)}")

@@ -17,6 +17,20 @@ The entry points mirror the paper's CLI: an application (traced
 TorchScript-like callable), an architecture description (:class:`ArchSpec`,
 §III-B), and an optimization target (latency / power / density /
 power+density).
+
+Execution engine & plan cache
+-----------------------------
+``compile_module`` additionally lowers pure similarity programs into a
+:class:`~repro.core.engine.SearchPlan` — a single jitted JAX executable
+(scan over the partitioned tile grid, micro-batched over queries) held in
+a **process-wide plan cache** keyed by (IR structure, metric, k, tile
+geometry, backend, micro-batch).  Calling the returned
+:class:`CompiledCamProgram` dispatches to that plan; recompiling the same
+program — or sweeping DSE points that share a plan key — reuses the
+cached executable instead of re-tracing.  Programs the engine cannot
+express (host ops mixed in, multiple similarities) fall back to the IR
+interpreter transparently; ``execute_interpreted`` always takes the
+op-by-op path.  See ``docs/engine.md``.
 """
 
 from __future__ import annotations
@@ -25,6 +39,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .arch import ArchSpec, CamType, OptimizationTarget
+from .engine import SearchPlan, get_plan
 from .executor import execute_module
 from .ir import Module, PassManager
 from .passes import (CamMap, CimToCam, CompulsoryPartition, FuseExecuteBlocks,
@@ -46,9 +61,13 @@ class CompiledCamProgram:
     plans: List[MappingPlan]
     matched_patterns: List[str]
     backend: str = "jnp"
+    engine_plan: Optional[SearchPlan] = None
 
     def __call__(self, *inputs):
-        """Functionally execute the program (host JAX simulation)."""
+        """Execute the program: compiled search plan when available,
+        functional interpretation (host JAX simulation) otherwise."""
+        if self.engine_plan is not None:
+            return self.engine_plan.execute(*inputs)
         return execute_module(self.stages["cim_partitioned"], *inputs,
                               backend=self.backend)
 
@@ -56,6 +75,12 @@ class CompiledCamProgram:
         """Op-by-op interpretation (tests the explicit tiled IR)."""
         return execute_module(self.stages["cim_partitioned"], *inputs,
                               backend="jnp")
+
+    def execute_unplanned(self, *inputs):
+        """The pre-engine executor path (interpreter walk with the
+        configured backend) — kept for parity tests and benchmarks."""
+        return execute_module(self.stages["cim_partitioned"], *inputs,
+                              backend=self.backend)
 
     def cost_report(self):
         from ..camsim import CostModel
@@ -104,11 +129,12 @@ def compile_module(module: Module, arch: ArchSpec, *,
 
     snapshots = (pm1.snapshots + pm2.snapshots[1:] + pm3.snapshots[1:]
                  + pm4.snapshots[1:] + pm5.snapshots[1:])
+    engine_plan = get_plan(stages["cim_partitioned"], backend=backend)
     return CompiledCamProgram(
         arch=arch, cam_type=cam_type, stages=stages, snapshots=snapshots,
         plans=ctx.get("plans", []),
         matched_patterns=ctx.get("matched_patterns", []),
-        backend=backend)
+        backend=backend, engine_plan=engine_plan)
 
 
 def compile_fn(fn: Callable, example_inputs: Sequence[Any], arch: ArchSpec,

@@ -14,6 +14,16 @@ Encoding: CAMs store cells, not floats.  For ``dot``/``cos`` on bipolar
 data the search runs as Hamming distance (``dot = D - 2*h``); values are
 reported back in the *metric domain* so results are comparable with the
 torch reference.  ``eucl`` on ACAM/MCAM is analog-exact.
+
+Execution engine & plan cache
+-----------------------------
+Neither path here is the production hot path: compiled programs dispatch
+through :mod:`repro.core.engine`, which lowers a pure similarity program
+into one cached, jitted ``lax.scan`` over the tile grid with query
+micro-batching (see ``docs/engine.md``).  This module remains the
+semantic reference the engine must match — the interpreted walk pins the
+Fig.-5d tile-op semantics bit-for-bit — and the general fallback for
+modules the engine cannot express.
 """
 
 from __future__ import annotations
@@ -25,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ref as kref
+from .engine import _as_2d, _encode, _metric_values
 from .ir import IRError, Module, Operation, Value
 
 __all__ = ["execute_module", "build_search_fn"]
@@ -92,31 +103,9 @@ def _host_eval(op: Operation, env: Dict[int, Any]) -> Sequence[Any]:
 # ---------------------------------------------------------------------------
 
 
-def _as_2d(q: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
-    if q.ndim == 1:
-        return q[None, :], ()
-    if q.ndim == 2:
-        return q, (q.shape[0],)
-    lead = q.shape[:-1]
-    return q.reshape((-1, q.shape[-1])), lead
-
-
-def _metric_values(metric: str, largest: bool):
-    """How the physical CAM search relates to the logical metric."""
-    if metric in ("dot", "cos"):
-        # bipolar: argmax dot == argmin hamming; report dot values
-        return "hamming", (lambda h, dim: dim - 2.0 * h), (not largest)
-    if metric == "eucl":
-        return "eucl", (lambda d, dim: d), largest
-    if metric == "hamming":
-        return "hamming", (lambda h, dim: h), largest
-    raise ValueError(metric)
-
-
-def _encode(x: jax.Array, metric: str) -> jax.Array:
-    if metric in ("dot", "cos", "hamming"):
-        return (x > 0).astype(jnp.float32) if metric != "hamming" else x
-    return x
+# _as_2d / _metric_values / _encode are shared with the engine (the two
+# paths must agree on the physical-domain translation) and live in
+# repro.core.engine.
 
 
 def build_search_fn(metric: str, k: int, largest: bool, *, tile_rows: int,
@@ -263,9 +252,4 @@ def execute_module(module: Module, *inputs, backend: str = "jnp"
         raise IRError(f"executor: unsupported op {op.name}")
 
     run_block(module.body.operations)
-    outs = tuple(env[id(v)] for v in module.return_values())
-
-    # cim.search_tile path reports physical (hamming) values for dot
-    # metrics; translate where the module carries similarity metadata so
-    # interpreted == vectorized == torch-reference.
-    return outs
+    return tuple(env[id(v)] for v in module.return_values())

@@ -20,7 +20,8 @@ Kernel structure (mirrors the CAM hierarchy):
   VMEM scratch accumulator (like a subarray accumulating partial match-line
   counts across column tiles = ``cim.merge_partial horizontal``),
 * at the last D step the kernel extracts a block-local top-k (the
-  subarray's winner-take-all periphery) into the output,
+  subarray's winner-take-all periphery) into the output — a single-pass
+  segmented running merge, O(bn + k^2) per block (see ``_extract``),
 * the host-side merge of block-local candidate lists is
   ``cim.merge_partial vertical`` — `ops.cam_topk` finishes with one stable
   top-k over (n_blocks * k) candidates per query.
@@ -40,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .pallas_compat import CompilerParams as _CompilerParams
 
 __all__ = ["fused_topk_pallas", "distance_pallas", "METRIC_COEFFS"]
 
@@ -93,22 +96,59 @@ def _fused_kernel(q_ref, p_ref, ov_ref, oi_ref, acc_ref, *, metric: str,
         # mask padded pattern rows so they never win
         lose = _NEG_BIG if largest else _POS_BIG
         dist = jnp.where(gidx < n_total, dist, lose)
-        key = dist if largest else -dist
-        # k-pass extraction: leftmost max, then mask (stable w.r.t. index).
-        # dist is masked together with key so an exhausted block (fewer than
-        # k valid rows) emits losing values, never a duplicate candidate.
+        # Single-pass segmented extraction (sort-free).  The block is split
+        # into S = min(k, bn) segments of width w; one vectorized pass finds
+        # each segment's champion (leftmost max), then each of the k
+        # extraction rounds touches only the k champions plus the one
+        # segment that lost its champion: O(bn + k*(k + w)) = O(bn + k^2)
+        # per block, vs O(k*bn) for the former per-round max+mask over the
+        # whole block.  Consumed elements need no mask array: within a
+        # segment they are exactly the elements lexicographically >= the
+        # last consumed (value, index) pair, so the champion recompute
+        # filters on that pair alone.  Ordering (value desc, global index
+        # asc) is identical to the former loop, so emitted candidates — and
+        # the host-side stable merge — are bit-identical.
+        key = dist if largest else -dist   # key domain: larger wins
+        S = max(1, min(k, bn))
+        w = -(-bn // S)
+        if S * w > bn:
+            key = jnp.pad(key, ((0, 0), (0, S * w - bn)),
+                          constant_values=_NEG_BIG)
+        key3 = key.reshape(bm, S, w)
+        wcol = jax.lax.broadcasted_iota(jnp.int32, (bm, S, w), 2)
+        s_iota = jax.lax.broadcasted_iota(jnp.int32, (bm, S), 1)
+        base = j * bn + s_iota * w         # global index of segment starts
+
+        champ_v = jnp.max(key3, axis=2)
+        champ_pos = jnp.min(jnp.where(key3 == champ_v[:, :, None], wcol,
+                                      jnp.int32(2 ** 30)), axis=2)
+        champ_i = base + champ_pos
+
+        wrow = wcol[:, 0, :]               # (bm, w) within-segment offsets
         for t in range(k):
-            vmax = jnp.max(key, axis=1, keepdims=True)
-            ismax = key == vmax
-            first = jnp.min(jnp.where(ismax, col, jnp.int32(2 ** 30)),
-                            axis=1, keepdims=True)
-            sel = col == first
-            val = jnp.sum(jnp.where(sel, dist, 0.0), axis=1)
-            idx = jnp.sum(jnp.where(sel, gidx, 0), axis=1)
-            ov_ref[:, t] = val
-            oi_ref[:, t] = idx
-            key = jnp.where(sel, _NEG_BIG, key)
-            dist = jnp.where(sel, lose, dist)
+            best_v = jnp.max(champ_v, axis=1)
+            tie = champ_v == best_v[:, None]
+            best_i = jnp.min(jnp.where(tie, champ_i, jnp.int32(2 ** 30)),
+                             axis=1)
+            ov_ref[:, t] = best_v if largest else -best_v
+            oi_ref[:, t] = best_i
+            # refill the winning segment's champion
+            win = tie & (champ_i == best_i[:, None])
+            sstar = jnp.min(jnp.where(win, s_iota, jnp.int32(2 ** 30)),
+                            axis=1)
+            seg = jnp.take_along_axis(key3, sstar[:, None, None],
+                                      axis=1)[:, 0, :]
+            seg_gid = j * bn + sstar[:, None] * w + wrow
+            alive = (seg < best_v[:, None]) | \
+                ((seg == best_v[:, None]) & (seg_gid > best_i[:, None]))
+            seg = jnp.where(alive, seg, _NEG_BIG)
+            new_v = jnp.max(seg, axis=1)
+            new_pos = jnp.min(jnp.where(seg == new_v[:, None], wrow,
+                                        jnp.int32(2 ** 30)), axis=1)
+            new_i = j * bn + sstar * w + new_pos
+            refill = s_iota == sstar[:, None]
+            champ_v = jnp.where(refill, new_v[:, None], champ_v)
+            champ_i = jnp.where(refill, new_i[:, None], champ_i)
 
 
 def fused_topk_pallas(queries: jax.Array, patterns: jax.Array, *, metric: str,
@@ -150,7 +190,7 @@ def fused_topk_pallas(queries: jax.Array, patterns: jax.Array, *, metric: str,
         ],
         out_shape=[out_v, out_i],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(queries, patterns)
@@ -196,7 +236,7 @@ def distance_pallas(queries: jax.Array, patterns: jax.Array, *, metric: str,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, d: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nm * bm, nn * bn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(queries, patterns)

@@ -1,10 +1,13 @@
 """Jitted public wrappers around the Pallas CAM-search kernels.
 
 Semantics match `repro.kernels.ref` bit-for-bit (integer metrics) /
-to float tolerance (analog).  Inputs are padded to block multiples here so
-the kernels only ever see aligned shapes; `interpret` defaults to True off-
-TPU (this container is CPU-only; on a real TPU backend the same code path
-compiles through Mosaic).
+to float tolerance (analog).  ``cam_topk`` pads inputs to block multiples
+on every call so the kernels only ever see aligned shapes; the search-plan
+engine (`repro.core.engine`) instead hoists that padding behind its plan
+cache — patterns are laid out once per stored array via
+:func:`pad_to_blocks` and streamed through :func:`cam_topk_prepadded`.
+`interpret` defaults to True off-TPU (this container is CPU-only; on a
+real TPU backend the same code path compiles through Mosaic).
 """
 
 from __future__ import annotations
@@ -15,22 +18,55 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import ref
 from .cam_search import distance_pallas, fused_topk_pallas
 
-__all__ = ["cam_topk", "cam_exact", "cam_range"]
+__all__ = ["cam_topk", "cam_topk_prepadded", "pad_to_blocks", "cam_exact",
+           "cam_range"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+def pad_to_blocks(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    """Zero-pad a 2-D operand up to block multiples (rows, cols)."""
     p0 = (-x.shape[0]) % mult0
     p1 = (-x.shape[1]) % mult1
     if p0 or p1:
         x = jnp.pad(x, ((0, p0), (0, p1)))
     return x
+
+
+_pad_to = pad_to_blocks   # backwards-compatible internal alias
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "largest",
+                                             "n_valid", "block_m", "block_n",
+                                             "block_d", "interpret"))
+def cam_topk_prepadded(qp: jax.Array, pp: jax.Array, *, metric: str, k: int,
+                       largest: bool, n_valid: int, block_m: int,
+                       block_n: int, block_d: int,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Kernel launch + candidate merge for block-aligned operands.
+
+    The hot path of the search-plan engine: operand padding already
+    happened (once, behind the plan cache) so each micro-batch chunk goes
+    straight to the fused kernel.  ``k`` must already be clamped to
+    ``n_valid``.  Returns padded-row results; callers slice to valid rows.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    vals, idx = fused_topk_pallas(qp, pp, metric=metric, k=k,
+                                  largest=largest, block_m=block_m,
+                                  block_n=block_n, block_d=block_d,
+                                  n_valid=n_valid, interpret=interpret)
+    # final candidate merge (stable: block-major order == ascending global
+    # row index, so ties resolve to the lower index, matching ref)
+    key = vals if largest else -vals
+    _, sel = jax.lax.top_k(key, k)
+    return (jnp.take_along_axis(vals, sel, axis=-1),
+            jnp.take_along_axis(idx, sel, axis=-1))
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "k", "largest",
@@ -46,26 +82,19 @@ def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str, k: int,
     geometry (block_n / block_d); the cross-block candidate merge mirrors
     ``cim.merge_partial vertical``.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
     m, dim = queries.shape
     n = patterns.shape[0]
     k_eff = min(k, n)
     bn = max(8, min(tile_rows, n))
     bd = min(dims_per_tile, dim)
     bm = min(block_m, max(8, m))
-    qp = _pad_to(queries.astype(jnp.float32), bm, bd)
-    pp = _pad_to(patterns.astype(jnp.float32), bn, bd)
-    vals, idx = fused_topk_pallas(qp, pp, metric=metric, k=k_eff,
-                                  largest=largest, block_m=bm, block_n=bn,
-                                  block_d=bd, n_valid=n, interpret=interpret)
-    vals, idx = vals[:m], idx[:m]
-    # final candidate merge (stable: block-major order == ascending global
-    # row index, so ties resolve to the lower index, matching ref)
-    key = vals if largest else -vals
-    _, sel = jax.lax.top_k(key, k_eff)
-    out_v = jnp.take_along_axis(vals, sel, axis=-1)
-    out_i = jnp.take_along_axis(idx, sel, axis=-1)
+    qp = pad_to_blocks(queries.astype(jnp.float32), bm, bd)
+    pp = pad_to_blocks(patterns.astype(jnp.float32), bn, bd)
+    vals, idx = cam_topk_prepadded(qp, pp, metric=metric, k=k_eff,
+                                   largest=largest, n_valid=n, block_m=bm,
+                                   block_n=bn, block_d=bd,
+                                   interpret=interpret)
+    out_v, out_i = vals[:m], idx[:m]
     if k_eff < k:
         out_v = jnp.pad(out_v, ((0, 0), (0, k - k_eff)),
                         constant_values=-jnp.inf if largest else jnp.inf)

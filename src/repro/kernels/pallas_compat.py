@@ -1,0 +1,15 @@
+"""Version-compat shims for the Pallas TPU API.
+
+jax has renamed ``CompilerParams`` <-> ``TPUCompilerParams`` across
+releases; every kernel module imports the resolved class from here so
+the next rename is a one-line fix.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["distances", "cam_topk", "cam_exact", "cam_range",
-           "cam_topk_tiled", "merge_topk"]
+           "cam_topk_tiled", "merge_topk", "pad_candidates"]
 
 
 def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array:
@@ -97,6 +97,22 @@ def cam_range(queries: jax.Array, patterns: jax.Array, threshold: float,
     return d <= threshold
 
 
+def pad_candidates(vals: jax.Array, idx: jax.Array, k: int, largest: bool
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Pad an (M, k') candidate list up to k with losing sentinels.
+
+    Shared by the tiled reference below and the search-plan engine
+    (`repro.core.engine`) so both paths emit identical pad content —
+    the stable merges rely on that for bit-exact equivalence.
+    """
+    short = k - vals.shape[-1]
+    if short <= 0:
+        return vals, idx
+    lose = -jnp.inf if largest else jnp.inf
+    return (jnp.pad(vals, ((0, 0), (0, short)), constant_values=lose),
+            jnp.pad(idx, ((0, 0), (0, short)), constant_values=2 ** 30))
+
+
 def merge_topk(values_a: jax.Array, idx_a: jax.Array, values_b: jax.Array,
                idx_b: jax.Array, *, k: int, largest: bool
                ) -> Tuple[jax.Array, jax.Array]:
@@ -155,21 +171,9 @@ def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
             bad = jnp.full((m, pad_n), -jnp.inf if largest else jnp.inf)
             dist = dist.at[:, tile_rows - pad_n:].set(bad)
         v, i = _topk_with_ties(dist, min(k, tile_rows), largest)
-        i = i + r * tile_rows
+        v, i = pad_candidates(v, i + r * tile_rows, k, largest)
         if acc_v is None:
             acc_v, acc_i = v, i
-            if v.shape[-1] < k:  # pad candidate list up to k
-                padv = jnp.full((m, k - v.shape[-1]),
-                                -jnp.inf if largest else jnp.inf)
-                padi = jnp.full((m, k - v.shape[-1]), 2 ** 30, dtype=jnp.int32)
-                acc_v = jnp.concatenate([acc_v, padv], -1)
-                acc_i = jnp.concatenate([acc_i, padi], -1)
         else:
-            if v.shape[-1] < k:
-                padv = jnp.full((m, k - v.shape[-1]),
-                                -jnp.inf if largest else jnp.inf)
-                padi = jnp.full((m, k - v.shape[-1]), 2 ** 30, dtype=jnp.int32)
-                v = jnp.concatenate([v, padv], -1)
-                i = jnp.concatenate([i, padi], -1)
             acc_v, acc_i = merge_topk(acc_v, acc_i, v, i, k=k, largest=largest)
     return acc_v, acc_i

@@ -24,12 +24,14 @@ __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
 def _mk(shape, axes) -> Mesh:
-    try:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:                          # older jax: no axis_types
-        return jax.make_mesh(shape, axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:                      # no axis_types kwarg yet
+            pass
+    return jax.make_mesh(shape, axes)          # older jax: no AxisType
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,0 +1,49 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+The seed suite hard-imported ``hypothesis`` from four test modules, so a
+missing dev dependency aborted collection of the *entire* suite under
+``pytest -x``.  Importing ``given``/``settings``/``st`` from here instead
+keeps every non-property test runnable: when ``hypothesis`` is installed
+the real decorators are re-exported, otherwise ``@given`` turns the test
+into a clean per-test skip (the moral equivalent of
+``pytest.importorskip("hypothesis")`` without sacrificing the rest of the
+module).  ``hypothesis`` itself is listed in ``requirements-dev.txt``.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None (the strategies are never drawn from)."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass  # pragma: no cover
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

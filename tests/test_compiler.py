@@ -4,7 +4,7 @@ lowering, functional execution vs the dense oracle, cost-model trends."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # skips cleanly without hypothesis
 
 from repro.core import (ArchSpec, CamType, IRError, OptimizationTarget,
                         PAPER_BASE_ARCH, compile_fn, trace, verify)

@@ -1,0 +1,206 @@
+"""Search-plan engine: plan-cache behaviour and parity with the IR
+interpreter (the semantic oracle) across metrics, tile geometries,
+ragged pattern counts, and micro-batched queries."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArchSpec, Builder, Module, PassManager, TensorType,
+                        clear_plan_cache, compile_fn, get_plan,
+                        plan_cache_stats)
+from repro.core.cim_dialect import (make_acquire, make_execute, make_release,
+                                    make_similarity, make_yield)
+from repro.core.engine import extract_plan_spec
+from repro.core.executor import execute_module
+from repro.core.passes import CompulsoryPartition
+
+
+def _dot_sim(inp, weight):
+    mm = inp.matmul(weight.transpose(-2, -1))
+    return mm.topk(1, largest=False)
+
+
+def _sim_module(metric, k, largest, m, n, dim, arch, unroll_limit=64):
+    """Hand-built fused similarity module, run through the partition pass.
+
+    Lets the parity tests cover metrics (hamming) and ragged shapes the
+    traced frontend patterns never produce.
+    """
+    mod = Module("sim", [TensorType((m, dim)), TensorType((n, dim))])
+    q, p = mod.arguments
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, [q, p],
+                       [TensorType((m, k)), TensorType((m, k), "i32")])
+    blk = exe.region().block()
+    sim = make_similarity(blk, q, p, metric=metric, k=k, largest=largest)
+    make_yield(blk, sim.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition(unroll_limit=unroll_limit))
+    return pm.run(mod, {"arch": arch})
+
+
+def _data(rng, metric, m, n, d):
+    if metric == "hamming":
+        return ((rng.random((m, d)) > 0.5).astype(np.float32),
+                (rng.random((n, d)) > 0.5).astype(np.float32))
+    return (rng.standard_normal((m, d)).astype(np.float32),
+            rng.standard_normal((n, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_same_program():
+    clear_plan_cache()
+    arch = ArchSpec(rows=32, cols=64)
+    p1 = compile_fn(_dot_sim, [(10, 256), (16, 256)], arch)
+    p2 = compile_fn(_dot_sim, [(10, 256), (16, 256)], arch)
+    assert p1.engine_plan is not None
+    assert p1.engine_plan is p2.engine_plan
+    stats = plan_cache_stats()
+    assert stats["hits"] >= 1 and stats["misses"] >= 1
+
+
+def test_plan_cache_misses_on_tile_geometry():
+    clear_plan_cache()
+    p1 = compile_fn(_dot_sim, [(10, 256), (16, 256)], ArchSpec(rows=16, cols=64))
+    p2 = compile_fn(_dot_sim, [(10, 256), (16, 256)], ArchSpec(rows=32, cols=64))
+    assert p1.engine_plan is not None and p2.engine_plan is not None
+    assert p1.engine_plan is not p2.engine_plan
+    assert plan_cache_stats()["misses"] >= 2
+
+
+def test_dse_targets_share_one_plan():
+    """Optimization targets change the mapping, not the tile grid — a DSE
+    sweep over targets is exactly the cache-hit case."""
+    clear_plan_cache()
+    progs = [compile_fn(_dot_sim, [(10, 256), (16, 256)],
+                        ArchSpec(rows=32, cols=64).with_target(t))
+             for t in ("latency", "power", "density")]
+    plans = {id(p.engine_plan) for p in progs}
+    assert len(plans) == 1
+
+
+def test_non_similarity_program_has_no_plan():
+    prog = compile_fn(lambda a, b: a.add(b), [(8, 8), (8, 8)],
+                      ArchSpec(rows=16, cols=16))
+    assert prog.engine_plan is None
+    out = prog(np.ones((8, 8), np.float32), 2 * np.ones((8, 8), np.float32))
+    assert float(np.asarray(out[0]).sum()) == 8 * 8 * 3
+
+
+# ---------------------------------------------------------------------------
+# parity with the interpreter: engine output == interpreted output
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric,largest", [("hamming", False),
+                                            ("dot", False),
+                                            ("cos", True),
+                                            ("eucl", False)])
+@pytest.mark.parametrize("n", [37, 64, 5])      # ragged + aligned + n < k
+@pytest.mark.parametrize("unroll_limit", [64, 0])
+def test_engine_matches_interpreted(metric, largest, n, unroll_limit, rng):
+    m, dim, k = 9, 100, 6
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module(metric, k, largest, m, n, dim, arch,
+                      unroll_limit=unroll_limit)
+    plan = get_plan(mod)
+    assert plan is not None
+    q, p = _data(rng, metric, m, n, dim)
+    ev, ei = plan.execute(q, p)
+    iv, ii = execute_module(mod, q, p)
+    np.testing.assert_array_equal(np.asarray(ei), np.asarray(ii))
+    if metric in ("hamming", "dot"):     # integer metrics: bit-identical
+        np.testing.assert_array_equal(np.asarray(ev), np.asarray(iv))
+    else:
+        np.testing.assert_allclose(np.asarray(ev), np.asarray(iv), atol=1e-4)
+
+
+def test_micro_batching_streams_chunks(rng):
+    m, n, dim, k = 37, 50, 64, 3
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("eucl", k, False, m, n, dim, arch)
+    plan = get_plan(mod, batch=8)
+    assert plan.batch == 8
+    q, p = _data(rng, "eucl", m, n, dim)
+    before = plan.chunks_run
+    ev, ei = plan.execute(q, p)
+    assert plan.chunks_run - before == -(-m // 8)   # 5 chunks incl ragged tail
+    iv, ii = execute_module(mod, q, p)
+    np.testing.assert_array_equal(np.asarray(ei), np.asarray(ii))
+    np.testing.assert_allclose(np.asarray(ev), np.asarray(iv), atol=1e-4)
+
+
+def test_pattern_preparation_is_memoised(rng):
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("dot", 2, False, 8, 24, 64, arch)
+    plan = get_plan(mod)
+    q, p = _data(rng, "dot", 8, 24, 64)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)                   # immutable gallery: memoised
+    assert len(plan._pattern_cache) == 1
+    plan.execute(q, pj)                   # same gallery object: cache hit
+    assert len(plan._pattern_cache) == 1
+    # mutable (numpy) galleries are never memoised — in-place mutation
+    # under an unchanged id must not serve stale prepared patterns
+    plan.execute(q, p)
+    assert len(plan._pattern_cache) == 1
+
+
+def test_mutated_numpy_gallery_not_stale(rng):
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("eucl", 2, False, 4, 20, 32, arch)
+    plan = get_plan(mod)
+    q, p = _data(rng, "eucl", 4, 20, 32)
+    plan.execute(q, p)
+    p[:] = rng.standard_normal(p.shape).astype(np.float32)  # same id/shape
+    _, i = plan.execute(q, p)
+    _, ii = execute_module(mod, q, p)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ii))
+
+
+def test_pallas_backend_parity(rng):
+    clear_plan_cache()
+    arch = ArchSpec(rows=32, cols=64)
+    mod = _sim_module("dot", 3, False, 10, 45, 96, arch)
+    plan_ref = get_plan(mod, backend="jnp")
+    plan_pl = get_plan(mod, backend="pallas")
+    assert plan_ref is not plan_pl
+    q, p = _data(rng, "dot", 10, 45, 96)
+    rv, ri = plan_ref.execute(q, p)
+    pv, pi = plan_pl.execute(q, p)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(pv))
+
+
+# ---------------------------------------------------------------------------
+# spec extraction
+# ---------------------------------------------------------------------------
+
+
+def test_spec_extraction_both_ir_forms():
+    arch = ArchSpec(rows=16, cols=32)
+    unrolled = _sim_module("eucl", 3, False, 4, 40, 64, arch, unroll_limit=64)
+    looped = _sim_module("eucl", 3, False, 4, 40, 64, arch, unroll_limit=0)
+    s1, s2 = extract_plan_spec(unrolled), extract_plan_spec(looped)
+    assert s1 is not None and s1 == s2   # same plan key => same cached plan
+
+
+def test_compiled_program_dispatches_to_engine(rng):
+    q = rng.standard_normal((12, 512)).astype(np.float32)
+    w = rng.standard_normal((10, 512)).astype(np.float32)
+    prog = compile_fn(_dot_sim, [q, w], ArchSpec(rows=64, cols=128))
+    assert prog.engine_plan is not None
+    before = prog.engine_plan.executions
+    v, i = prog(q, w)
+    assert prog.engine_plan.executions == before + 1
+    iv, ii = prog.execute_interpreted(q, w)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ii))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(iv))

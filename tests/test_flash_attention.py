@@ -4,7 +4,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # skips cleanly without hypothesis
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.models.layers import attn_core

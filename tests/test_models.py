@@ -76,11 +76,18 @@ def test_prefill_then_decode_matches_forward(arch):
         outs.append(lg.astype(jnp.float32))
     stitched = jnp.concatenate(outs, axis=1)            # pos n_prefill-1 .. s-1
     want = full[:, n_prefill - 1:s]
-    # bf16 compute: allow loose tolerance but demand argmax agreement
     np.testing.assert_allclose(np.asarray(stitched), np.asarray(want),
                                atol=0.75, rtol=0.2)
-    agree = (stitched.argmax(-1) == want.argmax(-1)).mean()
-    assert float(agree) > 0.95, f"argmax agreement {agree}"
+    # demand argmax agreement everywhere except genuine near-ties, which
+    # reordered-reduction rounding may legitimately flip (observed top-2
+    # gaps < 2e-4 on some arch/seed combinations)
+    agree = np.asarray(stitched.argmax(-1) == want.argmax(-1))
+    w = np.asarray(want)
+    at_stitched = np.take_along_axis(
+        w, np.asarray(stitched.argmax(-1))[..., None], axis=-1)[..., 0]
+    near_tie = (w.max(-1) - at_stitched) < 5e-3
+    bad = ~(agree | near_tie)
+    assert not bad.any(), f"argmax mismatch beyond near-ties at {np.argwhere(bad)}"
 
 
 def test_param_axes_tree_matches_params():

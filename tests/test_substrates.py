@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # skips cleanly without hypothesis
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step, restore_pytree,
                               save_pytree)
