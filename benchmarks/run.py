@@ -16,8 +16,9 @@ import traceback
 
 from repro.core import plan_cache_stats
 
-from . import (bench_engine, fig7_validation, fig8_dse, fig9_isocapacity,
-               gpu_comparison, roofline_table, table1_density, table2_knn)
+from . import (bench_engine, bench_serve, fig7_validation, fig8_dse,
+               fig9_isocapacity, gpu_comparison, roofline_table,
+               table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -31,6 +32,9 @@ SUITES = [
     # writes the detailed BENCH_engine.json itself; the generic record
     # for this suite lands in BENCH_engine_smoke.json
     ("engine_smoke", bench_engine.run),
+    # single- vs multi-device serving (subprocesses with their own
+    # XLA_FLAGS); detailed record in BENCH_serve.json
+    ("serve_smoke", bench_serve.run),
 ]
 
 

@@ -14,7 +14,8 @@ Public API::
 from .arch import (AccessMode, ArchSpec, CamType, Metric, OptimizationTarget,
                    PAPER_BASE_ARCH, SearchType, kazemi_arch)
 from .compiler import C4CAMCompiler, CompiledCamProgram, compile_fn, compile_module
-from .engine import (SearchPlan, SimilaritySpec, clear_plan_cache, get_plan,
+from .engine import (PendingSearch, SearchPlan, SimilaritySpec,
+                     clear_plan_cache, get_plan, merge_shard_candidates,
                      plan_cache_stats)
 from .ir import Block, Builder, IRError, Module, Operation, Pass, PassManager, TensorType, Value, verify
 from .torch_dialect import TracedTensor, trace
@@ -23,8 +24,8 @@ __all__ = [
     "AccessMode", "ArchSpec", "CamType", "Metric", "OptimizationTarget",
     "PAPER_BASE_ARCH", "SearchType", "kazemi_arch",
     "C4CAMCompiler", "CompiledCamProgram", "compile_fn", "compile_module",
-    "SearchPlan", "SimilaritySpec", "clear_plan_cache", "get_plan",
-    "plan_cache_stats",
+    "PendingSearch", "SearchPlan", "SimilaritySpec", "clear_plan_cache",
+    "get_plan", "merge_shard_candidates", "plan_cache_stats",
     "Block", "Builder", "IRError", "Module", "Operation", "Pass",
     "PassManager", "TensorType", "Value", "verify",
     "TracedTensor", "trace",

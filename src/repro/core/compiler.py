@@ -24,7 +24,11 @@ Execution engine & plan cache
 :class:`~repro.core.engine.SearchPlan` — a single jitted JAX executable
 (scan over the partitioned tile grid, micro-batched over queries) held in
 a **process-wide plan cache** keyed by (IR structure, metric, k, tile
-geometry, backend, micro-batch).  Calling the returned
+geometry, backend, micro-batch, shard count).  Passing ``shards=S`` to
+``compile_module`` selects the multi-device executable — gallery rows
+sharded over a ``("data",)`` mesh with a cross-device top-k tournament
+merge — bit-identical to the single-device plan for integer metrics
+(see the sharding section of ``docs/engine.md``).  Calling the returned
 :class:`CompiledCamProgram` dispatches to that plan; recompiling the same
 program — or sweeping DSE points that share a plan key — reuses the
 cached executable instead of re-tracing.  Programs the engine cannot
@@ -62,6 +66,7 @@ class CompiledCamProgram:
     matched_patterns: List[str]
     backend: str = "jnp"
     engine_plan: Optional[SearchPlan] = None
+    shards: int = 1
 
     def __call__(self, *inputs):
         """Execute the program: compiled search plan when available,
@@ -96,7 +101,8 @@ def compile_module(module: Module, arch: ArchSpec, *,
                    target: Optional[str] = None,
                    unroll_limit: int = 64,
                    value_bits: Optional[int] = None,
-                   backend: str = "jnp") -> CompiledCamProgram:
+                   backend: str = "jnp",
+                   shards: Optional[int] = None) -> CompiledCamProgram:
     if target is not None:
         arch = arch.with_target(target)
     ctx: Dict[str, Any] = {"arch": arch, "value_bits": value_bits}
@@ -129,12 +135,14 @@ def compile_module(module: Module, arch: ArchSpec, *,
 
     snapshots = (pm1.snapshots + pm2.snapshots[1:] + pm3.snapshots[1:]
                  + pm4.snapshots[1:] + pm5.snapshots[1:])
-    engine_plan = get_plan(stages["cim_partitioned"], backend=backend)
+    engine_plan = get_plan(stages["cim_partitioned"], backend=backend,
+                           shards=shards)
     return CompiledCamProgram(
         arch=arch, cam_type=cam_type, stages=stages, snapshots=snapshots,
         plans=ctx.get("plans", []),
         matched_patterns=ctx.get("matched_patterns", []),
-        backend=backend, engine_plan=engine_plan)
+        backend=backend, engine_plan=engine_plan,
+        shards=engine_plan.shards if engine_plan is not None else 1)
 
 
 def compile_fn(fn: Callable, example_inputs: Sequence[Any], arch: ArchSpec,
@@ -147,13 +155,15 @@ class C4CAMCompiler:
     """Object-style front door mirroring the paper's tool (arch spec + app)."""
 
     def __init__(self, arch: ArchSpec, cam_type: str = CamType.TCAM,
-                 backend: str = "jnp"):
+                 backend: str = "jnp", shards: Optional[int] = None):
         self.arch = arch
         self.cam_type = cam_type
         self.backend = backend
+        self.shards = shards
 
     def compile(self, fn: Callable, example_inputs: Sequence[Any],
                 target: Optional[str] = None, **kw) -> CompiledCamProgram:
+        kw.setdefault("shards", self.shards)
         return compile_fn(fn, example_inputs, self.arch,
                           cam_type=self.cam_type, target=target,
                           backend=self.backend, **kw)

@@ -38,6 +38,20 @@ Numerical contract: the plan performs the *same* arithmetic in the same
 order as the interpreted tile ops — bit-identical results for the
 integer metrics (hamming / dot), float-tolerance for eucl / cos — as
 pinned by ``repro.kernels.ref``.
+
+Sharded execution (multi-device)
+--------------------------------
+``get_plan(..., shards=S)`` compiles the same program against a 1-D
+``("data",)`` device mesh (`repro.launch.mesh.make_data_mesh`): the
+gallery's pattern rows are sharded across devices at row-tile
+granularity via ``shard_map`` — the *bank* level of the paper's §III-B
+hierarchy, one level above the row-tile (subarray) scan each device
+already runs — and the per-device candidate lists meet in a cross-device
+top-k tournament merge with exactly :func:`kref.merge_topk` semantics
+(ascending shard order == ascending global row order, so ties still
+break toward the lower index).  Results are bit-identical to the
+single-device plan for integer metrics.  The shard count is part of the
+plan-cache key; requests beyond the host's device count clamp.
 """
 
 from __future__ import annotations
@@ -50,13 +64,18 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..kernels import ref as kref
+from ..launch.mesh import make_data_mesh
 from .ir import Module
 
 __all__ = [
-    "SimilaritySpec", "SearchPlan", "extract_plan_spec", "get_plan",
-    "plan_cache_stats", "clear_plan_cache",
+    "SimilaritySpec", "SearchPlan", "PendingSearch", "extract_plan_spec",
+    "get_plan", "merge_shard_candidates", "plan_cache_stats",
+    "clear_plan_cache",
 ]
 
 
@@ -231,12 +250,79 @@ def _spec_from_unrolled(body, arg_pos) -> Optional[SimilaritySpec]:
 # ---------------------------------------------------------------------------
 
 def _pick_batch(m: int) -> int:
-    """Micro-batch size: next power of two, clamped to the chunk cap."""
-    cap = int(os.environ.get("REPRO_ENGINE_MAX_CHUNK", "1024"))
+    """Micro-batch size: next power of two, clamped to the chunk cap.
+
+    The clamp is applied *after* rounding up — a non-power-of-two cap
+    (say 1000) must still bound the batch, not let the round-up jump
+    over it to 1024.
+    """
+    cap = max(1, int(os.environ.get("REPRO_ENGINE_MAX_CHUNK", "1024")))
     b = 8
     while b < min(max(m, 1), cap):
         b *= 2
-    return b
+    return min(b, cap)
+
+
+def _tile_tournament(spec: SimilaritySpec, batch: int):
+    """The row-tile tournament shared by the single-device and sharded
+    executables: ``scan(qt, pt, roffs)`` runs the column-tile partial-sum
+    scan + per-tile top-k + vertical ``merge_topk`` tournament over the
+    row tiles in ``pt`` (physical domain), with global row offsets
+    ``roffs``.  One definition keeps the two execution paths bit-identical
+    by construction.
+    """
+    metric, k = spec.metric, spec.k
+    phys_metric, _, phys_largest = _metric_values(metric, spec.largest)
+    tr = spec.tile_rows
+    n = spec.n
+    kk = min(k, tr)
+    lose = -jnp.inf if phys_largest else jnp.inf
+    # rows beyond the unsharded physical extent exist only on shard-
+    # padding tiles; their candidates become pad_candidates sentinels
+    # (a no-op for the single-device grid, which never exceeds it)
+    n_phys = spec.grid_rows * tr
+
+    def tile_topk(qt, pr, roff):
+        """Per-row-tile candidate list (pr: (gc, tr, dpt))."""
+
+        def col_step(acc, qc_pc):
+            qc, pc = qc_pc              # horizontal merge, oracle arithmetic
+            return acc + kref.distances(qc, pc, phys_metric), None
+
+        dist, _ = jax.lax.scan(
+            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, pr))
+        gidx = roff + jnp.arange(tr, dtype=jnp.int32)
+        dist = jnp.where(gidx[None, :] < n, dist, lose)      # ragged rows
+        key = dist if phys_largest else -dist
+        _, idx = jax.lax.top_k(key, kk)
+        v = jnp.take_along_axis(dist, idx, axis=-1)
+        i = idx.astype(jnp.int32) + roff
+        i = jnp.where(i < n_phys, i, 2 ** 30)
+        return kref.pad_candidates(v, i, k, phys_largest)
+
+    def scan(qt, pt, roffs):
+        def row_step(carry, xs):
+            cv, ci = carry                                   # vertical merge
+            v, i = tile_topk(qt, *xs)
+            return kref.merge_topk(cv, ci, v, i, k=k,
+                                   largest=phys_largest), None
+
+        # tile 0 seeds the tournament (its padded-slot indices are real
+        # column positions, which the interpreter also reports), remaining
+        # row tiles stream through the scan.
+        init = tile_topk(qt, pt[0], roffs[0])
+        (v, i), _ = jax.lax.scan(row_step, init, (pt[1:], roffs[1:]))
+        return v, i
+
+    return scan
+
+
+def _layout_queries(q, spec: SimilaritySpec, batch: int):
+    """Encode + pad + split a query chunk into per-column-tile slabs."""
+    gc, dpt, dim = spec.grid_cols, spec.dims_per_tile, spec.dim
+    qe = _encode(q, spec.metric).astype(jnp.float32)
+    qp = jnp.pad(qe, ((0, 0), (0, gc * dpt - dim)))
+    return qp.reshape(batch, gc, dpt).transpose(1, 0, 2)     # (gc, B, dpt)
 
 
 def _build_scan_executable(spec: SimilaritySpec, batch: int):
@@ -247,13 +333,12 @@ def _build_scan_executable(spec: SimilaritySpec, batch: int):
     ``lax.scan`` over the (row_tile, col_tile) grid, so the jaxpr stays
     small at any grid size and XLA pipelines the tiles.
     """
-    metric, k = spec.metric, spec.k
-    phys_metric, to_logical, phys_largest = _metric_values(metric, spec.largest)
+    metric = spec.metric
+    _, to_logical, _ = _metric_values(metric, spec.largest)
     tr, dpt, gr, gc = (spec.tile_rows, spec.dims_per_tile,
                        spec.grid_rows, spec.grid_cols)
     n, dim = spec.n, spec.dim
-    kk = min(k, tr)
-    lose = -jnp.inf if phys_largest else jnp.inf
+    scan = _tile_tournament(spec, batch)
 
     def prepare(p):
         pe = _encode(jnp.asarray(p), metric).astype(jnp.float32)
@@ -262,42 +347,102 @@ def _build_scan_executable(spec: SimilaritySpec, batch: int):
         return pe.reshape(gr, tr, gc, dpt).transpose(0, 2, 1, 3)
 
     def chunk_fn(q, pt):
-        qe = _encode(q, metric).astype(jnp.float32)
-        qp = jnp.pad(qe, ((0, 0), (0, gc * dpt - dim)))
-        qt = qp.reshape(batch, gc, dpt).transpose(1, 0, 2)   # (gc, B, dpt)
-
-        def tile_topk(pr, roff):
-            """Per-row-tile candidate list (pr: (gc, tr, dpt))."""
-
-            def col_step(acc, qc_pc):
-                qc, pc = qc_pc          # horizontal merge, oracle arithmetic
-                return acc + kref.distances(qc, pc, phys_metric), None
-
-            dist, _ = jax.lax.scan(
-                col_step, jnp.zeros((batch, tr), jnp.float32), (qt, pr))
-            gidx = roff + jnp.arange(tr, dtype=jnp.int32)
-            dist = jnp.where(gidx[None, :] < n, dist, lose)  # ragged rows
-            key = dist if phys_largest else -dist
-            _, idx = jax.lax.top_k(key, kk)
-            v = jnp.take_along_axis(dist, idx, axis=-1)
-            i = idx.astype(jnp.int32) + roff
-            return kref.pad_candidates(v, i, k, phys_largest)
-
-        def row_step(carry, xs):
-            cv, ci = carry                                   # vertical merge
-            v, i = tile_topk(*xs)
-            return kref.merge_topk(cv, ci, v, i, k=k,
-                                   largest=phys_largest), None
-
-        # tile 0 seeds the tournament (its padded-slot indices are real
-        # column positions, which the interpreter also reports), remaining
-        # row tiles stream through the scan.
+        qt = _layout_queries(q, spec, batch)
         roffs = jnp.arange(gr, dtype=jnp.int32) * tr
-        init = tile_topk(pt[0], roffs[0])
-        (v, i), _ = jax.lax.scan(row_step, init, (pt[1:], roffs[1:]))
+        v, i = scan(qt, pt, roffs)
         return to_logical(v, float(dim)), i
 
     return jax.jit(prepare), jax.jit(chunk_fn)
+
+
+def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int):
+    """(prepare_patterns, chunk_fn) sharding gallery rows over a device mesh.
+
+    Device ``d`` holds row tiles ``[d*tps, (d+1)*tps)`` of the padded
+    gallery (``tps = ceil(grid_rows / shards)``) and runs the *same*
+    row-tile scan as the single-device executable over its shard — the
+    bank level of the paper's hierarchy.  ``chunk_fn`` returns the
+    per-device candidate lists still *sharded* ``(shards, batch, k)``;
+    the cross-device tournament happens in :func:`merge_shard_candidates`
+    at result-materialisation time.
+
+    The per-device program deliberately contains **no collective**: an
+    ``all_gather`` at the tail of each chunk would make every device's
+    stream rendezvous with the slowest shard before its next chunk could
+    start, serialising the pipeline exactly where the serving layer
+    needs overlap.  Collective-free shard programs let each device run
+    chunk after chunk back-to-back; the merge is O(shards·k) per query
+    and runs off-stream.
+
+    Padding tiles introduced by uneven division live *beyond* the
+    single-device physical row count ``grid_rows * tile_rows``; their
+    candidates are rewritten to the ``pad_candidates`` sentinels
+    (losing value, index ``2**30``) so a sharded plan emits bit-identical
+    output to the unsharded one even when ``n < k`` leaves losing slots
+    visible.
+    """
+    metric = spec.metric
+    _, to_logical, _ = _metric_values(metric, spec.largest)
+    tr, dpt, gr, gc = (spec.tile_rows, spec.dims_per_tile,
+                       spec.grid_rows, spec.grid_cols)
+    n, dim = spec.n, spec.dim
+    mesh = make_data_mesh(shards)
+    tps = -(-gr // shards)          # row tiles per shard
+    gr_pad = shards * tps
+    scan = _tile_tournament(spec, batch)
+
+    def prepare(p):
+        pe = _encode(jnp.asarray(p), metric).astype(jnp.float32)
+        pe = jnp.pad(pe, ((0, gr_pad * tr - n), (0, gc * dpt - dim)))
+        pt = pe.reshape(gr_pad, tr, gc, dpt).transpose(0, 2, 1, 3)
+        # lay the row-tile axis out over the mesh once, behind the plan
+        # cache — chunk execution never re-shards the gallery
+        return jax.device_put(pt, NamedSharding(mesh, PartitionSpec("data")))
+
+    def local_scan(qt, pt):
+        """One device's shard of the row-tile tournament (no collectives)."""
+        d = jax.lax.axis_index("data")
+        roffs = (d * tps + jnp.arange(tps, dtype=jnp.int32)) * tr
+        v, i = scan(qt, pt, roffs)
+        # logical-domain conversion is elementwise and strictly monotone,
+        # so the host-side merge can run directly on logical values with
+        # the logical polarity and still match the physical tournament
+        return to_logical(v, float(dim))[None], i[None]   # (1, B, k)
+
+    def chunk_fn(q, pt):
+        qt = _layout_queries(q, spec, batch)
+        return shard_map(
+            local_scan, mesh=mesh,
+            in_specs=(PartitionSpec(), PartitionSpec("data")),
+            out_specs=(PartitionSpec("data"), PartitionSpec("data")),
+            check_rep=False)(qt, pt)                          # (S, B, k)
+
+    return prepare, jax.jit(chunk_fn)
+
+
+def merge_shard_candidates(values: Any, indices: Any, *, k: int,
+                           largest: bool) -> Tuple[Any, Any]:
+    """Cross-shard top-k tournament, host-side.
+
+    Takes the ``(shards, batch, k)`` per-device candidate lists a sharded
+    ``chunk_fn`` emits and reduces them to ``(batch, k)``.  Semantically
+    identical to folding :func:`kref.merge_topk` over shards in ascending
+    order: concatenation in shard order is concatenation in ascending
+    global-row order, and a *stable* argsort on the (negated, for
+    ``largest``) values breaks ties toward the lower global index exactly
+    like ``lax.top_k`` does in the on-device merges.  No arithmetic
+    happens here — only selection on already-computed values — so
+    integer-metric results stay bit-identical to the single-device plan.
+    """
+    av = np.asarray(values)
+    ai = np.asarray(indices)
+    s, b, kk = av.shape
+    vv = np.transpose(av, (1, 0, 2)).reshape(b, s * kk)
+    ii = np.transpose(ai, (1, 0, 2)).reshape(b, s * kk)
+    key = -vv if largest else vv
+    sel = np.argsort(key, axis=-1, kind="stable")[:, :k]
+    return (np.take_along_axis(vv, sel, axis=-1),
+            np.take_along_axis(ii, sel, axis=-1))
 
 
 def _build_pallas_executable(spec: SimilaritySpec, batch: int):
@@ -338,6 +483,21 @@ def _build_pallas_executable(spec: SimilaritySpec, batch: int):
 
 
 @dataclass
+class PendingSearch:
+    """An async-dispatched search: chunk results not yet materialised.
+
+    ``chunks`` holds ``(values, indices, valid_rows)`` per micro-batch —
+    jax arrays still computing on-device.  :meth:`SearchPlan.finalize`
+    turns a pending search into final ``(values, indices)``.
+    """
+
+    plan: "SearchPlan"
+    m: int
+    lead: Tuple[int, ...]
+    chunks: list
+
+
+@dataclass
 class SearchPlan:
     """A compiled, reusable executable for one similarity-program shape."""
 
@@ -346,6 +506,7 @@ class SearchPlan:
     batch: int
     _prepare: Callable = field(repr=False)
     _chunk_fn: Callable = field(repr=False)
+    shards: int = 1
     executions: int = 0
     chunks_run: int = 0
     _pattern_cache: "OrderedDict[Tuple[int, Tuple[int, ...], str], Tuple[Any, Any]]" = \
@@ -354,6 +515,10 @@ class SearchPlan:
     # to every caller), so the memo needs its own lock
     _pattern_lock: threading.Lock = field(default_factory=threading.Lock,
                                           repr=False)
+    # executions / chunks_run are bumped from every serving worker thread
+    # driving the shared plan; unguarded += would drop counts
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False)
 
     _PATTERN_CACHE_SLOTS = 4
 
@@ -383,9 +548,21 @@ class SearchPlan:
                 self._pattern_cache.popitem(last=False)
         return prepared
 
-    def execute(self, *inputs):
-        """Run the plan; accepts exactly the compiled module's arguments."""
-        self.executions += 1
+    def dispatch(self, *inputs) -> "PendingSearch":
+        """Enqueue the plan's chunks without waiting for device results.
+
+        Returns a :class:`PendingSearch` whose chunk arrays are
+        async-dispatched jax values; pass it to :meth:`finalize` to
+        materialise ``(values, indices)``.  The split lets a serving
+        loop dispatch the next micro-batch while the device still runs
+        the previous one.
+
+        Thread-safe: the serving layer drives one shared plan from many
+        worker threads.  The jitted executables are pure, the pattern
+        memo has its own lock, and the stats counters are guarded here.
+        """
+        with self._stats_lock:
+            self.executions += 1
         spec = self.spec
         q_src = inputs[spec.query_arg]
         p_src = inputs[spec.pattern_arg]
@@ -394,20 +571,37 @@ class SearchPlan:
         pp = self._prepared_patterns(p_src)
 
         b = self.batch
-        vs, is_ = [], []
+        chunks = []
         for s in range(0, m, b):
             chunk = q2[s:s + b]
             valid = chunk.shape[0]
             if valid < b:
                 chunk = jnp.pad(chunk, ((0, b - valid), (0, 0)))
             v, i = self._chunk_fn(chunk, pp)
-            self.chunks_run += 1
+            with self._stats_lock:
+                self.chunks_run += 1
+            chunks.append((v, i, valid))
+        return PendingSearch(plan=self, m=m, lead=lead, chunks=chunks)
+
+    def finalize(self, pending: "PendingSearch"):
+        """Materialise a dispatched search: cross-shard merge (sharded
+        plans), ragged-tail slicing, chunk concatenation, output shaping."""
+        spec = self.spec
+        xp = np if self.shards > 1 else jnp
+        vs, is_ = [], []
+        for v, i, valid in pending.chunks:
+            if self.shards > 1:
+                v, i = merge_shard_candidates(v, i, k=spec.k,
+                                              largest=spec.largest)
             vs.append(v[:valid])
             is_.append(i[:valid])
-        v = vs[0] if len(vs) == 1 else jnp.concatenate(vs, axis=0)
-        i = is_[0] if len(is_) == 1 else jnp.concatenate(is_, axis=0)
+        if not vs:      # zero queries: well-shaped empty result
+            vs = [xp.zeros((0, spec.k), xp.float32)]
+            is_ = [xp.zeros((0, spec.k), xp.int32)]
+        v = vs[0] if len(vs) == 1 else xp.concatenate(vs, axis=0)
+        i = is_[0] if len(is_) == 1 else xp.concatenate(is_, axis=0)
 
-        k = spec.k
+        m, lead, k = pending.m, pending.lead, spec.k
         if m * k == _size(spec.out_v_shape):
             v = v.reshape(spec.out_v_shape)
             i = i.reshape(spec.out_i_shape)
@@ -415,6 +609,19 @@ class SearchPlan:
             v = v.reshape(lead + (k,))
             i = i.reshape(lead + (k,))
         return (v, i)
+
+    def execute(self, *inputs):
+        """Run the plan; accepts exactly the compiled module's arguments.
+
+        Always returns jax arrays, regardless of shard count (the
+        sharded finalize merges on host; converting back keeps the
+        public output type shard-invariant).  Serving loops that want
+        the host arrays directly use dispatch/finalize themselves.
+        """
+        v, i = self.finalize(self.dispatch(*inputs))
+        if self.shards > 1:
+            v, i = jnp.asarray(v), jnp.asarray(i)
+        return v, i
 
 
 def _size(shape: Tuple[int, ...]) -> int:
@@ -428,7 +635,7 @@ def _size(shape: Tuple[int, ...]) -> int:
 # Process-wide plan cache
 # ---------------------------------------------------------------------------
 
-_PLAN_CACHE: "OrderedDict[Tuple[SimilaritySpec, str, int], SearchPlan]" = \
+_PLAN_CACHE: "OrderedDict[Tuple[SimilaritySpec, str, int, int], SearchPlan]" = \
     OrderedDict()
 #: LRU bound — a DSE sweep over many distinct geometries must not pin
 #: every plan (and its memoised galleries) forever
@@ -437,9 +644,24 @@ _CACHE_LOCK = threading.Lock()
 _STATS = {"hits": 0, "misses": 0}
 
 
+def _normalize_shards(shards: Optional[int]) -> int:
+    """Effective shard count: ``None``/<=1 means unsharded; requests are
+    clamped to the host's device count (a plan asking for 8-way sharding
+    on a 1-device host degrades to the single-device executable)."""
+    if shards is None or shards <= 1:
+        return 1
+    return max(1, min(int(shards), jax.device_count()))
+
+
 def get_plan(module: Module, *, backend: str = "jnp",
-             batch: Optional[int] = None) -> Optional[SearchPlan]:
+             batch: Optional[int] = None,
+             shards: Optional[int] = None) -> Optional[SearchPlan]:
     """Plan for a partitioned module, from the cache when possible.
+
+    ``shards > 1`` selects the multi-device executable: gallery rows
+    sharded over a ``("data",)`` mesh, cross-device ``merge_topk``
+    tournament (see ``_build_sharded_executable``).  The effective shard
+    count is part of the plan-cache key.
 
     Returns ``None`` when the module is not a pure similarity program
     (callers then fall back to the IR interpreter).
@@ -452,8 +674,14 @@ def get_plan(module: Module, *, backend: str = "jnp",
         return None
     if backend not in ("jnp", "pallas"):
         return None
+    if shards is not None and shards > 1 and backend != "jnp":
+        # checked on the *requested* count, before device clamping, so
+        # the refusal does not depend on how many devices this host has
+        raise ValueError(
+            f"sharded plans require the 'jnp' backend, got {backend!r}")
+    s = _normalize_shards(shards)
     b = batch or _pick_batch(spec.m)
-    key = (spec, backend, b)
+    key = (spec, backend, b, s)
     with _CACHE_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -461,11 +689,13 @@ def get_plan(module: Module, *, backend: str = "jnp",
             _PLAN_CACHE.move_to_end(key)
             return plan
         _STATS["misses"] += 1
-    if backend == "pallas":
+    if s > 1:
+        prepare, chunk_fn = _build_sharded_executable(spec, b, s)
+    elif backend == "pallas":
         prepare, chunk_fn = _build_pallas_executable(spec, b)
     else:
         prepare, chunk_fn = _build_scan_executable(spec, b)
-    plan = SearchPlan(spec=spec, backend=backend, batch=b,
+    plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
                       _prepare=prepare, _chunk_fn=chunk_fn)
     with _CACHE_LOCK:
         # lost-race double insert is harmless but keep one canonical plan

@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import ref as kref
 from .cam_search import distance_pallas, fused_topk_pallas
 
 __all__ = ["cam_topk", "cam_topk_prepadded", "pad_to_blocks", "cam_exact",
@@ -94,13 +95,9 @@ def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str, k: int,
                                    largest=largest, n_valid=n, block_m=bm,
                                    block_n=bn, block_d=bd,
                                    interpret=interpret)
-    out_v, out_i = vals[:m], idx[:m]
-    if k_eff < k:
-        out_v = jnp.pad(out_v, ((0, 0), (0, k - k_eff)),
-                        constant_values=-jnp.inf if largest else jnp.inf)
-        out_i = jnp.pad(out_i, ((0, 0), (0, k - k_eff)),
-                        constant_values=2 ** 30)
-    return out_v, out_i
+    # k > N: pad with the shared losing sentinels (same helper the engine
+    # and tiled reference use, so every path emits identical pad content)
+    return kref.pad_candidates(vals[:m], idx[:m], k, largest)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))

@@ -1,0 +1,11 @@
+"""Serving layer for CAM similarity search.
+
+Continuous-batching front end over the search-plan engine: concurrent
+KNN / HDC query requests are coalesced into plan-sized micro-batches
+against one cached (optionally multi-device-sharded)
+:class:`~repro.core.engine.SearchPlan`.  See ``docs/serving.md``.
+"""
+
+from .server import CamSearchServer, SearchRequest, SearchResult
+
+__all__ = ["CamSearchServer", "SearchRequest", "SearchResult"]

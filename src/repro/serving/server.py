@@ -1,0 +1,353 @@
+"""Continuous-batching CAM search server.
+
+The LM serving driver (:mod:`repro.launch.serve`) batches *sequences*
+at decode-step granularity; this module applies the same idea to CAM
+similarity search, the paper's actual workload.  Many worker threads
+(RPC handlers, classifier shards, HDC encoders) submit small KNN / HDC
+query blocks concurrently; a single batcher thread coalesces whatever
+is pending into **plan-sized micro-batches** and drives ONE cached
+:class:`~repro.core.engine.SearchPlan` — single-device or sharded
+across a ``("data",)`` device mesh — so the jitted executable, the
+memoised prepared gallery, and the device mesh are shared by every
+request in the process.
+
+Request lifecycle::
+
+    client thread              batcher thread             completion thread
+    -------------              --------------             -----------------
+    search(q) ─► queue ───────► drain pending (≤ batch    plan.finalize(...)
+      blocks on event           rows, ≤ max_wait linger)  syncs the device +
+                                stack rows                cross-shard merge,
+                                plan.dispatch(...) ─────► scatter rows to
+      results ◄─────────────────────────────────────────  requests, set
+                                (loops immediately: next  events, record
+                                batch dispatches while the latency
+                                device runs the previous)
+
+The batcher never blocks on device results: ``plan.dispatch`` enqueues
+the micro-batch and returns a ``PendingSearch`` of async jax arrays.  A
+bounded completion queue hands it to the completion thread, whose
+``plan.finalize`` blocks on the transfer (and runs the host-side
+cross-shard merge for sharded plans) before scattering rows back to
+their requests and waking the clients — host-side batching overlaps
+device compute, and the bound provides backpressure when clients outrun
+the device.  (``plan.execute`` is ``finalize(dispatch(...))`` — calling
+it in the batcher would serialise the pipeline on device results.)
+
+Coalescing is row-granular: a request carrying 3 query rows and one
+carrying 61 share a 64-row micro-batch; an oversized request simply
+spans chunks inside the plan (which micro-batches internally).
+Results are identical to calling the plan directly — batching changes
+scheduling, never arithmetic.
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.compiler import CompiledCamProgram
+from ..core.engine import SearchPlan
+
+__all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
+
+
+@dataclass
+class SearchResult:
+    """Per-request outcome: top-k values/indices row-aligned with the
+    submitted queries, plus queueing/batching latency telemetry."""
+
+    rid: int
+    values: Optional[np.ndarray] = None
+    indices: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
+    submitted_at: float = 0.0
+    completed_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.completed_at - self.submitted_at
+
+
+@dataclass
+class SearchRequest:
+    """One in-flight query block (``queries``: ``(rows, dim)``)."""
+
+    rid: int
+    queries: np.ndarray
+    result: SearchResult
+    _done: threading.Event = field(default_factory=threading.Event)
+
+    def wait(self, timeout: Optional[float] = None) -> SearchResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"search request {self.rid} timed out")
+        return self.result
+
+
+class CamSearchServer:
+    """Row-granular continuous batching over one shared ``SearchPlan``.
+
+    Parameters
+    ----------
+    program:
+        A :class:`CompiledCamProgram` whose ``engine_plan`` is set (any
+        pure similarity program), or a bare :class:`SearchPlan`.
+    gallery:
+        The stored patterns.  Converted to a jax array once so the
+        plan's pattern memo (and, for sharded plans, the device layout)
+        is hit by every batch.
+    max_wait_ms:
+        Linger: how long the batcher waits for more rows after the
+        first pending request before launching a partial batch.
+    max_batch:
+        Rows per coalesced batch; defaults to the plan's micro-batch
+        size (anything larger would be re-chunked inside the plan
+        anyway).
+    max_inflight:
+        Bound on dispatched-but-unsynced batches (the completion
+        queue); backpressure against clients outrunning the device.
+    """
+
+    def __init__(self, program: Any, gallery: np.ndarray, *,
+                 max_wait_ms: float = 2.0, max_batch: Optional[int] = None,
+                 max_inflight: int = 4):
+        if isinstance(program, CompiledCamProgram):
+            plan = program.engine_plan
+            if plan is None:
+                raise ValueError(
+                    "program has no engine plan (not a pure similarity "
+                    "program); the search server needs a SearchPlan")
+        elif isinstance(program, SearchPlan):
+            plan = program
+        else:
+            raise TypeError(f"expected CompiledCamProgram or SearchPlan, "
+                            f"got {type(program).__name__}")
+        import jax.numpy as jnp
+        self.plan = plan
+        self.gallery = jnp.asarray(gallery)
+        self.max_wait = max_wait_ms / 1e3
+        self.max_batch = int(max_batch or plan.batch)
+        self._queue: "queue.Queue[Optional[SearchRequest]]" = queue.Queue()
+        self._completions: "queue.Queue[Optional[Tuple[Any, ...]]]" = \
+            queue.Queue(maxsize=max(1, int(max_inflight)))
+        self._rid = itertools.count()
+        self._thread: Optional[threading.Thread] = None
+        self._completer: Optional[threading.Thread] = None
+        self._running = False
+        self._accepting = False
+        self._lock = threading.Lock()
+        # bounded: a long-lived server must not grow per-request state
+        self._latencies: "deque[float]" = deque(maxlen=4096)
+        self.stats: Dict[str, Any] = {
+            "requests": 0, "queries": 0, "batches": 0,
+            "batched_rows": 0, "errors": 0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "CamSearchServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._running = True
+        self._accepting = True
+        self._thread = threading.Thread(target=self._loop,
+                                        name="cam-search-batcher", daemon=True)
+        self._completer = threading.Thread(target=self._completion_loop,
+                                           name="cam-search-completer",
+                                           daemon=True)
+        self._completer.start()
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        # close the front door under the lock BEFORE the shutdown
+        # sentinel: any submit that won its lock race has its request in
+        # the queue ahead of the sentinel, so the batcher still serves
+        # it; later submits raise instead of enqueueing into a dead queue
+        with self._lock:
+            self._accepting = False
+        self._running = False
+        self._queue.put(None)               # wake the batcher
+        self._thread.join()
+        self._thread = None
+        self._completions.put(None)         # batcher done: flush completer
+        self._completer.join()
+        self._completer = None
+
+    def __enter__(self) -> "CamSearchServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, queries: np.ndarray) -> SearchRequest:
+        """Enqueue a query block; returns a waitable request handle.
+
+        Malformed blocks are rejected here, synchronously — one bad
+        request must never poison the innocent requests it would have
+        been coalesced with.
+        """
+        q = np.asarray(queries)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (rows, dim), got {q.shape}")
+        if q.shape[0] == 0:
+            raise ValueError("empty query block")
+        dim = self.plan.spec.dim
+        if q.shape[1] != dim:
+            raise ValueError(
+                f"query feature dimension {q.shape[1]} != plan dim {dim}")
+        rid = next(self._rid)
+        req = SearchRequest(rid=rid, queries=q,
+                            result=SearchResult(rid=rid,
+                                                submitted_at=time.perf_counter()))
+        with self._lock:
+            if not self._accepting:
+                raise RuntimeError("server not started")
+            self._queue.put(req)
+        return req
+
+    def search(self, queries: np.ndarray,
+               timeout: Optional[float] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Blocking search: submit + wait, raising the batch's error if
+        execution failed.  Thread-safe; this is the worker-thread API."""
+        res = self.submit(queries).wait(timeout)
+        if res.error is not None:
+            raise res.error
+        return res.values, res.indices
+
+    # -- batcher -----------------------------------------------------------
+
+    def _drain(self, first: SearchRequest) -> List[SearchRequest]:
+        """Coalesce pending requests after ``first`` into one batch:
+        up to ``max_batch`` rows, lingering at most ``max_wait``."""
+        batch = [first]
+        rows = first.queries.shape[0]
+        deadline = time.perf_counter() + self.max_wait
+        while rows < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            try:
+                req = self._queue.get(
+                    timeout=max(remaining, 0) if remaining > 0 else None,
+                    block=remaining > 0)
+            except queue.Empty:
+                break
+            if req is None:                 # shutdown sentinel
+                self._queue.put(None)       # leave it for the main loop
+                break
+            batch.append(req)
+            rows += req.queries.shape[0]
+        return batch
+
+    def _loop(self) -> None:
+        while True:
+            req = self._queue.get()
+            if req is None:
+                if self._running:
+                    continue                # stray sentinel from a drain
+                break
+            batch = self._drain(req)
+            self._execute_batch(batch)
+        # drain anything left after shutdown so no client blocks forever
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req is not None:
+                self._fail(req, RuntimeError("server stopped"))
+
+    def _execute_batch(self, batch: Sequence[SearchRequest]) -> None:
+        """Dispatch one coalesced batch; the device result (async jax
+        arrays) goes to the completion thread, so the batcher is free to
+        coalesce and dispatch the next batch immediately."""
+        try:
+            rows = np.concatenate([r.queries for r in batch], axis=0)
+            spec = self.plan.spec
+            inputs: List[Any] = \
+                [None] * (max(spec.query_arg, spec.pattern_arg) + 1)
+            inputs[spec.query_arg] = rows
+            inputs[spec.pattern_arg] = self.gallery
+            pending = self.plan.dispatch(*inputs)
+        except BaseException as e:          # noqa: BLE001 — fanned out
+            for r in batch:
+                self._fail(r, e)
+            return
+        with self._lock:
+            self.stats["batches"] += 1
+            self.stats["batched_rows"] += rows.shape[0]
+        self._completions.put((batch, pending, rows.shape[0]))  # backpressured
+
+    def _completion_loop(self) -> None:
+        while True:
+            item = self._completions.get()
+            if item is None:
+                break
+            batch, pending, rows = item
+            try:
+                values, indices = self.plan.finalize(pending)
+                # finalize shapes outputs for the *compiled module* (which
+                # may have been traced with 1-D or stacked queries); the
+                # scatter below is strictly row-major (rows, k)
+                values = np.asarray(values).reshape(rows, -1)
+                indices = np.asarray(indices).reshape(rows, -1)
+            except BaseException as e:          # noqa: BLE001 — fanned out
+                for r in batch:
+                    self._fail(r, e)
+                continue
+            now = time.perf_counter()
+            off = 0
+            with self._lock:
+                self.stats["requests"] += len(batch)
+                self.stats["queries"] += rows
+            for r in batch:
+                m = r.queries.shape[0]
+                r.result.values = values[off:off + m]
+                r.result.indices = indices[off:off + m]
+                r.result.completed_at = now
+                off += m
+                with self._lock:
+                    self._latencies.append(r.result.latency_s)
+                r._done.set()
+
+    def _fail(self, req: SearchRequest, err: BaseException) -> None:
+        req.result.error = err
+        req.result.completed_at = time.perf_counter()
+        with self._lock:
+            self.stats["errors"] += 1
+        req._done.set()
+
+    # -- telemetry ---------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Point-in-time stats: throughput-ready counters plus latency
+        percentiles (over a bounded recent window) and the mean batch
+        fill (rows per launched batch)."""
+        with self._lock:
+            lat = sorted(self._latencies)
+            out = dict(self.stats)
+        out["avg_batch_fill"] = (out["batched_rows"] / out["batches"]
+                                 if out["batches"] else 0.0)
+        if lat:
+            out["p50_ms"] = 1e3 * lat[len(lat) // 2]
+            out["p95_ms"] = 1e3 * lat[min(len(lat) - 1,
+                                          int(len(lat) * 0.95))]
+        out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
+                       "backend": self.plan.backend,
+                       "metric": self.plan.spec.metric, "k": self.plan.spec.k,
+                       "executions": self.plan.executions,
+                       "chunks_run": self.plan.chunks_run}
+        return out

@@ -2,6 +2,8 @@
 interpreter (the semantic oracle) across metrics, tile geometries,
 ragged pattern counts, and micro-batched queries."""
 
+import threading
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -9,6 +11,7 @@ import pytest
 from repro.core import (ArchSpec, Builder, Module, PassManager, TensorType,
                         clear_plan_cache, compile_fn, get_plan,
                         plan_cache_stats)
+from repro.core.engine import _pick_batch
 from repro.core.cim_dialect import (make_acquire, make_execute, make_release,
                                     make_similarity, make_yield)
 from repro.core.engine import extract_plan_spec
@@ -178,6 +181,86 @@ def test_pallas_backend_parity(rng):
     pv, pi = plan_pl.execute(q, p)
     np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
     np.testing.assert_array_equal(np.asarray(rv), np.asarray(pv))
+
+
+# ---------------------------------------------------------------------------
+# micro-batch sizing
+# ---------------------------------------------------------------------------
+
+
+def test_pick_batch_respects_non_power_of_two_cap(monkeypatch):
+    """Regression: a cap of 1000 must not round up past itself to 1024."""
+    monkeypatch.setenv("REPRO_ENGINE_MAX_CHUNK", "1000")
+    assert _pick_batch(5000) == 1000
+    assert _pick_batch(600) <= 1000
+    monkeypatch.setenv("REPRO_ENGINE_MAX_CHUNK", "1024")
+    assert _pick_batch(5000) == 1024       # power-of-two caps unchanged
+    assert _pick_batch(3) == 8
+    monkeypatch.setenv("REPRO_ENGINE_MAX_CHUNK", "6")
+    assert _pick_batch(100) == 6           # cap below the floor still wins
+
+
+def test_pick_batch_cap_changes_plan_key(monkeypatch):
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("eucl", 2, False, 2000, 24, 64, arch)
+    monkeypatch.setenv("REPRO_ENGINE_MAX_CHUNK", "1000")
+    plan = get_plan(mod)
+    assert plan.batch == 1000
+
+
+# ---------------------------------------------------------------------------
+# concurrency: one shared plan driven from many threads
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_execute_parity_and_counters(rng):
+    """Many threads share one plan: results must match the single-thread
+    output and the stats counters must not drop increments."""
+    m, n, dim, k = 24, 40, 64, 4
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("dot", k, False, m, n, dim, arch)
+    plan = get_plan(mod, batch=8)
+    q, p = _data(rng, "dot", m, n, dim)
+    pj = jnp.asarray(p)
+    want_v, want_i = plan.execute(q, pj)
+    exec0, chunks0 = plan.executions, plan.chunks_run
+
+    n_threads, reps = 8, 4
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(reps):
+                v, i = plan.execute(q, pj)
+                np.testing.assert_array_equal(np.asarray(i),
+                                              np.asarray(want_i))
+                np.testing.assert_array_equal(np.asarray(v),
+                                              np.asarray(want_v))
+        except Exception as e:               # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs[:1]
+    runs = n_threads * reps
+    assert plan.executions - exec0 == runs
+    assert plan.chunks_run - chunks0 == runs * (-(-m // 8))
+
+
+def test_dispatch_finalize_matches_execute(rng):
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("eucl", 3, False, 10, 30, 48, arch)
+    plan = get_plan(mod)
+    q, p = _data(rng, "eucl", 10, 30, 48)
+    pending = plan.dispatch(q, p)
+    v1, i1 = plan.finalize(pending)
+    v2, i2 = plan.execute(q, p)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
 
 
 # ---------------------------------------------------------------------------

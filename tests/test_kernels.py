@@ -91,6 +91,32 @@ def test_tiled_reference_equals_dense(m, n, d, k, metric):
                                atol=1e-3)
 
 
+def test_kernel_pad_sentinels_match_shared_helper(rng):
+    """k > N padding: the Pallas wrapper must emit exactly the
+    ``ref.pad_candidates`` sentinels (losing value, index 2**30) instead
+    of hand-rolled constants, so kernel, engine, and tiled reference all
+    agree bit-for-bit on the losing slots."""
+    n, k = 5, 9
+    for metric, largest in (("hamming", False), ("dot", True),
+                            ("eucl", False)):
+        q, p = _data(rng, metric, 4, n, 32)
+        kv, ki = ops.cam_topk(q, p, metric=metric, k=k, largest=largest)
+        # valid slots match the dense oracle at k' = n
+        rv, ri = ref.cam_topk(q, p, metric=metric, k=n, largest=largest)
+        np.testing.assert_array_equal(np.asarray(ki)[:, :n], np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(kv)[:, :n], np.asarray(rv),
+                                   atol=1e-4)
+        # losing slots are exactly pad_candidates' sentinels
+        ev, ei = ref.pad_candidates(rv, ri, k, largest)
+        np.testing.assert_array_equal(np.asarray(ki)[:, n:],
+                                      np.asarray(ei)[:, n:])
+        np.testing.assert_array_equal(np.asarray(kv)[:, n:],
+                                      np.asarray(ev)[:, n:])
+        lose = -np.inf if largest else np.inf
+        assert np.all(np.asarray(kv)[:, n:] == lose)
+        assert np.all(np.asarray(ki)[:, n:] == 2 ** 30)
+
+
 def test_merge_topk_tie_break_lower_index():
     va = jnp.asarray([[1.0, 1.0]])
     ia = jnp.asarray([[4, 9]], dtype=jnp.int32)

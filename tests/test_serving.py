@@ -1,0 +1,209 @@
+"""Continuous-batching CAM search server: coalescing, concurrency,
+result parity, error fan-out, and lifecycle."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArchSpec, compile_fn
+from repro.serving import CamSearchServer
+
+
+def _knn(q, gallery):
+    diff = q.unsqueeze(1).sub(gallery)
+    d = diff.norm(p=2, dim=-1)
+    return d.topk(4, largest=False)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    rng = np.random.default_rng(11)
+    gallery = rng.standard_normal((300, 64)).astype(np.float32)
+    example_q = rng.standard_normal((32, 64)).astype(np.float32)
+    prog = compile_fn(_knn, [example_q, gallery], ArchSpec(rows=32, cols=64))
+    assert prog.engine_plan is not None
+    return prog, gallery
+
+
+def test_search_matches_plan_directly(compiled, rng):
+    prog, gallery = compiled
+    q = rng.standard_normal((7, 64)).astype(np.float32)
+    with CamSearchServer(prog, gallery) as srv:
+        v, i = srv.search(q)
+    dv, di = prog.engine_plan.execute(q, gallery)
+    np.testing.assert_array_equal(i, np.asarray(di))
+    np.testing.assert_array_equal(v, np.asarray(dv))
+
+
+def test_concurrent_clients_coalesce_and_scatter(compiled, rng):
+    """Many small concurrent requests share micro-batches, and every
+    client gets exactly its own rows back."""
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    n_clients, reps = 6, 5
+    queries = {c: [rng.standard_normal((1 + c % 3, 64)).astype(np.float32)
+                   for _ in range(reps)] for c in range(n_clients)}
+    results = {c: [] for c in range(n_clients)}
+    errs = []
+
+    with CamSearchServer(prog, gallery, max_wait_ms=5.0) as srv:
+        def client(c):
+            try:
+                for q in queries[c]:
+                    results[c].append(srv.search(q, timeout=60))
+            except Exception as e:             # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        snap = srv.snapshot()
+
+    assert not errs, errs[:1]
+    for c in range(n_clients):
+        for q, (v, i) in zip(queries[c], results[c]):
+            dv, di = plan.execute(q, gallery)
+            np.testing.assert_array_equal(i, np.asarray(di))
+            np.testing.assert_array_equal(v, np.asarray(dv))
+    total_rows = sum(q.shape[0] for qs in queries.values() for q in qs)
+    assert snap["queries"] == total_rows
+    assert snap["requests"] == n_clients * reps
+    # coalescing must have packed multiple requests per launched batch
+    assert snap["batches"] < snap["requests"]
+    assert snap["avg_batch_fill"] > 1.0
+    assert snap["p50_ms"] > 0
+
+
+def test_oversized_request_spans_chunks(compiled, rng):
+    """A request bigger than the plan micro-batch still comes back whole
+    (plan-side chunking is invisible to the client)."""
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    q = rng.standard_normal((plan.batch * 2 + 3, 64)).astype(np.float32)
+    with CamSearchServer(prog, gallery) as srv:
+        v, i = srv.search(q)
+    assert v.shape == (q.shape[0], 4) and i.shape == (q.shape[0], 4)
+    dv, di = plan.execute(q, gallery)
+    np.testing.assert_array_equal(i, np.asarray(di))
+
+
+def test_submit_returns_waitable_future(compiled, rng):
+    prog, gallery = compiled
+    q = rng.standard_normal((3, 64)).astype(np.float32)
+    with CamSearchServer(prog, gallery) as srv:
+        reqs = [srv.submit(q) for _ in range(4)]
+        for r in reqs:
+            res = r.wait(timeout=60)
+            assert res.error is None
+            assert res.values.shape == (3, 4)
+            assert res.latency_s >= 0
+
+
+def test_bad_request_rejected_at_submit(compiled, rng):
+    """Malformed blocks fail synchronously in submit() — they must never
+    reach a batch where they would poison coalesced innocent requests."""
+    prog, gallery = compiled
+    with CamSearchServer(prog, gallery) as srv:
+        with pytest.raises(ValueError):
+            srv.submit(rng.standard_normal((2, 2, 64)))  # 3-D: rejected
+        with pytest.raises(ValueError):
+            srv.submit(np.ones((2, 17), np.float32))     # wrong feature dim
+        # the server stays healthy for well-formed traffic
+        q = rng.standard_normal((2, 64)).astype(np.float32)
+        v, i = srv.search(q, timeout=60)
+        assert v.shape == (2, 4)
+        assert srv.snapshot()["errors"] == 0
+
+
+def test_runtime_error_fans_out_to_batch_only(compiled, rng):
+    """Execution failures surface through SearchResult.error and leave
+    the batcher/completer alive for later traffic."""
+    prog, gallery = compiled
+    srv = CamSearchServer(prog, gallery)
+    srv.gallery = np.ones((3,), np.float32)   # sabotage: execution raises
+    with srv:
+        req = srv.submit(rng.standard_normal((2, 64)).astype(np.float32))
+        res = req.wait(timeout=60)
+        assert res.error is not None
+        assert srv.snapshot()["errors"] >= 1
+        srv.gallery = jnp.asarray(gallery)
+        v, _ = srv.search(rng.standard_normal((2, 64)).astype(np.float32),
+                          timeout=60)
+        assert v.shape == (2, 4)
+
+
+def test_server_accepts_bare_search_plan(rng):
+    """The server works over a bare SearchPlan (not just a compiled
+    program), and results stay row-aligned when the coalesced batch
+    happens to match the plan's traced query count exactly."""
+    from repro.core import get_plan
+    from test_engine import _data, _sim_module
+
+    m, n, dim, k = 6, 40, 64, 4          # coalesced rows will equal m
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("eucl", k, False, m, n, dim, arch)
+    plan = get_plan(mod)
+    q, p = _data(rng, "eucl", m, n, dim)
+    want_v, want_i = plan.execute(q, p)
+
+    outs = {}
+    with CamSearchServer(plan, p, max_wait_ms=50.0) as srv:
+        def client(c):   # 3 clients x 2 rows coalesce to exactly m=6 rows
+            outs[c] = srv.search(q[2 * c:2 * c + 2], timeout=60)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    got_i = np.concatenate([outs[c][1] for c in range(3)])
+    got_v = np.concatenate([outs[c][0] for c in range(3)])
+    assert got_i.shape == (m, k)
+    np.testing.assert_array_equal(got_i, np.asarray(want_i))
+    np.testing.assert_allclose(got_v, np.asarray(want_v), atol=1e-4)
+
+
+def test_stop_drains_pending_requests(compiled, rng):
+    prog, gallery = compiled
+    srv = CamSearchServer(prog, gallery).start()
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    srv.search(q)
+    srv.stop()
+    with pytest.raises(RuntimeError):
+        srv.submit(q)
+    # restartable
+    srv2 = CamSearchServer(prog, gallery).start()
+    try:
+        v, _ = srv2.search(q)
+        assert v.shape == (2, 4)
+    finally:
+        srv2.stop()
+
+
+def test_server_requires_similarity_program():
+    prog = compile_fn(lambda a, b: a.add(b), [(8, 8), (8, 8)],
+                      ArchSpec(rows=16, cols=16))
+    with pytest.raises(ValueError):
+        CamSearchServer(prog, np.ones((8, 8), np.float32))
+    with pytest.raises(TypeError):
+        CamSearchServer(object(), np.ones((8, 8), np.float32))
+
+
+def test_linger_launches_partial_batches(compiled, rng):
+    """A lone request must not wait for a full batch — the max_wait
+    linger bounds its latency."""
+    prog, gallery = compiled
+    q = rng.standard_normal((1, 64)).astype(np.float32)
+    with CamSearchServer(prog, gallery, max_wait_ms=1.0) as srv:
+        t0 = time.perf_counter()
+        srv.search(q, timeout=60)
+        assert time.perf_counter() - t0 < 30   # bounded, not starved
+        assert srv.snapshot()["batches"] >= 1

@@ -1,0 +1,158 @@
+"""Multi-device sharded search plans: parity with the single-device plan.
+
+Device count is fixed at jax import time, so the multi-device checks run
+in a child process launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; this file doubles
+as that child (``python tests/test_sharded.py --child``).  The in-process
+tests cover the single-device degradation path (shard requests clamp to
+the host's device count).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+DEVICES = 8
+
+
+# ---------------------------------------------------------------------------
+# child: runs under 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+def _child_main() -> int:
+    import jax
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.core import ArchSpec, clear_plan_cache, compile_fn, get_plan
+    from repro.core.executor import execute_module
+
+    assert jax.device_count() == DEVICES, jax.device_count()
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_engine import _data, _sim_module
+
+    rng = np.random.default_rng(7)
+    arch = ArchSpec(rows=16, cols=32)
+
+    # metrics x gallery sizes; 137 and 23 are not divisible by 8 shards
+    # (23 < 8 * tile_rows even leaves some shards fully padded), 64 is
+    # aligned, and n=5 < k exposes the losing-slot sentinels
+    for metric, largest in (("hamming", False), ("dot", False),
+                            ("cos", True), ("eucl", False)):
+        for n in (137, 64, 23, 5):
+            m, dim, k = 9, 100, 6
+            mod = _sim_module(metric, k, largest, m, n, dim, arch)
+            single = get_plan(mod, shards=1)
+            sharded = get_plan(mod, shards=DEVICES)
+            assert sharded is not None and sharded.shards == DEVICES
+            assert single is not sharded, "shard count must split the key"
+            q, p = _data(rng, metric, m, n, dim)
+            sv, si = single.execute(q, p)
+            mv, mi = sharded.execute(q, p)
+            np.testing.assert_array_equal(
+                np.asarray(si), np.asarray(mi),
+                err_msg=f"indices diverged: {metric} n={n}")
+            if metric in ("hamming", "dot"):   # integer metrics: bit-exact
+                np.testing.assert_array_equal(
+                    np.asarray(sv), np.asarray(mv),
+                    err_msg=f"values diverged: {metric} n={n}")
+            else:
+                np.testing.assert_allclose(np.asarray(sv), np.asarray(mv),
+                                           atol=1e-4)
+            # the interpreter stays the semantic oracle for the sharded
+            # path too
+            iv, ii = execute_module(mod, q, p)
+            np.testing.assert_array_equal(np.asarray(mi), np.asarray(ii))
+
+    # shard requests beyond the host clamp (and share the clamped key)
+    mod = _sim_module("eucl", 3, False, 8, 40, 64, arch)
+    clear_plan_cache()
+    p16 = get_plan(mod, shards=16)
+    p8 = get_plan(mod, shards=DEVICES)
+    assert p16.shards == DEVICES and p16 is p8
+
+    # compile_fn front door: shards land on the program's plan
+    def knn(q, g):
+        diff = q.unsqueeze(1).sub(g)
+        return diff.norm(p=2, dim=-1).topk(5, largest=False)
+
+    q = rng.standard_normal((12, 96)).astype(np.float32)
+    g = rng.standard_normal((137, 96)).astype(np.float32)
+    prog1 = compile_fn(knn, [q, g], arch)
+    prog8 = compile_fn(knn, [q, g], arch, shards=DEVICES)
+    assert prog8.shards == DEVICES and prog8.engine_plan.shards == DEVICES
+    v1, i1 = prog1(q, g)
+    v8, i8 = prog8(q, g)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i8))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v8), atol=1e-4)
+
+    # pallas backend cannot shard: explicit error, not silent fallback
+    try:
+        get_plan(mod, backend="pallas", shards=DEVICES)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("pallas + shards>1 should raise")
+
+    print("SHARDED-OK")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# pytest entry points
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_plan_parity_multi_device():
+    """Full multi-device parity matrix under 8 forced host devices."""
+    from repro.launch.mesh import forced_host_devices_env
+
+    env = forced_host_devices_env(DEVICES)
+    env.pop("REPRO_ENGINE_MAX_CHUNK", None)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "SHARDED-OK" in out.stdout, (
+        f"sharded child failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+
+
+def test_shards_clamp_to_single_device():
+    """On a 1-device host a shard request degrades to the unsharded plan
+    (same cache entry as shards=1) and still computes correctly."""
+    import jax
+
+    from repro.core import clear_plan_cache, get_plan, ArchSpec
+    from repro.core.executor import execute_module
+    from test_engine import _data, _sim_module
+
+    if jax.device_count() != 1:
+        pytest.skip("host already multi-device")
+    rng = np.random.default_rng(3)
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("dot", 3, False, 6, 30, 64, arch)
+    clear_plan_cache()
+    # the pallas refusal is host-invariant: it fires on the *requested*
+    # shard count even though this 1-device host would clamp to 1
+    with pytest.raises(ValueError):
+        get_plan(mod, backend="pallas", shards=8)
+    plan = get_plan(mod, shards=8)
+    assert plan.shards == 1
+    assert plan is get_plan(mod, shards=1) and plan is get_plan(mod)
+    q, p = _data(rng, "dot", 6, 30, 64)
+    v, i = plan.execute(q, p)
+    iv, ii = execute_module(mod, q, p)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ii))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(iv))
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+        raise SystemExit(_child_main())
+    raise SystemExit(pytest.main([__file__, "-v"]))
