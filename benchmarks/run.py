@@ -16,8 +16,8 @@ import traceback
 
 from repro.core import plan_cache_stats
 
-from . import (bench_engine, bench_serve, fig7_validation, fig8_dse,
-               fig9_isocapacity, gpu_comparison, roofline_table,
+from . import (bench_engine, bench_packed, bench_serve, fig7_validation,
+               fig8_dse, fig9_isocapacity, gpu_comparison, roofline_table,
                table1_density, table2_knn)
 from .common import banner, save_bench_json
 
@@ -32,6 +32,9 @@ SUITES = [
     # writes the detailed BENCH_engine.json itself; the generic record
     # for this suite lands in BENCH_engine_smoke.json
     ("engine_smoke", bench_engine.run),
+    # packed XOR+popcount vs float hamming plans; detailed record in
+    # BENCH_packed.json (gate REPRO_PACKED_GATE, auto = 4x at dim 1024)
+    ("packed_smoke", bench_packed.run),
     # single- vs multi-device serving (subprocesses with their own
     # XLA_FLAGS); detailed record in BENCH_serve.json
     ("serve_smoke", bench_serve.run),

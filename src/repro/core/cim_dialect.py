@@ -79,16 +79,31 @@ def make_execute(builder: Builder, handle: Value, operands: Sequence[Value],
 
 def make_similarity(block: Block, queries: Value, patterns: Value, *,
                     metric: str, k: int, largest: bool,
+                    care: Optional[Value] = None,
                     extra_attrs: Optional[Dict[str, Any]] = None) -> Operation:
     """``cim.similarity``: fused distance + top-k (paper Fig. 5c).
 
     queries ``(M, D)``, patterns ``(N, D)`` -> values/indices ``(M, k)``.
+
+    ``care`` (TCAM ternary search, hamming only): a per-pattern
+    ``(N, D)`` wildcard mask as a third operand — non-zero cells are
+    compared, zero cells are "don't care" and never mismatch.  This is
+    the TCAM cell's third state surfaced at the ``cim`` level; the
+    search-plan engine lowers it to a bit-packed
+    ``popcount((q ^ p) & care)`` match.
     """
     m = queries.type.shape[0] if queries.type.rank == 2 else 1
     attrs = {"metric": metric, "k": k, "largest": largest}
+    if care is not None:
+        if metric != "hamming":
+            raise IRError("care masks (ternary TCAM search) require "
+                          f"metric='hamming', got {metric!r}")
+        attrs["ternary"] = True
     if extra_attrs:
         attrs.update(extra_attrs)
-    op = Operation("cim.similarity", [queries, patterns],
+    operands = [queries, patterns] if care is None else \
+        [queries, patterns, care]
+    op = Operation("cim.similarity", operands,
                    [TensorType((m, k), queries.type.dtype),
                     TensorType((m, k), "i32")], attrs)
     block.append(op)

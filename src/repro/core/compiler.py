@@ -35,6 +35,12 @@ cached executable instead of re-tracing.  Programs the engine cannot
 express (host ops mixed in, multiple similarities) fall back to the IR
 interpreter transparently; ``execute_interpreted`` always takes the
 op-by-op path.  See ``docs/engine.md``.
+
+Binary/bipolar metrics (hamming / dot / cos) execute **bit-packed** by
+default: the plan stores the gallery as uint32 lanes and searches via
+XOR+popcount — bit-identical results, 32x smaller resident gallery.
+``compile_module(..., pack=False)`` forces the float path (and the
+packing choice is part of the plan-cache key either way).
 """
 
 from __future__ import annotations
@@ -102,7 +108,8 @@ def compile_module(module: Module, arch: ArchSpec, *,
                    unroll_limit: int = 64,
                    value_bits: Optional[int] = None,
                    backend: str = "jnp",
-                   shards: Optional[int] = None) -> CompiledCamProgram:
+                   shards: Optional[int] = None,
+                   pack: Optional[bool] = None) -> CompiledCamProgram:
     if target is not None:
         arch = arch.with_target(target)
     ctx: Dict[str, Any] = {"arch": arch, "value_bits": value_bits}
@@ -136,7 +143,7 @@ def compile_module(module: Module, arch: ArchSpec, *,
     snapshots = (pm1.snapshots + pm2.snapshots[1:] + pm3.snapshots[1:]
                  + pm4.snapshots[1:] + pm5.snapshots[1:])
     engine_plan = get_plan(stages["cim_partitioned"], backend=backend,
-                           shards=shards)
+                           shards=shards, pack=pack)
     return CompiledCamProgram(
         arch=arch, cam_type=cam_type, stages=stages, snapshots=snapshots,
         plans=ctx.get("plans", []),

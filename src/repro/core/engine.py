@@ -39,6 +39,21 @@ order as the interpreted tile ops — bit-identical results for the
 integer metrics (hamming / dot), float-tolerance for eucl / cos — as
 pinned by ``repro.kernels.ref``.
 
+Bit-packed fast path (binary / ternary search)
+----------------------------------------------
+Binary and bipolar metrics (hamming, dot, cos) physically search *bits*:
+the float encoding spends 32 bytes of traffic per byte of information.
+``get_plan(..., pack=...)`` (auto-on for those metrics) packs the
+gallery and each query chunk into uint32 lanes (``kernels.packing``) and
+runs the identical tile tournament over ``popcount(q ^ p)`` — or
+``popcount((q ^ p) & care)`` for TCAM wildcard (ternary) programs, whose
+per-pattern care mask arrives as a third module argument.  Counts are
+the same integers the float path produces, so results stay bit-identical
+while the resident gallery shrinks 32x; column tiling happens in lane
+units (``ceil(dims_per_tile / 32)`` lanes per tile).  The packing choice
+joins the plan-cache key, as does the operand dtype recorded in the
+spec.
+
 Sharded execution (multi-device)
 --------------------------------
 ``get_plan(..., shards=S)`` compiles the same program against a 1-D
@@ -68,6 +83,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
+from ..kernels import packing as kpack
 from ..kernels import ref as kref
 from ..launch.mesh import make_data_mesh
 from .ir import Module
@@ -100,6 +116,65 @@ def _encode(x: jax.Array, metric: str) -> jax.Array:
     if metric in ("dot", "cos", "hamming"):
         return (x > 0).astype(jnp.float32) if metric != "hamming" else x
     return x
+
+
+def _bits(x: jax.Array, metric: str) -> jax.Array:
+    """Cell bits for the packed path (bool array, unpacked).
+
+    ``dot``/``cos`` binarise exactly like :func:`_encode` (``x > 0``),
+    so the packed path sees the same cells as the float path for *any*
+    real input.  ``hamming`` inputs are {0, 1} by the kernel contract
+    (see ``kernels/ref.py``); the bit is ``x != 0``, which coincides
+    with the unpacked mismatch count on contract-conforming data —
+    packed hamming plans *enforce* the contract at dispatch time
+    (:func:`_check_binary_cells`) because collapsing a richer alphabet
+    to bits would silently change results.
+    """
+    return (x > 0) if metric in ("dot", "cos") else (x != 0)
+
+
+def _check_binary_cells(x, what: str) -> None:
+    """Packed-hamming contract guard: values must be {0, 1} / booleans.
+
+    The unpacked path computes a true elementwise mismatch count for
+    *any* alphabet; the packed path only sees bits.  Rather than let
+    bipolar or multi-bit data (e.g. {-1, +1}, value_bits > 1 cells)
+    silently collapse to all-match, reject it here — one host-side pass
+    over data the pack step reads anyway (galleries only on a memo
+    miss).  ``pack=False`` keeps the general float path for such data.
+    """
+    a = np.asarray(x)
+    if a.dtype == np.bool_:
+        return
+    if not bool(((a == 0) | (a == 1)).all()):
+        raise ValueError(
+            f"packed hamming search requires binary {{0, 1}} {what} "
+            f"(got values outside the CAM cell contract); pass "
+            f"pack=False to run the float path on non-binary data")
+
+
+#: metrics with a bit-packed physical search (binary cells, integer counts)
+_PACKABLE_METRICS = ("hamming", "dot", "cos")
+
+
+def _resolve_pack(spec: "SimilaritySpec", pack: Optional[bool]) -> bool:
+    """Effective packing choice for a plan.
+
+    ``None`` (auto) packs every packable metric — the physical search is
+    bit-identical either way, and the packed gallery is 32x smaller —
+    unless ``REPRO_ENGINE_PACK`` is ``off``/``0``.  An explicit
+    ``pack=True`` on an analog metric is a hard error: euclidean
+    distances have no binary cell encoding.
+    """
+    packable = spec.metric in _PACKABLE_METRICS
+    if pack is None:
+        env = os.environ.get("REPRO_ENGINE_PACK", "auto").lower()
+        return packable and env not in ("0", "off", "false")
+    if pack and not packable:
+        raise ValueError(
+            f"packed execution requires a binary/bipolar metric "
+            f"(hamming/dot/cos), got {spec.metric!r}")
+    return bool(pack)
 
 
 def _as_2d(q: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -138,6 +213,14 @@ class SimilaritySpec:
     pattern_arg: int
     out_v_shape: Tuple[int, ...]
     out_i_shape: Tuple[int, ...]
+    #: TCAM ternary search: module-argument position of the per-pattern
+    #: care mask ((N, D), non-zero = compared cell, 0 = wildcard)
+    care_arg: Optional[int] = None
+    #: IR dtypes of the (query, pattern[, care]) operands.  Part of the
+    #: plan key: with packed uint32 operands in play, two programs with
+    #: identical geometry but different operand dtypes must not share an
+    #: executable.
+    in_dtypes: Tuple[str, ...] = ("f32", "f32")
 
 
 _SIM_OPS = {"cim.similarity", "cim.tiled_similarity"}
@@ -183,10 +266,15 @@ def extract_plan_spec(module: Module) -> Optional[SimilaritySpec]:
         if yld.name != "cim.yield" or \
                 [id(v) for v in yld.operands] != [id(r) for r in sim.results]:
             return None
-        q, p = sim.operands
-        if id(q) not in arg_pos or id(p) not in arg_pos:
+        if len(sim.operands) not in (2, 3):
+            return None
+        q, p = sim.operands[0], sim.operands[1]
+        care = sim.operands[2] if len(sim.operands) == 3 else None
+        if any(id(v) not in arg_pos for v in sim.operands):
             return None
         a = sim.attributes
+        if care is not None and a["metric"] != "hamming":
+            return None     # TCAM wildcards only exist for hamming search
         n, dim = p.type.shape[-2], p.type.shape[-1]
         tr = int(a.get("tile_rows", 0)) or n
         dpt = int(a.get("dims_per_tile", 0)) or dim
@@ -201,7 +289,9 @@ def extract_plan_spec(module: Module) -> Optional[SimilaritySpec]:
             m=m, n=n, dim=dim,
             query_arg=arg_pos[id(q)], pattern_arg=arg_pos[id(p)],
             out_v_shape=tuple(sim.results[0].type.shape),
-            out_i_shape=tuple(sim.results[1].type.shape))
+            out_i_shape=tuple(sim.results[1].type.shape),
+            care_arg=None if care is None else arg_pos[id(care)],
+            in_dtypes=tuple(v.type.dtype for v in sim.operands))
 
     if names and names <= _TILE_OPS:
         return _spec_from_unrolled(body, arg_pos)
@@ -242,7 +332,8 @@ def _spec_from_unrolled(body, arg_pos) -> Optional[SimilaritySpec]:
         grid_rows=gr, grid_cols=gc, m=int(fa["m"]), n=n, dim=dim,
         query_arg=arg_pos[id(q)], pattern_arg=arg_pos[id(p)],
         out_v_shape=tuple(fin.results[0].type.shape),
-        out_i_shape=tuple(fin.results[1].type.shape))
+        out_i_shape=tuple(fin.results[1].type.shape),
+        in_dtypes=(q.type.dtype, p.type.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -263,16 +354,39 @@ def _pick_batch(m: int) -> int:
     return min(b, cap)
 
 
-def _tile_tournament(spec: SimilaritySpec, batch: int):
+def _col_dist_fn(spec: SimilaritySpec, packed: bool) -> Callable:
+    """Per-column-tile partial distance: ``f(qc, pr) -> (B, tr) float32``.
+
+    ``pr`` is the tuple of per-tile pattern leaves — ``(patterns,)`` or
+    ``(patterns, care)`` for ternary.  Unpacked leaves are float slabs
+    fed to the oracle arithmetic; packed leaves are uint32 lanes fed to
+    XOR+popcount.  Both produce the *same integers* for the integer
+    metrics (exact in float32), so the tournament downstream is
+    bit-identical whichever representation runs.
+    """
+    phys_metric, _, _ = _metric_values(spec.metric, spec.largest)
+    ternary = spec.care_arg is not None
+    if packed:
+        def f(qc, pr):
+            return kref.packed_distances(qc, pr[0],
+                                         pr[1] if ternary else None)
+        return f
+    if ternary:
+        return lambda qc, pr: kref.ternary_distances(qc, pr[0], pr[1])
+    return lambda qc, pr: kref.distances(qc, pr[0], phys_metric)
+
+
+def _tile_tournament(spec: SimilaritySpec, batch: int, col_dist: Callable):
     """The row-tile tournament shared by the single-device and sharded
     executables: ``scan(qt, pt, roffs)`` runs the column-tile partial-sum
     scan + per-tile top-k + vertical ``merge_topk`` tournament over the
     row tiles in ``pt`` (physical domain), with global row offsets
-    ``roffs``.  One definition keeps the two execution paths bit-identical
-    by construction.
+    ``roffs``.  ``pt`` is a tuple of pattern leaves (see
+    :func:`_col_dist_fn`), each ``(gr, gc, tr, lanes-or-dpt)``.  One
+    definition keeps every execution path bit-identical by construction.
     """
-    metric, k = spec.metric, spec.k
-    phys_metric, _, phys_largest = _metric_values(metric, spec.largest)
+    k = spec.k
+    _, _, phys_largest = _metric_values(spec.metric, spec.largest)
     tr = spec.tile_rows
     n = spec.n
     kk = min(k, tr)
@@ -283,14 +397,14 @@ def _tile_tournament(spec: SimilaritySpec, batch: int):
     n_phys = spec.grid_rows * tr
 
     def tile_topk(qt, pr, roff):
-        """Per-row-tile candidate list (pr: (gc, tr, dpt))."""
+        """Per-row-tile candidate list (pr leaves: (gc, tr, ...))."""
 
-        def col_step(acc, qc_pc):
-            qc, pc = qc_pc              # horizontal merge, oracle arithmetic
-            return acc + kref.distances(qc, pc, phys_metric), None
+        def col_step(acc, xs):
+            qc = xs[0]                  # horizontal merge, oracle arithmetic
+            return acc + col_dist(qc, xs[1:]), None
 
         dist, _ = jax.lax.scan(
-            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, pr))
+            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr))
         gidx = roff + jnp.arange(tr, dtype=jnp.int32)
         dist = jnp.where(gidx[None, :] < n, dist, lose)      # ragged rows
         key = dist if phys_largest else -dist
@@ -303,59 +417,104 @@ def _tile_tournament(spec: SimilaritySpec, batch: int):
     def scan(qt, pt, roffs):
         def row_step(carry, xs):
             cv, ci = carry                                   # vertical merge
-            v, i = tile_topk(qt, *xs)
+            tiles, roff = xs
+            v, i = tile_topk(qt, tiles, roff)
             return kref.merge_topk(cv, ci, v, i, k=k,
                                    largest=phys_largest), None
 
         # tile 0 seeds the tournament (its padded-slot indices are real
         # column positions, which the interpreter also reports), remaining
         # row tiles stream through the scan.
-        init = tile_topk(qt, pt[0], roffs[0])
-        (v, i), _ = jax.lax.scan(row_step, init, (pt[1:], roffs[1:]))
+        init = tile_topk(qt, tuple(x[0] for x in pt), roffs[0])
+        (v, i), _ = jax.lax.scan(
+            row_step, init, (tuple(x[1:] for x in pt), roffs[1:]))
         return v, i
 
     return scan
 
 
-def _layout_queries(q, spec: SimilaritySpec, batch: int):
-    """Encode + pad + split a query chunk into per-column-tile slabs."""
+def _layout_queries(q, spec: SimilaritySpec, batch: int,
+                    packed: bool = False):
+    """Encode + pad + split a query chunk into per-column-tile slabs.
+
+    Packed: each column tile's ``dims_per_tile`` cells pack into their
+    own ``ceil(dpt/32)`` uint32 lanes — tiling in **lane units** — so a
+    tile's partial count covers exactly the same logical dims as the
+    float slab it replaces (tail bits of a tile's last lane are zero in
+    queries, patterns, and care masks alike).
+    """
     gc, dpt, dim = spec.grid_cols, spec.dims_per_tile, spec.dim
+    if packed:
+        qb = _bits(q, spec.metric)
+        qp = jnp.pad(qb, ((0, 0), (0, gc * dpt - dim)))
+        return kpack.pack_bits(qp.reshape(batch, gc, dpt)).transpose(1, 0, 2)
     qe = _encode(q, spec.metric).astype(jnp.float32)
     qp = jnp.pad(qe, ((0, 0), (0, gc * dpt - dim)))
     return qp.reshape(batch, gc, dpt).transpose(1, 0, 2)     # (gc, B, dpt)
 
 
-def _build_scan_executable(spec: SimilaritySpec, batch: int):
+def _lay_patterns(p, care, spec: SimilaritySpec, gr_total: int,
+                  packed: bool) -> Tuple[jax.Array, ...]:
+    """Gallery (+ care mask) laid out as per-subarray tiles.
+
+    Returns the tuple of pattern leaves the tournament scans over:
+    ``(patterns,)`` or ``(patterns, care)``, each
+    ``(gr_total, gc, tile_rows, dpt-or-lanes)``.  ``gr_total`` exceeds
+    ``spec.grid_rows`` only for sharded plans (shard-padding tiles).
+    """
+    tr, dpt, gc = spec.tile_rows, spec.dims_per_tile, spec.grid_cols
+    n, dim = spec.n, spec.dim
+    pad = ((0, gr_total * tr - n), (0, gc * dpt - dim))
+
+    def lay(x):
+        return x.reshape(gr_total, tr, gc, dpt).transpose(0, 2, 1, 3)
+
+    if packed:
+        pe = jnp.pad(_bits(jnp.asarray(p), spec.metric), pad)
+        leaves = [kpack.pack_bits(lay(pe))]
+        if care is not None:
+            ce = jnp.pad(jnp.asarray(care) != 0, pad)
+            leaves.append(kpack.pack_bits(lay(ce)))
+        return tuple(leaves)
+    pe = jnp.pad(_encode(jnp.asarray(p), spec.metric).astype(jnp.float32),
+                 pad)
+    leaves = [lay(pe)]
+    if care is not None:
+        ce = jnp.pad((jnp.asarray(care) != 0).astype(jnp.float32), pad)
+        leaves.append(lay(ce))
+    return tuple(leaves)
+
+
+def _build_scan_executable(spec: SimilaritySpec, batch: int,
+                           packed: bool = False):
     """(prepare_patterns, chunk_fn) for the jnp (reference-tiled) backend.
 
     ``chunk_fn`` mirrors ``kernels.ref.cam_topk_tiled`` exactly — same
     partial-sum order, same stable top-k and tournament merges — but as a
     ``lax.scan`` over the (row_tile, col_tile) grid, so the jaxpr stays
-    small at any grid size and XLA pipelines the tiles.
+    small at any grid size and XLA pipelines the tiles.  With
+    ``packed=True`` the same scan runs over uint32 lane tiles
+    (XOR+popcount partial counts) — identical integers, 1/32nd the
+    resident gallery.
     """
-    metric = spec.metric
-    _, to_logical, _ = _metric_values(metric, spec.largest)
-    tr, dpt, gr, gc = (spec.tile_rows, spec.dims_per_tile,
-                       spec.grid_rows, spec.grid_cols)
-    n, dim = spec.n, spec.dim
-    scan = _tile_tournament(spec, batch)
+    _, to_logical, _ = _metric_values(spec.metric, spec.largest)
+    gr, dim = spec.grid_rows, spec.dim
+    scan = _tile_tournament(spec, batch, _col_dist_fn(spec, packed))
 
-    def prepare(p):
-        pe = _encode(jnp.asarray(p), metric).astype(jnp.float32)
-        pe = jnp.pad(pe, ((0, gr * tr - n), (0, gc * dpt - dim)))
-        # (gr, gc, tr, dpt): one leaf per (row_tile, col_tile) subarray
-        return pe.reshape(gr, tr, gc, dpt).transpose(0, 2, 1, 3)
+    def prepare(p, care=None):
+        return _lay_patterns(p, care, spec, gr, packed)
 
     def chunk_fn(q, pt):
-        qt = _layout_queries(q, spec, batch)
-        roffs = jnp.arange(gr, dtype=jnp.int32) * tr
+        qt = _layout_queries(q, spec, batch, packed)
+        roffs = jnp.arange(gr, dtype=jnp.int32) * spec.tile_rows
         v, i = scan(qt, pt, roffs)
         return to_logical(v, float(dim)), i
 
     return jax.jit(prepare), jax.jit(chunk_fn)
 
 
-def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int):
+def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int,
+                              packed: bool = False):
     """(prepare_patterns, chunk_fn) sharding gallery rows over a device mesh.
 
     Device ``d`` holds row tiles ``[d*tps, (d+1)*tps)`` of the padded
@@ -381,23 +540,20 @@ def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int):
     output to the unsharded one even when ``n < k`` leaves losing slots
     visible.
     """
-    metric = spec.metric
-    _, to_logical, _ = _metric_values(metric, spec.largest)
-    tr, dpt, gr, gc = (spec.tile_rows, spec.dims_per_tile,
-                       spec.grid_rows, spec.grid_cols)
-    n, dim = spec.n, spec.dim
+    _, to_logical, _ = _metric_values(spec.metric, spec.largest)
+    tr, gr = spec.tile_rows, spec.grid_rows
+    dim = spec.dim
     mesh = make_data_mesh(shards)
     tps = -(-gr // shards)          # row tiles per shard
     gr_pad = shards * tps
-    scan = _tile_tournament(spec, batch)
+    scan = _tile_tournament(spec, batch, _col_dist_fn(spec, packed))
 
-    def prepare(p):
-        pe = _encode(jnp.asarray(p), metric).astype(jnp.float32)
-        pe = jnp.pad(pe, ((0, gr_pad * tr - n), (0, gc * dpt - dim)))
-        pt = pe.reshape(gr_pad, tr, gc, dpt).transpose(0, 2, 1, 3)
+    def prepare(p, care=None):
+        pt = _lay_patterns(p, care, spec, gr_pad, packed)
         # lay the row-tile axis out over the mesh once, behind the plan
         # cache — chunk execution never re-shards the gallery
-        return jax.device_put(pt, NamedSharding(mesh, PartitionSpec("data")))
+        sh = NamedSharding(mesh, PartitionSpec("data"))
+        return tuple(jax.device_put(x, sh) for x in pt)
 
     def local_scan(qt, pt):
         """One device's shard of the row-tile tournament (no collectives)."""
@@ -410,7 +566,8 @@ def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int):
         return to_logical(v, float(dim))[None], i[None]   # (1, B, k)
 
     def chunk_fn(q, pt):
-        qt = _layout_queries(q, spec, batch)
+        qt = _layout_queries(q, spec, batch, packed)
+        # PartitionSpec("data") applies prefix-wise to every pattern leaf
         return shard_map(
             local_scan, mesh=mesh,
             in_specs=(PartitionSpec(), PartitionSpec("data")),
@@ -445,32 +602,55 @@ def merge_shard_candidates(values: Any, indices: Any, *, k: int,
             np.take_along_axis(ii, sel, axis=-1))
 
 
-def _build_pallas_executable(spec: SimilaritySpec, batch: int):
-    """(prepare_patterns, chunk_fn) driving the fused Pallas kernel.
+def _build_pallas_executable(spec: SimilaritySpec, batch: int,
+                             packed: bool = False):
+    """(prepare_patterns, chunk_fn) driving the fused Pallas kernels.
 
     Pattern encoding and block padding run once per stored array (hoisted
-    behind the plan cache) instead of on every ``cam_topk`` call.
+    behind the plan cache) instead of on every ``cam_topk`` call.  With
+    ``packed=True`` the packed XOR+popcount kernel runs over uint32
+    lanes (lane-blocked grid) instead of the float MXU decomposition —
+    candidates are bit-identical either way.
     """
     from ..kernels import ops as kops
 
     metric, k = spec.metric, spec.k
     phys_metric, to_logical, phys_largest = _metric_values(metric, spec.largest)
     n, dim = spec.n, spec.dim
+    ternary = spec.care_arg is not None
     k_eff = min(k, n)
     bn = max(8, min(spec.tile_rows, n))
     bd = min(spec.dims_per_tile, dim)
     bm = min(128, max(8, batch))
+    bl = max(1, min(kpack.lanes(bd), kpack.lanes(dim)))  # lane-unit tiling
 
-    def prepare(p):
+    def prepare(p, care=None):
+        if packed:
+            pp = kops.pad_to_blocks(
+                kpack.pack_bits(_bits(jnp.asarray(p), metric)), bn, bl)
+            if care is None:
+                return (pp,)
+            cp = kops.pad_to_blocks(
+                kpack.pack_bits(jnp.asarray(care) != 0), bn, bl)
+            return (pp, cp)
         pe = _encode(jnp.asarray(p), metric).astype(jnp.float32)
-        return kops.pad_to_blocks(pe, bn, bd)
+        return (kops.pad_to_blocks(pe, bn, bd),)
 
     def chunk_fn(q, pp):
-        qe = _encode(q, metric).astype(jnp.float32)
-        qp = kops.pad_to_blocks(qe, bm, bd)
-        v, i = kops.cam_topk_prepadded(
-            qp, pp, metric=phys_metric, k=k_eff, largest=phys_largest,
-            n_valid=n, block_m=bm, block_n=bn, block_d=bd)
+        if packed:
+            qp = kops.pad_to_blocks(
+                kpack.pack_bits(_bits(q, metric)), bm, bl)
+            v, i = kops.cam_topk_packed_prepadded(
+                qp, pp[0], pp[1] if ternary else None, k=k_eff,
+                largest=phys_largest, n_valid=n, block_m=bm, block_n=bn,
+                block_l=bl)
+        else:
+            qe = _encode(q, metric).astype(jnp.float32)
+            qp = kops.pad_to_blocks(qe, bm, bd)
+            v, i = kops.cam_topk_prepadded(
+                qp, pp[0], metric=phys_metric, k=k_eff,
+                largest=phys_largest, n_valid=n, block_m=bm, block_n=bn,
+                block_d=bd)
         v, i = kref.pad_candidates(v[:batch], i[:batch], k, phys_largest)
         return to_logical(v, float(dim)), i
 
@@ -507,9 +687,14 @@ class SearchPlan:
     _prepare: Callable = field(repr=False)
     _chunk_fn: Callable = field(repr=False)
     shards: int = 1
+    #: bit-packed execution (uint32 lanes, XOR+popcount physical search)
+    packed: bool = False
     executions: int = 0
     chunks_run: int = 0
-    _pattern_cache: "OrderedDict[Tuple[int, Tuple[int, ...], str], Tuple[Any, Any]]" = \
+    pattern_hits: int = 0
+    pattern_misses: int = 0
+    pattern_evictions: int = 0
+    _pattern_cache: "OrderedDict[Tuple, Tuple[Any, ...]]" = \
         field(default_factory=OrderedDict, repr=False)
     # plans are shared process-wide (the plan cache hands the same object
     # to every caller), so the memo needs its own lock
@@ -520,9 +705,19 @@ class SearchPlan:
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False)
 
-    _PATTERN_CACHE_SLOTS = 4
+    @staticmethod
+    def _pattern_cache_slots() -> int:
+        """LRU bound on memoised prepared galleries (per plan).
 
-    def _prepared_patterns(self, p_src):
+        Small on purpose: a prepared gallery is the dominant resident
+        cost of a plan (float galleries especially), and a serving
+        process typically cycles between a handful of live galleries.
+        ``REPRO_ENGINE_PATTERN_SLOTS`` tunes it; evictions are counted
+        and surfaced via :func:`plan_cache_stats`.
+        """
+        return max(1, int(os.environ.get("REPRO_ENGINE_PATTERN_SLOTS", "4")))
+
+    def _prepared_patterns(self, p_src, care_src=None):
         """Encode + lay out the stored patterns, memoised per input array.
 
         Only *immutable* inputs (``jax.Array``) are memoised — a numpy
@@ -531,21 +726,47 @@ class SearchPlan:
         inputs are re-prepared on every call (the pre-engine behaviour);
         callers wanting the memo pass the gallery as a jax array.  The
         key keeps a strong reference to the source so its id cannot be
-        recycled while the entry lives.
+        recycled while the entry lives.  Ternary plans key on the
+        (gallery, care-mask) pair — both must be jax arrays to memoise.
         """
-        if not isinstance(p_src, jax.Array):
-            return self._prepare(jnp.asarray(p_src))
-        key = (id(p_src), tuple(p_src.shape), str(p_src.dtype))
+        def ident(x):
+            return (id(x), tuple(x.shape), str(x.dtype))
+
+        def check(p):
+            # guarded before (not inside) the jitted prepare, and only
+            # when actually preparing — memo hits skip it: packing
+            # collapses non-binary alphabets silently, see the guard
+            if self.packed and self.spec.metric == "hamming":
+                _check_binary_cells(p, "patterns")
+
+        memoizable = isinstance(p_src, jax.Array) and (
+            care_src is None or isinstance(care_src, jax.Array))
+        if not memoizable:
+            # still a miss for the telemetry: every call re-prepares, and
+            # the counters must say so (a numpy-gallery workload reading
+            # hits=0/misses=0 would look fully cached while re-packing
+            # the gallery on every search)
+            with self._pattern_lock:
+                self.pattern_misses += 1
+            check(p_src)
+            return self._prepare(jnp.asarray(p_src), care_src)
+        key = (ident(p_src),
+               None if care_src is None else ident(care_src))
         with self._pattern_lock:
             hit = self._pattern_cache.get(key)
             if hit is not None:
+                self.pattern_hits += 1
                 self._pattern_cache.move_to_end(key)
-                return hit[1]
-        prepared = self._prepare(p_src)
+                return hit[-1]
+        check(p_src)
+        prepared = self._prepare(p_src, care_src)
         with self._pattern_lock:
-            self._pattern_cache[key] = (p_src, prepared)
-            while len(self._pattern_cache) > self._PATTERN_CACHE_SLOTS:
+            self.pattern_misses += 1
+            self._pattern_cache[key] = (p_src, care_src, prepared)
+            slots = self._pattern_cache_slots()
+            while len(self._pattern_cache) > slots:
                 self._pattern_cache.popitem(last=False)
+                self.pattern_evictions += 1
         return prepared
 
     def dispatch(self, *inputs) -> "PendingSearch":
@@ -566,9 +787,20 @@ class SearchPlan:
         spec = self.spec
         q_src = inputs[spec.query_arg]
         p_src = inputs[spec.pattern_arg]
+        care_src = None if spec.care_arg is None else inputs[spec.care_arg]
         q2, lead = _as_2d(jnp.asarray(q_src))
         m = q2.shape[0]
-        pp = self._prepared_patterns(p_src)
+        # host-resident queries are validated for free (they are about to
+        # be transferred anyway; the serving layer always passes numpy
+        # rows).  Device-resident jax queries skip the per-dispatch check
+        # — np.asarray on them would block mid-dispatch and defeat the
+        # async dispatch/finalize pipelining; the memo-miss gallery guard
+        # still catches the realistic failure (one encoding pipeline
+        # feeding both operands a non-binary alphabet).
+        if self.packed and spec.metric == "hamming" and \
+                not isinstance(q_src, jax.Array):
+            _check_binary_cells(q_src, "queries")
+        pp = self._prepared_patterns(p_src, care_src)
 
         b = self.batch
         chunks = []
@@ -635,13 +867,29 @@ def _size(shape: Tuple[int, ...]) -> int:
 # Process-wide plan cache
 # ---------------------------------------------------------------------------
 
-_PLAN_CACHE: "OrderedDict[Tuple[SimilaritySpec, str, int, int], SearchPlan]" = \
+_PLAN_CACHE: "OrderedDict[Tuple[SimilaritySpec, str, int, int, bool], SearchPlan]" = \
     OrderedDict()
 #: LRU bound — a DSE sweep over many distinct geometries must not pin
 #: every plan (and its memoised galleries) forever
 _MAX_PLANS = 64
 _CACHE_LOCK = threading.Lock()
-_STATS = {"hits": 0, "misses": 0}
+#: pattern_* entries retain the pattern-memo counters of plans evicted
+#: from the LRU, keeping plan_cache_stats() monotonic across evictions
+_STATS = {"hits": 0, "misses": 0,
+          "pattern_hits": 0, "pattern_misses": 0, "pattern_evictions": 0}
+
+
+def _retire_plan(plan: SearchPlan) -> None:
+    """Fold an evicted plan's pattern counters into the retained stats.
+
+    Caller holds ``_CACHE_LOCK``; lock order ``_CACHE_LOCK`` ->
+    ``_pattern_lock`` is safe (no path acquires them in reverse).
+    """
+    with plan._pattern_lock:
+        _STATS["pattern_hits"] += plan.pattern_hits
+        _STATS["pattern_misses"] += plan.pattern_misses
+        _STATS["pattern_evictions"] += plan.pattern_evictions
+        plan.pattern_hits = plan.pattern_misses = plan.pattern_evictions = 0
 
 
 def _normalize_shards(shards: Optional[int]) -> int:
@@ -655,13 +903,22 @@ def _normalize_shards(shards: Optional[int]) -> int:
 
 def get_plan(module: Module, *, backend: str = "jnp",
              batch: Optional[int] = None,
-             shards: Optional[int] = None) -> Optional[SearchPlan]:
+             shards: Optional[int] = None,
+             pack: Optional[bool] = None) -> Optional[SearchPlan]:
     """Plan for a partitioned module, from the cache when possible.
 
     ``shards > 1`` selects the multi-device executable: gallery rows
     sharded over a ``("data",)`` mesh, cross-device ``merge_topk``
     tournament (see ``_build_sharded_executable``).  The effective shard
     count is part of the plan-cache key.
+
+    ``pack`` selects bit-packed execution (uint32 lanes, XOR+popcount):
+    ``None`` auto-packs binary/bipolar metrics (hamming / dot / cos) —
+    bit-identical results at 1/32nd the gallery footprint — ``False``
+    forces the float path, ``True`` on an analog metric raises.  The
+    effective packing joins the plan-cache key: a packed and an unpacked
+    plan for the same geometry are different executables and must never
+    collide (their prepared operands have different dtypes).
 
     Returns ``None`` when the module is not a pure similarity program
     (callers then fall back to the IR interpreter).
@@ -679,9 +936,15 @@ def get_plan(module: Module, *, backend: str = "jnp",
         # the refusal does not depend on how many devices this host has
         raise ValueError(
             f"sharded plans require the 'jnp' backend, got {backend!r}")
+    packed = _resolve_pack(spec, pack)
+    if spec.care_arg is not None and not packed and backend == "pallas":
+        raise ValueError(
+            "ternary (care-masked) search on the pallas backend requires "
+            "packed execution; pass pack=True (and unset "
+            "REPRO_ENGINE_PACK=off if the kill switch disabled auto-pack)")
     s = _normalize_shards(shards)
     b = batch or _pick_batch(spec.m)
-    key = (spec, backend, b, s)
+    key = (spec, backend, b, s, packed)
     with _CACHE_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -690,30 +953,55 @@ def get_plan(module: Module, *, backend: str = "jnp",
             return plan
         _STATS["misses"] += 1
     if s > 1:
-        prepare, chunk_fn = _build_sharded_executable(spec, b, s)
+        prepare, chunk_fn = _build_sharded_executable(spec, b, s,
+                                                      packed=packed)
     elif backend == "pallas":
-        prepare, chunk_fn = _build_pallas_executable(spec, b)
+        prepare, chunk_fn = _build_pallas_executable(spec, b, packed=packed)
     else:
-        prepare, chunk_fn = _build_scan_executable(spec, b)
+        prepare, chunk_fn = _build_scan_executable(spec, b, packed=packed)
     plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
-                      _prepare=prepare, _chunk_fn=chunk_fn)
+                      packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
     with _CACHE_LOCK:
         # lost-race double insert is harmless but keep one canonical plan
         plan = _PLAN_CACHE.setdefault(key, plan)
         _PLAN_CACHE.move_to_end(key)
         while len(_PLAN_CACHE) > _MAX_PLANS:
-            _PLAN_CACHE.popitem(last=False)
+            _, evicted = _PLAN_CACHE.popitem(last=False)
+            _retire_plan(evicted)
     return plan
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    """Process-wide cache counters (hits / misses / live plans)."""
+    """Process-wide cache counters.
+
+    Plan cache (hits / misses / live plans) plus the pattern-prep memo
+    counters (each plan's memoised prepared-gallery LRU — see
+    ``SearchPlan._prepared_patterns``): ``pattern_hits`` /
+    ``pattern_misses`` / ``pattern_evictions``, summed over the live
+    plans plus the retained totals of plans the 64-slot LRU evicted —
+    monotonic until :func:`clear_plan_cache` resets everything.
+    """
+    # the whole aggregation holds _CACHE_LOCK so a concurrent eviction
+    # cannot move a plan's counters into _STATS between the snapshot and
+    # the live sum (which would transiently undercount); the established
+    # lock order _CACHE_LOCK -> _pattern_lock makes the nesting safe
     with _CACHE_LOCK:
-        return {"hits": _STATS["hits"], "misses": _STATS["misses"],
-                "plans": len(_PLAN_CACHE)}
+        out = {"hits": _STATS["hits"], "misses": _STATS["misses"],
+               "plans": len(_PLAN_CACHE)}
+        ph = _STATS["pattern_hits"]
+        pm = _STATS["pattern_misses"]
+        pe = _STATS["pattern_evictions"]
+        for p in _PLAN_CACHE.values():
+            with p._pattern_lock:
+                ph += p.pattern_hits
+                pm += p.pattern_misses
+                pe += p.pattern_evictions
+    out.update(pattern_hits=ph, pattern_misses=pm, pattern_evictions=pe)
+    return out
 
 
 def clear_plan_cache() -> None:
     with _CACHE_LOCK:
         _PLAN_CACHE.clear()
-        _STATS["hits"] = _STATS["misses"] = 0
+        for k in _STATS:
+            _STATS[k] = 0

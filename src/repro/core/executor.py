@@ -110,17 +110,29 @@ def _host_eval(op: Operation, env: Dict[int, Any]) -> Sequence[Any]:
 
 def build_search_fn(metric: str, k: int, largest: bool, *, tile_rows: int,
                     dims_per_tile: int, backend: str = "jnp"
-                    ) -> Callable[[jax.Array, jax.Array],
-                                  Tuple[jax.Array, jax.Array]]:
-    """Vectorized (query, patterns) -> (values, indices) CAM search."""
+                    ) -> Callable[..., Tuple[jax.Array, jax.Array]]:
+    """Vectorized (query, patterns[, care]) -> (values, indices) CAM search.
+
+    ``care`` (hamming only) is the per-pattern TCAM wildcard mask; the
+    masked search always runs through the tiled jnp reference — it is
+    the unpacked semantic oracle the engine's packed ternary path must
+    match bit-for-bit.
+    """
     phys_metric, to_logical, phys_largest = _metric_values(metric, largest)
 
-    def fn(queries: jax.Array, patterns: jax.Array):
+    def fn(queries: jax.Array, patterns: jax.Array,
+           care: Optional[jax.Array] = None):
         q2, lead = _as_2d(queries)
         qe = _encode(q2, metric)
         pe = _encode(patterns, metric)
         dim = q2.shape[-1]
-        if backend == "pallas":
+        if care is not None:
+            v, i = kref.cam_topk_tiled(qe, pe, metric=phys_metric, k=k,
+                                       largest=phys_largest,
+                                       tile_rows=tile_rows,
+                                       dims_per_tile=dims_per_tile,
+                                       care=care)
+        elif backend == "pallas":
             from ..kernels import ops as kops
             v, i = kops.cam_topk(qe, pe, metric=phys_metric, k=k,
                                  largest=phys_largest,
@@ -182,12 +194,13 @@ def execute_module(module: Module, *inputs, backend: str = "jnp"
             dpt = int(op.attributes.get("dims_per_tile", 0)) or None
             q = env[id(op.operands[0])]
             p = env[id(op.operands[1])]
+            care = env[id(op.operands[2])] if len(op.operands) == 3 else None
             if tr is None:   # unpartitioned: whole-array search
                 n, dim = p.shape[-2], p.shape[-1]
                 tr, dpt = n, dim
             fn = build_search_fn(metric, k, largest, tile_rows=tr,
                                  dims_per_tile=dpt, backend=backend)
-            v, i = fn(q, p)
+            v, i = fn(q, p, care)
             # match declared result shapes (e.g. (k,) for 1-D queries)
             v = v.reshape(op.results[0].type.shape)
             i = i.reshape(op.results[1].type.shape)

@@ -63,7 +63,8 @@ class CompulsoryPartition(Pass):
     # ------------------------------------------------------------------
     def _partition_one(self, blk, sim: Operation, arch: ArchSpec,
                        ctx: Dict[str, Any]) -> None:
-        queries, patterns = sim.operands
+        queries, patterns = sim.operands[0], sim.operands[1]
+        ternary = len(sim.operands) == 3     # TCAM wildcard care mask
         n_rows, dim = patterns.type.shape[-2], patterns.type.shape[-1]
         m = 1
         for d in queries.type.shape[:-1]:
@@ -80,7 +81,15 @@ class CompulsoryPartition(Pass):
                   "cells_per_value": cpv, "m": m, "n": n_rows, "dim": dim}
         ctx.setdefault("partition_info", []).append(dict(common))
 
-        if grid_rows * grid_cols <= self.unroll_limit:
+        if ternary:
+            # the care mask rides every tile; emit the loop-structured op
+            # (the engine packs it per column tile, the interpreter masks
+            # its mismatch counts — Fig.-5d unrolling would triple the
+            # per-tile operand wiring for no semantic gain)
+            common["ternary"] = True
+            new_ops = [Operation("cim.tiled_similarity", list(sim.operands),
+                                 [r.type for r in sim.results], dict(common))]
+        elif grid_rows * grid_cols <= self.unroll_limit:
             new_ops = self._emit_unrolled(sim, queries, patterns, common)
         else:
             new_ops = [Operation("cim.tiled_similarity", [queries, patterns],

@@ -3,6 +3,10 @@
 * `cam_search`      — the paper's primitive: fused distance + block top-k
                       (hamming / dot / L2), `ops.py` wrappers, `ref.py`
                       pure-jnp oracles.
+* `packing`         — uint32 bit-lane packing + popcount for the packed
+                      binary/ternary (TCAM wildcard) fast path:
+                      `hamming = popcount(q ^ p)`, ternary
+                      `popcount((q ^ p) & care)`.
 * `flash_attention` — online-softmax attention forward (the LM framework's
                       hot spot; §Perf cell B's TPU answer).
 

@@ -10,9 +10,15 @@ corrections,
     dot(q, p)     =                              q.p
 
 so one kernel covers all metrics with coefficients (alpha, beta, gamma).
-A GPU-style packed-bit XOR+popcount port would run on the VPU at a fraction
-of MXU throughput — we deliberately do *not* port that algorithm (see
-DESIGN.md "hardware adaptation").
+
+For *binary/ternary* galleries there is additionally a packed-bit
+XOR+popcount kernel (``fused_topk_packed_pallas``) over uint32 lanes
+(``kernels.packing``): 32x less operand traffic, pure integer arithmetic,
+bit-identical candidates.  On TPU it runs on the VPU rather than the MXU —
+slower per *element* but the packed gallery moves 1/32nd the bytes, which
+wins when the search is bandwidth-bound (de Lima et al., CAM-only DNN
+inference).  The engine chooses per metric; analog metrics stay on the
+float kernel.
 
 Kernel structure (mirrors the CAM hierarchy):
 
@@ -42,9 +48,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .packing import popcount32
 from .pallas_compat import CompilerParams as _CompilerParams
 
-__all__ = ["fused_topk_pallas", "distance_pallas", "METRIC_COEFFS"]
+__all__ = ["fused_topk_pallas", "fused_topk_packed_pallas",
+           "distance_pallas", "METRIC_COEFFS"]
 
 #: metric -> (alpha, beta, gamma, q_term, p_term)
 METRIC_COEFFS = {
@@ -63,6 +71,76 @@ def _term(x, kind):
     if kind == "x2":
         return x * x
     return None
+
+
+def _extract_block_topk(dist, ov_ref, oi_ref, *, j, bn: int, k: int,
+                        largest: bool, n_total: int):
+    """Write the block-local top-k of a (bm, bn) distance block.
+
+    Shared by the float (matmul-decomposed) and packed (XOR+popcount)
+    kernels so both emit identical candidate lists — the host-side
+    stable merge relies on that for bit-exact equivalence.
+
+    Single-pass segmented extraction (sort-free).  The block is split
+    into S = min(k, bn) segments of width w; one vectorized pass finds
+    each segment's champion (leftmost max), then each of the k
+    extraction rounds touches only the k champions plus the one
+    segment that lost its champion: O(bn + k*(k + w)) = O(bn + k^2)
+    per block, vs O(k*bn) for the former per-round max+mask over the
+    whole block.  Consumed elements need no mask array: within a
+    segment they are exactly the elements lexicographically >= the
+    last consumed (value, index) pair, so the champion recompute
+    filters on that pair alone.  Ordering (value desc, global index
+    asc) is identical to the former loop, so emitted candidates — and
+    the host-side stable merge — are bit-identical.
+    """
+    bm = dist.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    gidx = col + j * bn
+    # mask padded pattern rows so they never win
+    lose = _NEG_BIG if largest else _POS_BIG
+    dist = jnp.where(gidx < n_total, dist, lose)
+    key = dist if largest else -dist   # key domain: larger wins
+    S = max(1, min(k, bn))
+    w = -(-bn // S)
+    if S * w > bn:
+        key = jnp.pad(key, ((0, 0), (0, S * w - bn)),
+                      constant_values=_NEG_BIG)
+    key3 = key.reshape(bm, S, w)
+    wcol = jax.lax.broadcasted_iota(jnp.int32, (bm, S, w), 2)
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (bm, S), 1)
+    base = j * bn + s_iota * w         # global index of segment starts
+
+    champ_v = jnp.max(key3, axis=2)
+    champ_pos = jnp.min(jnp.where(key3 == champ_v[:, :, None], wcol,
+                                  jnp.int32(2 ** 30)), axis=2)
+    champ_i = base + champ_pos
+
+    wrow = wcol[:, 0, :]               # (bm, w) within-segment offsets
+    for t in range(k):
+        best_v = jnp.max(champ_v, axis=1)
+        tie = champ_v == best_v[:, None]
+        best_i = jnp.min(jnp.where(tie, champ_i, jnp.int32(2 ** 30)),
+                         axis=1)
+        ov_ref[:, t] = best_v if largest else -best_v
+        oi_ref[:, t] = best_i
+        # refill the winning segment's champion
+        win = tie & (champ_i == best_i[:, None])
+        sstar = jnp.min(jnp.where(win, s_iota, jnp.int32(2 ** 30)),
+                        axis=1)
+        seg = jnp.take_along_axis(key3, sstar[:, None, None],
+                                  axis=1)[:, 0, :]
+        seg_gid = j * bn + sstar[:, None] * w + wrow
+        alive = (seg < best_v[:, None]) | \
+            ((seg == best_v[:, None]) & (seg_gid > best_i[:, None]))
+        seg = jnp.where(alive, seg, _NEG_BIG)
+        new_v = jnp.max(seg, axis=1)
+        new_pos = jnp.min(jnp.where(seg == new_v[:, None], wrow,
+                                    jnp.int32(2 ** 30)), axis=1)
+        new_i = j * bn + sstar * w + new_pos
+        refill = s_iota == sstar[:, None]
+        champ_v = jnp.where(refill, new_v[:, None], champ_v)
+        champ_i = jnp.where(refill, new_i[:, None], champ_i)
 
 
 def _fused_kernel(q_ref, p_ref, ov_ref, oi_ref, acc_ref, *, metric: str,
@@ -89,66 +167,8 @@ def _fused_kernel(q_ref, p_ref, ov_ref, oi_ref, acc_ref, *, metric: str,
 
     @pl.when(d == nd - 1)
     def _extract():
-        dist = acc_ref[...]
-        bm = dist.shape[0]
-        col = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
-        gidx = col + j * bn
-        # mask padded pattern rows so they never win
-        lose = _NEG_BIG if largest else _POS_BIG
-        dist = jnp.where(gidx < n_total, dist, lose)
-        # Single-pass segmented extraction (sort-free).  The block is split
-        # into S = min(k, bn) segments of width w; one vectorized pass finds
-        # each segment's champion (leftmost max), then each of the k
-        # extraction rounds touches only the k champions plus the one
-        # segment that lost its champion: O(bn + k*(k + w)) = O(bn + k^2)
-        # per block, vs O(k*bn) for the former per-round max+mask over the
-        # whole block.  Consumed elements need no mask array: within a
-        # segment they are exactly the elements lexicographically >= the
-        # last consumed (value, index) pair, so the champion recompute
-        # filters on that pair alone.  Ordering (value desc, global index
-        # asc) is identical to the former loop, so emitted candidates — and
-        # the host-side stable merge — are bit-identical.
-        key = dist if largest else -dist   # key domain: larger wins
-        S = max(1, min(k, bn))
-        w = -(-bn // S)
-        if S * w > bn:
-            key = jnp.pad(key, ((0, 0), (0, S * w - bn)),
-                          constant_values=_NEG_BIG)
-        key3 = key.reshape(bm, S, w)
-        wcol = jax.lax.broadcasted_iota(jnp.int32, (bm, S, w), 2)
-        s_iota = jax.lax.broadcasted_iota(jnp.int32, (bm, S), 1)
-        base = j * bn + s_iota * w         # global index of segment starts
-
-        champ_v = jnp.max(key3, axis=2)
-        champ_pos = jnp.min(jnp.where(key3 == champ_v[:, :, None], wcol,
-                                      jnp.int32(2 ** 30)), axis=2)
-        champ_i = base + champ_pos
-
-        wrow = wcol[:, 0, :]               # (bm, w) within-segment offsets
-        for t in range(k):
-            best_v = jnp.max(champ_v, axis=1)
-            tie = champ_v == best_v[:, None]
-            best_i = jnp.min(jnp.where(tie, champ_i, jnp.int32(2 ** 30)),
-                             axis=1)
-            ov_ref[:, t] = best_v if largest else -best_v
-            oi_ref[:, t] = best_i
-            # refill the winning segment's champion
-            win = tie & (champ_i == best_i[:, None])
-            sstar = jnp.min(jnp.where(win, s_iota, jnp.int32(2 ** 30)),
-                            axis=1)
-            seg = jnp.take_along_axis(key3, sstar[:, None, None],
-                                      axis=1)[:, 0, :]
-            seg_gid = j * bn + sstar[:, None] * w + wrow
-            alive = (seg < best_v[:, None]) | \
-                ((seg == best_v[:, None]) & (seg_gid > best_i[:, None]))
-            seg = jnp.where(alive, seg, _NEG_BIG)
-            new_v = jnp.max(seg, axis=1)
-            new_pos = jnp.min(jnp.where(seg == new_v[:, None], wrow,
-                                        jnp.int32(2 ** 30)), axis=1)
-            new_i = j * bn + sstar * w + new_pos
-            refill = s_iota == sstar[:, None]
-            champ_v = jnp.where(refill, new_v[:, None], champ_v)
-            champ_i = jnp.where(refill, new_i[:, None], champ_i)
+        _extract_block_topk(acc_ref[...], ov_ref, oi_ref, j=j, bn=bn, k=k,
+                            largest=largest, n_total=n_total)
 
 
 def fused_topk_pallas(queries: jax.Array, patterns: jax.Array, *, metric: str,
@@ -194,6 +214,107 @@ def fused_topk_pallas(queries: jax.Array, patterns: jax.Array, *, metric: str,
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(queries, patterns)
+    return vals[:m], idx[:m]
+
+
+def _packed_accumulate(q, p, care, acc_ref, d_id):
+    """Shared body of the packed kernels: XOR + popcount over one lane
+    block, accumulated into the float32 distance scratch (counts are
+    < 2**24, so the float accumulation is exact integer arithmetic)."""
+
+    @pl.when(d_id == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = q[:, None, :] ^ p[None, :, :]
+    if care is not None:
+        x = x & care[None, :, :]
+    acc_ref[...] += popcount32(x).sum(-1).astype(jnp.float32)
+
+
+def _packed_kernel(q_ref, p_ref, ov_ref, oi_ref, acc_ref, *, k: int,
+                   largest: bool, n_total: int, bn: int, nl: int):
+    """Packed-binary (i, j, l) grid step: hamming = popcount(q ^ p)."""
+    d = pl.program_id(2)
+    j = pl.program_id(1)
+    _packed_accumulate(q_ref[...], p_ref[...], None, acc_ref, d)
+
+    @pl.when(d == nl - 1)
+    def _extract():
+        _extract_block_topk(acc_ref[...], ov_ref, oi_ref, j=j, bn=bn, k=k,
+                            largest=largest, n_total=n_total)
+
+
+def _packed_ternary_kernel(q_ref, p_ref, c_ref, ov_ref, oi_ref, acc_ref, *,
+                           k: int, largest: bool, n_total: int, bn: int,
+                           nl: int):
+    """Packed-ternary grid step: hamming = popcount((q ^ p) & care)."""
+    d = pl.program_id(2)
+    j = pl.program_id(1)
+    _packed_accumulate(q_ref[...], p_ref[...], c_ref[...], acc_ref, d)
+
+    @pl.when(d == nl - 1)
+    def _extract():
+        _extract_block_topk(acc_ref[...], ov_ref, oi_ref, j=j, bn=bn, k=k,
+                            largest=largest, n_total=n_total)
+
+
+def fused_topk_packed_pallas(qbits: jax.Array, pbits: jax.Array,
+                             care: jax.Array | None = None, *, k: int,
+                             largest: bool, block_m: int = 128,
+                             block_n: int = 128, block_l: int = 64,
+                             n_valid: int | None = None,
+                             interpret: bool = True
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Packed binary/ternary variant of :func:`fused_topk_pallas`.
+
+    Operands are uint32 lane arrays (``packing.pack_bits``): ``qbits``
+    (M, L), ``pbits`` (N, L), optional per-pattern TCAM ``care`` mask
+    (N, L).  The distance block is ``popcount(q ^ p [& care])``
+    accumulated over lane blocks — integer arithmetic end to end, so
+    results are bit-identical to the unpacked hamming path (same
+    extraction, same candidate ordering) at 1/32nd the operand traffic.
+    On TPU this path runs on the VPU (bitwise + popcount); it exists
+    for bandwidth-bound packed galleries, whereas the float kernel
+    feeds the MXU — the engine picks per metric/dtype.
+    """
+    m, L = qbits.shape
+    n = pbits.shape[0]
+    n_valid = n if n_valid is None else n_valid
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(k, n))
+    bl = min(block_l, L)
+    nm, nn, nl = -(-m // bm), -(-n // bn), -(-L // bl)
+    k = min(k, n)
+
+    grid = (nm, nn, nl)
+    out_v = jax.ShapeDtypeStruct((nm * bm, nn * k), jnp.float32)
+    out_i = jax.ShapeDtypeStruct((nm * bm, nn * k), jnp.int32)
+
+    q_spec = pl.BlockSpec((bm, bl), lambda i, j, d: (i, d))
+    p_spec = pl.BlockSpec((bn, bl), lambda i, j, d: (j, d))
+    if care is None:
+        kern = functools.partial(_packed_kernel, k=k, largest=largest,
+                                 n_total=n_valid, bn=bn, nl=nl)
+        in_specs, operands = [q_spec, p_spec], (qbits, pbits)
+    else:
+        kern = functools.partial(_packed_ternary_kernel, k=k, largest=largest,
+                                 n_total=n_valid, bn=bn, nl=nl)
+        in_specs, operands = [q_spec, p_spec, p_spec], (qbits, pbits, care)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i, j, d: (i, j)),
+            pl.BlockSpec((bm, k), lambda i, j, d: (i, j)),
+        ],
+        out_shape=[out_v, out_i],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
     return vals[:m], idx[:m]
 
 

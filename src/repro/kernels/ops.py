@@ -19,9 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as kref
-from .cam_search import distance_pallas, fused_topk_pallas
+from .cam_search import (distance_pallas, fused_topk_pallas,
+                         fused_topk_packed_pallas)
 
-__all__ = ["cam_topk", "cam_topk_prepadded", "pad_to_blocks", "cam_exact",
+__all__ = ["cam_topk", "cam_topk_prepadded", "cam_topk_packed",
+           "cam_topk_packed_prepadded", "pad_to_blocks", "cam_exact",
            "cam_range"]
 
 
@@ -68,6 +70,64 @@ def cam_topk_prepadded(qp: jax.Array, pp: jax.Array, *, metric: str, k: int,
     _, sel = jax.lax.top_k(key, k)
     return (jnp.take_along_axis(vals, sel, axis=-1),
             jnp.take_along_axis(idx, sel, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "n_valid",
+                                             "block_m", "block_n", "block_l",
+                                             "interpret"))
+def cam_topk_packed_prepadded(qp: jax.Array, pp: jax.Array,
+                              cp: Optional[jax.Array] = None, *, k: int,
+                              largest: bool, n_valid: int, block_m: int,
+                              block_n: int, block_l: int,
+                              interpret: Optional[bool] = None
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Packed-lane analogue of :func:`cam_topk_prepadded`.
+
+    Operands are uint32 lane arrays already padded to block multiples
+    (zero lanes match in both operands, so padding never contributes a
+    mismatch).  ``cp`` is the optional packed per-pattern TCAM care
+    mask.  Same final stable candidate merge as the float path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    vals, idx = fused_topk_packed_pallas(
+        qp, pp, cp, k=k, largest=largest, block_m=block_m, block_n=block_n,
+        block_l=block_l, n_valid=n_valid, interpret=interpret)
+    key = vals if largest else -vals
+    _, sel = jax.lax.top_k(key, k)
+    return (jnp.take_along_axis(vals, sel, axis=-1),
+            jnp.take_along_axis(idx, sel, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "tile_rows",
+                                             "lanes_per_tile", "block_m",
+                                             "interpret"))
+def cam_topk_packed(qbits: jax.Array, pbits: jax.Array,
+                    care: Optional[jax.Array] = None, *, k: int,
+                    largest: bool = False, tile_rows: int = 128,
+                    lanes_per_tile: int = 64, block_m: int = 128,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused best-match search over bit-packed binary/ternary operands.
+
+    ``qbits`` (M, L) / ``pbits`` (N, L) are ``packing.pack_bits`` lanes;
+    ``care`` (N, L) marks TCAM cared cells (wildcard = 0).  Results are
+    bit-identical to ``cam_topk(metric="hamming")`` on the unpacked
+    cells (counts are the same integers, candidate order is the same).
+    """
+    m, L = qbits.shape
+    n = pbits.shape[0]
+    k_eff = min(k, n)
+    bn = max(8, min(tile_rows, n))
+    bl = min(lanes_per_tile, L)
+    bm = min(block_m, max(8, m))
+    qp = pad_to_blocks(qbits, bm, bl)
+    pp = pad_to_blocks(pbits, bn, bl)
+    cp = None if care is None else pad_to_blocks(care, bn, bl)
+    vals, idx = cam_topk_packed_prepadded(
+        qp, pp, cp, k=k_eff, largest=largest, n_valid=n, block_m=bm,
+        block_n=bn, block_l=bl, interpret=interpret)
+    return kref.pad_candidates(vals[:m], idx[:m], k, largest)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "k", "largest",

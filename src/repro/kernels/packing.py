@@ -1,0 +1,118 @@
+"""Bit-packing for the binary/ternary CAM fast path.
+
+CAM arrays match *cells*, not floats: BCAM rows are bit vectors, TCAM
+rows are bit vectors with per-cell "don't care" wildcards.  Encoding a
+binary / bipolar workload as dense float32 (one 4-byte float per cell)
+pays 32x the memory traffic the data needs — and match throughput on
+word-packed patterns is bandwidth-bound (de Lima et al., *Full-Stack
+Optimization for CAM-Only DNN Inference*; Li et al., analog CAMs).
+
+This module packs logical cells into uint32 **lanes** (32 cells per
+lane, LSB-first: cell ``j`` of a lane group lands in bit ``j`` of lane
+``j // 32``) so a Hamming search becomes ``popcount(q ^ p)`` and a TCAM
+wildcard search becomes ``popcount((q ^ p) & care)`` — pure integer
+ops, bit-identical to the unpacked mismatch count.
+
+Tail handling: a dimension that is not a multiple of 32 leaves the top
+bits of the last lane zero in *both* operands (and zero in the care
+mask), so padded bits never contribute to a match count.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LANE_BITS", "lanes", "pack_bits", "pack_bipolar", "unpack_bits",
+           "popcount32", "popcount32_lut"]
+
+#: cells per packed lane
+LANE_BITS = 32
+
+# SWAR popcount masks (Hacker's Delight fig. 5-2), kept as numpy scalars
+# so the jitted kernels see weakly-typed uint32 constants
+_M1 = np.uint32(0x55555555)
+_M2 = np.uint32(0x33333333)
+_M4 = np.uint32(0x0F0F0F0F)
+_M6 = np.uint32(0x0000003F)
+
+#: byte -> popcount table for the LUT variant
+_POP8 = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None],
+                      axis=1).sum(1).astype(np.int32)
+
+
+def lanes(dim: int) -> int:
+    """uint32 lanes needed for ``dim`` cells: ``ceil(dim / 32)``."""
+    return -(-int(dim) // LANE_BITS)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack cells along the last axis into uint32 lanes (LSB-first).
+
+    Any dtype is accepted; a cell is set iff the element is non-zero
+    (bipolar data wants :func:`pack_bipolar`, which thresholds at
+    ``> 0`` instead).  ``(..., dim)`` -> ``(..., lanes(dim))``; tail
+    bits of the last lane are zero.
+    """
+    b = jnp.asarray(bits)
+    if b.dtype != jnp.bool_:
+        b = b != 0
+    dim = b.shape[-1]
+    nl = lanes(dim)
+    pad = nl * LANE_BITS - dim
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    u = b.reshape(b.shape[:-1] + (nl, LANE_BITS)).astype(jnp.uint32)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    return (u << shifts).sum(-1, dtype=jnp.uint32)
+
+
+def pack_bipolar(x: jax.Array) -> jax.Array:
+    """Sign-pack bipolar data: cell set iff the element is positive.
+
+    Matches the engine's float encoding for ``dot``/``cos`` — both
+    binarise via ``x > 0`` — so the packed and unpacked paths see the
+    same cells for *any* real-valued input.
+    """
+    return pack_bits(jnp.asarray(x) > 0)
+
+
+def unpack_bits(packed: jax.Array, dim: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: ``(..., lanes)`` -> ``(..., dim)``
+    as uint8 in {0, 1} (tail lanes sliced off)."""
+    u = jnp.asarray(packed).astype(jnp.uint32)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (u[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(u.shape[:-1] + (u.shape[-1] * LANE_BITS,))
+    return bits[..., :dim].astype(jnp.uint8)
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """Per-element population count of a uint32 array (SWAR, branch-free).
+
+    The classic shift-add reduction — 12 integer vector ops, no lookup
+    traffic — used by the packed kernels in both the jnp and Pallas
+    execution paths.  Returns int32.
+    """
+    x = jnp.asarray(x).astype(jnp.uint32)
+    x = x - ((x >> 1) & _M1)
+    x = (x & _M2) + ((x >> 2) & _M2)
+    x = (x + (x >> 4)) & _M4
+    x = x + (x >> 8)
+    x = x + (x >> 16)
+    return (x & _M6).astype(jnp.int32)
+
+
+def popcount32_lut(x: jax.Array) -> jax.Array:
+    """Lookup-table popcount (four byte-table gathers per lane).
+
+    Kept alongside the SWAR variant because gather-friendly substrates
+    (CPU interpret paths, scalar cores) can prefer it; both must agree
+    bit-for-bit (pinned by tests).  Returns int32.
+    """
+    x = jnp.asarray(x).astype(jnp.uint32)
+    t = jnp.asarray(_POP8)
+    mask = jnp.uint32(0xFF)
+    return (t[x & mask] + t[(x >> 8) & mask]
+            + t[(x >> 16) & mask] + t[(x >> 24) & mask])

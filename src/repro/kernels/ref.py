@@ -34,8 +34,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["distances", "cam_topk", "cam_exact", "cam_range",
-           "cam_topk_tiled", "merge_topk", "pad_candidates"]
+__all__ = ["distances", "packed_distances", "ternary_distances", "cam_topk",
+           "cam_topk_ternary", "cam_exact", "cam_range", "cam_topk_tiled",
+           "merge_topk", "pad_candidates"]
 
 
 def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array:
@@ -59,6 +60,41 @@ def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array
     raise ValueError(f"unknown metric {metric!r}")
 
 
+def packed_distances(qbits: jax.Array, pbits: jax.Array,
+                     care: jax.Array | None = None) -> jax.Array:
+    """(M, N) Hamming distances on bit-packed uint32 operands.
+
+    ``qbits``: (M, L), ``pbits``: (N, L) — :func:`packing.pack_bits`
+    lanes.  ``hamming = popcount(q ^ p)``; with a packed per-pattern
+    ``care`` mask (N, L) the TCAM wildcard search is
+    ``popcount((q ^ p) & care)`` — cells whose care bit is clear can
+    never mismatch.  Bit-identical (as integers) to
+    :func:`distances(metric="hamming")` / :func:`ternary_distances` on
+    the unpacked cells, because both count exactly the same mismatching
+    positions.  Returned as float32 to match the unpacked kernels
+    (counts are < 2**24, so the conversion is exact).
+    """
+    from .packing import popcount32
+
+    x = qbits[:, None, :] ^ pbits[None, :, :]
+    if care is not None:
+        x = x & care[None, :, :]
+    return popcount32(x).sum(-1).astype(jnp.float32)
+
+
+def ternary_distances(queries: jax.Array, patterns: jax.Array,
+                      care: jax.Array) -> jax.Array:
+    """(M, N) TCAM wildcard Hamming distance on *unpacked* cells.
+
+    ``care``: (N, D) per-pattern mask — non-zero entries are compared,
+    zero entries are "don't care" wildcards that never mismatch.  This
+    is the semantic oracle the packed ternary kernels must match
+    bit-for-bit (integer counts).
+    """
+    mism = queries[:, None, :] != patterns[None, :, :]
+    return (mism & (care[None, :, :] != 0)).sum(-1).astype(jnp.float32)
+
+
 def _topk_with_ties(scores: jax.Array, k: int, largest: bool
                     ) -> Tuple[jax.Array, jax.Array]:
     """Deterministic top-k: ties broken toward the lower index.
@@ -78,6 +114,15 @@ def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str,
              k: int, largest: bool) -> Tuple[jax.Array, jax.Array]:
     """Best-match search: top-k rows of ``patterns`` per query."""
     d = distances(queries, patterns, metric)
+    return _topk_with_ties(d, k, largest)
+
+
+@partial(jax.jit, static_argnames=("k", "largest"))
+def cam_topk_ternary(queries: jax.Array, patterns: jax.Array,
+                     care: jax.Array, *, k: int, largest: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """TCAM wildcard best-match: top-k by care-masked Hamming distance."""
+    d = ternary_distances(queries, patterns, care)
     return _topk_with_ties(d, k, largest)
 
 
@@ -128,7 +173,8 @@ def merge_topk(values_a: jax.Array, idx_a: jax.Array, values_b: jax.Array,
 
 
 def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
-                   k: int, largest: bool, tile_rows: int, dims_per_tile: int
+                   k: int, largest: bool, tile_rows: int, dims_per_tile: int,
+                   care: jax.Array | None = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Reference for the *tiled* (partitioned) execution path.
 
@@ -136,6 +182,11 @@ def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
     accumulation of per-column-tile partial distances, per-row-tile top-k,
     then vertical tournament merge with global index offsets.  Must equal
     :func:`cam_topk` for additive metrics (hamming / dot / eucl).
+
+    ``care`` (hamming only): per-pattern (N, D) TCAM wildcard mask —
+    zero entries never mismatch (see :func:`ternary_distances`).  The
+    mask is additive over column tiles like the plain mismatch count, so
+    the tiled result equals the dense oracle bit-for-bit.
     """
     m, dim = queries.shape
     n = patterns.shape[0]
@@ -146,8 +197,16 @@ def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
     fill = 0.0
     qp = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pad_d)))
     pp = jnp.pad(patterns.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    if care is not None:
+        if metric != "hamming":
+            raise ValueError("care masks require metric='hamming'")
+        cp = jnp.pad((jnp.asarray(care) != 0).astype(jnp.float32),
+                     ((0, pad_n), (0, pad_d)))
 
-    def col_tile(ct, q_t, p_t):
+    def col_tile(ct, q_t, p_t, c_t=None):
+        if c_t is not None:
+            return ((q_t[:, None, :] != p_t[None, :, :])
+                    & (c_t[None, :, :] != 0)).sum(-1).astype(jnp.float32)
         if metric == "hamming":
             return (q_t[:, None, :] != p_t[None, :, :]).sum(-1).astype(jnp.float32)
         if metric == "dot":
@@ -161,10 +220,13 @@ def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
     acc_v = acc_i = None
     for r in range(gr):
         p_rows = pp[r * tile_rows:(r + 1) * tile_rows]
+        c_rows = cp[r * tile_rows:(r + 1) * tile_rows] if care is not None \
+            else None
         dist = None
         for c in range(gc):
             sl = slice(c * dims_per_tile, (c + 1) * dims_per_tile)
-            part = col_tile(c, qp[:, sl], p_rows[:, sl])
+            part = col_tile(c, qp[:, sl], p_rows[:, sl],
+                            None if c_rows is None else c_rows[:, sl])
             dist = part if dist is None else dist + part   # horizontal merge
         # mask padded rows so they never win
         if r == gr - 1 and pad_n:

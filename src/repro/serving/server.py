@@ -39,6 +39,12 @@ carrying 61 share a 64-row micro-batch; an oversized request simply
 spans chunks inside the plan (which micro-batches internally).
 Results are identical to calling the plan directly — batching changes
 scheduling, never arithmetic.
+
+Ternary (TCAM wildcard) programs are first-class served workloads:
+construct the server with ``care_mask=...`` and every batch carries the
+per-pattern wildcard mask alongside the gallery (both memoised behind
+the plan's pattern cache; binary/bipolar plans additionally run
+bit-packed — see the packed section of ``docs/engine.md``).
 """
 
 from __future__ import annotations
@@ -103,6 +109,12 @@ class CamSearchServer:
         The stored patterns.  Converted to a jax array once so the
         plan's pattern memo (and, for sharded plans, the device layout)
         is hit by every batch.
+    care_mask:
+        Per-pattern TCAM wildcard mask ``(n, dim)`` — required when the
+        plan's program is ternary (a care-mask operand in its spec),
+        rejected otherwise.  Non-zero cells are compared, zero cells
+        never mismatch; one-shot-learning galleries store the bits the
+        class exemplars agree on and wildcard the rest.
     max_wait_ms:
         Linger: how long the batcher waits for more rows after the
         first pending request before launching a partial batch.
@@ -116,6 +128,7 @@ class CamSearchServer:
     """
 
     def __init__(self, program: Any, gallery: np.ndarray, *,
+                 care_mask: Optional[np.ndarray] = None,
                  max_wait_ms: float = 2.0, max_batch: Optional[int] = None,
                  max_inflight: int = 4):
         if isinstance(program, CompiledCamProgram):
@@ -132,6 +145,23 @@ class CamSearchServer:
         import jax.numpy as jnp
         self.plan = plan
         self.gallery = jnp.asarray(gallery)
+        if plan.spec.care_arg is not None:
+            if care_mask is None:
+                raise ValueError(
+                    "ternary plan (TCAM wildcard search) needs a care_mask")
+            care = np.asarray(care_mask)
+            if care.shape != (plan.spec.n, plan.spec.dim):
+                raise ValueError(
+                    f"care_mask shape {care.shape} != gallery geometry "
+                    f"({plan.spec.n}, {plan.spec.dim})")
+            # jax array for the same reason as the gallery: the plan's
+            # pattern memo keys on the (gallery, care) pair of arrays
+            self.care = jnp.asarray(care)
+        elif care_mask is not None:
+            raise ValueError("care_mask given but the plan's program has "
+                             "no care operand (not a ternary search)")
+        else:
+            self.care = None
         self.max_wait = max_wait_ms / 1e3
         self.max_batch = int(max_batch or plan.batch)
         self._queue: "queue.Queue[Optional[SearchRequest]]" = queue.Queue()
@@ -277,10 +307,13 @@ class CamSearchServer:
         try:
             rows = np.concatenate([r.queries for r in batch], axis=0)
             spec = self.plan.spec
-            inputs: List[Any] = \
-                [None] * (max(spec.query_arg, spec.pattern_arg) + 1)
+            n_args = max(spec.query_arg, spec.pattern_arg,
+                         -1 if spec.care_arg is None else spec.care_arg) + 1
+            inputs: List[Any] = [None] * n_args
             inputs[spec.query_arg] = rows
             inputs[spec.pattern_arg] = self.gallery
+            if spec.care_arg is not None:
+                inputs[spec.care_arg] = self.care
             pending = self.plan.dispatch(*inputs)
         except BaseException as e:          # noqa: BLE001 — fanned out
             for r in batch:
@@ -347,6 +380,8 @@ class CamSearchServer:
                                           int(len(lat) * 0.95))]
         out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
                        "backend": self.plan.backend,
+                       "packed": self.plan.packed,
+                       "ternary": self.plan.spec.care_arg is not None,
                        "metric": self.plan.spec.metric, "k": self.plan.spec.k,
                        "executions": self.plan.executions,
                        "chunks_run": self.plan.chunks_run}

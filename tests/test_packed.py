@@ -1,0 +1,600 @@
+"""Bit-packed TCAM fast path: pack/unpack round-trips, popcount parity,
+packed-vs-unpacked plan bit-parity (incl. n < k sentinels and forced
+8-host-device sharding), ternary wildcard semantics, plan-key isolation
+(packing axis + operand dtype), pattern-memo LRU counters, and serving
+with care masks.
+
+This file doubles as the multi-device child (``--child``), mirroring
+``test_sharded.py``: device count is fixed at jax import, so the sharded
+packed parity matrix runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st  # skips cleanly without hypothesis
+
+DEVICES = 8
+
+
+def _ternary_module(m, n, dim, k, arch, care_dtype="i8"):
+    """Hand-built TCAM wildcard program: cim.similarity with a care-mask
+    operand, run through the partition pass (mirrors test_engine._sim_module)."""
+    from repro.core import Builder, Module, PassManager, TensorType
+    from repro.core.cim_dialect import (make_acquire, make_execute,
+                                        make_release, make_similarity,
+                                        make_yield)
+    from repro.core.passes import CompulsoryPartition
+
+    mod = Module("tcam", [TensorType((m, dim)), TensorType((n, dim)),
+                          TensorType((n, dim), care_dtype)])
+    q, p, c = mod.arguments
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, [q, p, c],
+                       [TensorType((m, k)), TensorType((m, k), "i32")])
+    blk = exe.region().block()
+    sim = make_similarity(blk, q, p, metric="hamming", k=k, largest=False,
+                          care=c)
+    make_yield(blk, sim.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition())
+    return pm.run(mod, {"arch": arch})
+
+
+def _ternary_data(rng, m, n, dim, care_p=0.3):
+    q = (rng.random((m, dim)) > 0.5).astype(np.float32)
+    p = (rng.random((n, dim)) > 0.5).astype(np.float32)
+    care = (rng.random((n, dim)) > care_p).astype(np.int8)
+    return q, p, care
+
+
+# ---------------------------------------------------------------------------
+# packing primitives
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dim", [1, 31, 32, 33, 64, 100, 257])
+def test_pack_roundtrip(dim, rng):
+    """unpack(pack(x)) == x, including dim % 32 != 0 tail lanes."""
+    from repro.kernels import packing as kpack
+
+    b = (rng.random((5, dim)) > 0.5).astype(np.float32)
+    packed = kpack.pack_bits(b)
+    assert packed.shape == (5, kpack.lanes(dim))
+    assert packed.dtype == jnp.uint32
+    assert np.array_equal(np.asarray(kpack.unpack_bits(packed, dim)),
+                          b.astype(np.uint8))
+
+
+def test_pack_tail_bits_are_zero(rng):
+    """Bits past dim in the last lane must be zero — both operands pad
+    identically, so padding can never contribute a mismatch."""
+    from repro.kernels import packing as kpack
+
+    dim = 40                    # 8 tail bits used in lane 1
+    b = np.ones((3, dim), np.float32)
+    packed = np.asarray(kpack.pack_bits(b))
+    assert np.all(packed[:, 1] == np.uint32(0xFF))      # only 8 low bits set
+
+
+@given(bits=st.lists(st.booleans(), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_pack_roundtrip_property(bits):
+    from repro.kernels import packing as kpack
+
+    b = np.asarray(bits, dtype=bool)[None, :]
+    rt = np.asarray(kpack.unpack_bits(kpack.pack_bits(b), b.shape[-1]))
+    assert np.array_equal(rt.astype(bool), b)
+
+
+def test_popcount_swar_lut_python_agree(rng):
+    from repro.kernels import packing as kpack
+
+    x = rng.integers(0, 2 ** 32, size=(2048,), dtype=np.uint32)
+    x[:4] = [0, 1, 2 ** 32 - 1, 0x80000000]             # edge words
+    want = np.array([bin(int(v)).count("1") for v in x], dtype=np.int32)
+    assert np.array_equal(np.asarray(kpack.popcount32(x)), want)
+    assert np.array_equal(np.asarray(kpack.popcount32_lut(x)), want)
+
+
+def test_pack_bipolar_matches_float_encoding(rng):
+    """Sign packing thresholds at > 0, exactly like the engine's float
+    encoding for dot/cos — any real input produces the same cells."""
+    from repro.kernels import packing as kpack
+
+    x = rng.standard_normal((4, 70)).astype(np.float32)
+    x[0, :3] = [0.0, -0.0, 1e-30]
+    bits = np.asarray(kpack.unpack_bits(kpack.pack_bipolar(x), 70))
+    assert np.array_equal(bits, (x > 0).astype(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# packed reference kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dim", [33, 100])
+def test_packed_distances_match_unpacked(dim, rng):
+    from repro.kernels import packing as kpack
+    from repro.kernels import ref as kref
+
+    q = (rng.random((7, dim)) > 0.5).astype(np.float32)
+    p = (rng.random((23, dim)) > 0.5).astype(np.float32)
+    dp = np.asarray(kref.packed_distances(kpack.pack_bits(q),
+                                          kpack.pack_bits(p)))
+    assert np.array_equal(dp, np.asarray(kref.distances(q, p, "hamming")))
+
+
+def test_ternary_distances_wildcards(rng):
+    from repro.kernels import packing as kpack
+    from repro.kernels import ref as kref
+
+    q, p, care = _ternary_data(rng, 6, 19, 77)
+    dt = np.asarray(kref.ternary_distances(q, p, care))
+    # oracle by hand
+    want = ((q[:, None, :] != p[None, :, :]) & (care[None] != 0)).sum(-1)
+    assert np.array_equal(dt, want.astype(np.float32))
+    # full care mask degenerates to plain hamming
+    full = np.asarray(kref.ternary_distances(q, p, np.ones_like(care)))
+    assert np.array_equal(full, np.asarray(kref.distances(q, p, "hamming")))
+    # packed ternary == unpacked ternary
+    dtp = np.asarray(kref.packed_distances(
+        kpack.pack_bits(q), kpack.pack_bits(p), kpack.pack_bits(care)))
+    assert np.array_equal(dtp, dt)
+
+
+def test_ops_cam_topk_packed_matches_float_path(rng):
+    """Packed Pallas kernel == float Pallas kernel == dense oracle,
+    including k > N sentinel padding."""
+    from repro.kernels import ops as kops
+    from repro.kernels import packing as kpack
+    from repro.kernels import ref as kref
+
+    q = (rng.random((7, 100)) > 0.5).astype(np.float32)
+    p = (rng.random((23, 100)) > 0.5).astype(np.float32)
+    qb, pb = kpack.pack_bits(q), kpack.pack_bits(p)
+    for k, n in ((5, 23), (6, 3)):      # n=3 < k exposes sentinels
+        fv, fi = kops.cam_topk(q, p[:n], metric="hamming", k=k,
+                               largest=False, tile_rows=8, dims_per_tile=64)
+        pv, pi = kops.cam_topk_packed(qb, pb[:n], k=k, largest=False,
+                                      tile_rows=8, lanes_per_tile=2)
+        np.testing.assert_array_equal(np.asarray(fv), np.asarray(pv))
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(pi))
+
+
+# ---------------------------------------------------------------------------
+# engine: packed plans == unpacked plans == interpreter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric,largest,n", [("hamming", False, 37),
+                                              ("dot", False, 5),
+                                              ("cos", True, 64)])
+def test_packed_plan_matches_unpacked_and_interpreter(metric, largest, n, rng):
+    from repro.core import ArchSpec, get_plan
+    from repro.core.executor import execute_module
+    from test_engine import _data, _sim_module
+
+    m, dim, k = 9, 100, 6                   # n=5 < k exposes sentinel slots
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module(metric, k, largest, m, n, dim, arch)
+    packed = get_plan(mod)                  # auto-pack for binary metrics
+    unpacked = get_plan(mod, pack=False)
+    assert packed is not None and packed.packed
+    assert unpacked is not None and not unpacked.packed
+    assert packed is not unpacked, "packing must split the plan key"
+    q, p = _data(rng, metric, m, n, dim)
+    pv, pi = packed.execute(q, p)
+    uv, ui = unpacked.execute(q, p)
+    iv, ii = execute_module(mod, q, p)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(ui))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(uv))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(ii))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(iv))
+
+
+@pytest.mark.parametrize("k", [1, 4, 11])
+def test_packed_parity_across_k(k, rng):
+    from repro.core import ArchSpec, get_plan
+    from test_engine import _data, _sim_module
+
+    m, n, dim = 5, 29, 64
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    q, p = _data(rng, "hamming", m, n, dim)
+    pv, pi = get_plan(mod).execute(q, p)
+    uv, ui = get_plan(mod, pack=False).execute(q, p)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(uv))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(ui))
+
+
+def test_eucl_never_packs_and_explicit_pack_raises():
+    from repro.core import ArchSpec, get_plan
+    from test_engine import _sim_module
+
+    mod = _sim_module("eucl", 3, False, 5, 20, 32, ArchSpec(rows=16, cols=32))
+    assert not get_plan(mod).packed
+    with pytest.raises(ValueError):
+        get_plan(mod, pack=True)
+
+
+def test_packed_hamming_rejects_non_binary_data(rng):
+    """The unpacked path counts mismatches over any alphabet; the packed
+    path only sees bits.  Rather than silently collapse {-1,+1} or
+    multi-bit cells to all-match, the packed hamming plan rejects
+    non-binary operands (pack=False keeps the general float path)."""
+    from repro.core import ArchSpec, get_plan
+    from repro.core.executor import execute_module
+    from test_engine import _data, _sim_module
+
+    m, n, dim, k = 5, 20, 64, 3
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    plan = get_plan(mod)
+    bipolar_q = np.sign(rng.standard_normal((m, dim))).astype(np.float32)
+    bipolar_p = np.sign(rng.standard_normal((n, dim))).astype(np.float32)
+    with pytest.raises(ValueError, match="binary"):
+        plan.execute(bipolar_q, bipolar_p)
+    binary_q, _ = _data(rng, "hamming", m, n, dim)
+    with pytest.raises(ValueError, match="binary"):
+        plan.execute(binary_q, bipolar_p)       # gallery alone non-binary
+    # pack=False still handles the richer alphabet, matching the oracle
+    unpacked = get_plan(mod, pack=False)
+    v, i = unpacked.execute(bipolar_q, bipolar_p)
+    iv, ii = execute_module(mod, bipolar_q, bipolar_p)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ii))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(iv))
+    # boolean operands are inside the contract
+    bq, bp = _data(rng, "hamming", m, n, dim)
+    plan.execute(bq.astype(bool), bp.astype(bool))
+
+
+def test_pack_env_kill_switch(monkeypatch):
+    from repro.core import ArchSpec, clear_plan_cache, get_plan
+    from test_engine import _sim_module
+
+    clear_plan_cache()
+    mod = _sim_module("hamming", 3, False, 5, 20, 32, ArchSpec(rows=16, cols=32))
+    monkeypatch.setenv("REPRO_ENGINE_PACK", "off")
+    assert not get_plan(mod).packed
+    monkeypatch.delenv("REPRO_ENGINE_PACK")
+    assert get_plan(mod).packed
+
+
+def test_operand_dtype_splits_plan_key():
+    """Regression (packed uint32 operands make this a correctness
+    requirement): same geometry, different operand dtype -> different
+    spec -> different plan."""
+    from repro.core import (ArchSpec, Builder, Module, PassManager,
+                            TensorType, clear_plan_cache, get_plan)
+    from repro.core.cim_dialect import (make_acquire, make_execute,
+                                        make_release, make_similarity,
+                                        make_yield)
+    from repro.core.passes import CompulsoryPartition
+
+    def build(dtype):
+        mod = Module("sim", [TensorType((4, 64), dtype),
+                             TensorType((16, 64), dtype)])
+        q, p = mod.arguments
+        b = Builder(mod.body)
+        dev = make_acquire(b)
+        exe = make_execute(b, dev.result, [q, p],
+                           [TensorType((4, 2), dtype),
+                            TensorType((4, 2), "i32")])
+        blk = exe.region().block()
+        sim = make_similarity(blk, q, p, metric="hamming", k=2, largest=False)
+        make_yield(blk, sim.results)
+        make_release(b, dev.result)
+        b.ret(exe.results)
+        pm = PassManager()
+        pm.add(CompulsoryPartition())
+        return pm.run(mod, {"arch": ArchSpec(rows=16, cols=32)})
+
+    clear_plan_cache()
+    p_f32 = get_plan(build("f32"))
+    p_u32 = get_plan(build("u32"))
+    assert p_f32.spec.in_dtypes == ("f32", "f32")
+    assert p_u32.spec.in_dtypes == ("u32", "u32")
+    assert p_f32 is not p_u32, "operand dtype must split the plan key"
+
+
+# ---------------------------------------------------------------------------
+# pattern-prep memo: LRU bound + counters
+# ---------------------------------------------------------------------------
+
+
+def test_pattern_memo_lru_and_counters(monkeypatch, rng):
+    from repro.core import ArchSpec, clear_plan_cache, get_plan, \
+        plan_cache_stats
+    from test_engine import _data, _sim_module
+
+    monkeypatch.setenv("REPRO_ENGINE_PATTERN_SLOTS", "2")
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("dot", 2, False, 4, 20, 32, arch)
+    plan = get_plan(mod)
+    q, _ = _data(rng, "dot", 4, 20, 32)
+    gals = [jnp.asarray(rng.standard_normal((20, 32)).astype(np.float32))
+            for _ in range(3)]
+    for g in gals:
+        plan.execute(q, g)
+    assert plan.pattern_misses == 3
+    assert plan.pattern_evictions == 1          # 3 galleries, 2 slots
+    assert len(plan._pattern_cache) == 2
+    plan.execute(q, gals[-1])                   # most-recent: still resident
+    assert plan.pattern_hits == 1
+    plan.execute(q, gals[0])                    # evicted: re-prepared
+    assert plan.pattern_misses == 4
+    # numpy galleries are never memoised, but every re-prepare still
+    # counts as a miss — the telemetry must not read "fully cached"
+    plan.execute(q, np.asarray(gals[0]))
+    assert plan.pattern_misses == 5
+    stats = plan_cache_stats()                  # surfaced process-wide
+    assert stats["pattern_hits"] >= 1
+    assert stats["pattern_misses"] >= 5
+    assert stats["pattern_evictions"] >= 2
+
+
+def test_pattern_counters_survive_plan_eviction(rng):
+    """Evicting a plan from the 64-slot plan LRU folds its pattern
+    counters into the retained stats — plan_cache_stats() stays
+    monotonic across evictions."""
+    from repro.core import ArchSpec, clear_plan_cache, get_plan, \
+        plan_cache_stats
+    from repro.core.engine import _MAX_PLANS
+    from test_engine import _data, _sim_module
+
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    plan = get_plan(_sim_module("dot", 2, False, 4, 20, 32, arch))
+    q, _ = _data(rng, "dot", 4, 20, 32)
+    plan.execute(q, jnp.asarray(rng.standard_normal((20, 32))
+                                .astype(np.float32)))
+    before = plan_cache_stats()
+    assert before["pattern_misses"] >= 1
+    # plan construction is lazy (no jit compile until execute), so
+    # flooding the LRU with distinct geometries is cheap
+    for n in range(21, 21 + _MAX_PLANS):
+        get_plan(_sim_module("eucl", 2, False, 4, n, 32, arch))
+    after = plan_cache_stats()
+    assert after["plans"] <= _MAX_PLANS
+    assert after["pattern_misses"] >= before["pattern_misses"]
+    assert after["pattern_hits"] >= before["pattern_hits"]
+
+
+# ---------------------------------------------------------------------------
+# ternary (TCAM wildcard) search
+# ---------------------------------------------------------------------------
+
+
+def test_ternary_plan_packed_unpacked_interpreter_dense(rng):
+    from repro.core import ArchSpec, get_plan
+    from repro.core.executor import execute_module
+    from repro.kernels import ref as kref
+
+    m, n, dim, k = 7, 37, 100, 5
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _ternary_module(m, n, dim, k, arch)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    packed = get_plan(mod)
+    unpacked = get_plan(mod, pack=False)
+    assert packed.packed and packed.spec.care_arg == 2
+    pv, pi = packed.execute(q, p, care)
+    for v, i in (unpacked.execute(q, p, care),
+                 execute_module(mod, q, p, care),
+                 kref.cam_topk_ternary(q, p, care, k=k)):
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(i))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(v))
+
+
+def test_ternary_wildcards_never_mismatch(rng):
+    """An all-wildcard mask matches everything at distance 0; flipping a
+    pattern only in wildcarded cells leaves its distance unchanged."""
+    from repro.core import ArchSpec, get_plan
+
+    m, n, dim, k = 4, 20, 64, 3
+    mod = _ternary_module(m, n, dim, k, ArchSpec(rows=16, cols=32))
+    plan = get_plan(mod)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    v0, _ = plan.execute(q, p, care)
+    flipped = np.where(care == 0, 1.0 - p, p).astype(np.float32)
+    v1, i1 = plan.execute(q, flipped, care)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    zv, zi = plan.execute(q, p, np.zeros_like(care))
+    assert np.all(np.asarray(zv) == 0)          # everything matches exactly
+    np.testing.assert_array_equal(np.asarray(zi),
+                                  np.tile(np.arange(k), (m, 1)))
+
+
+def test_ternary_pallas_backend_parity(rng):
+    from repro.core import ArchSpec, get_plan
+
+    m, n, dim, k = 7, 37, 100, 5
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _ternary_module(m, n, dim, k, arch)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    jv, ji = get_plan(mod).execute(q, p, care)
+    pv, pi = get_plan(mod, backend="pallas").execute(q, p, care)
+    np.testing.assert_array_equal(np.asarray(jv), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(ji), np.asarray(pi))
+    # unpacked pallas has no masked kernel: explicit refusal
+    with pytest.raises(ValueError):
+        get_plan(mod, backend="pallas", pack=False)
+
+
+def test_ternary_memo_keys_on_care_too(rng):
+    """Same gallery with a different care mask must not hit the memo."""
+    from repro.core import ArchSpec, get_plan
+
+    m, n, dim, k = 4, 20, 64, 3
+    mod = _ternary_module(m, n, dim, k, ArchSpec(rows=16, cols=32))
+    plan = get_plan(mod)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    pj = jnp.asarray(p)
+    c1 = jnp.asarray(care)
+    c2 = jnp.asarray(np.ones_like(care))
+    _, i1 = plan.execute(q, pj, c1)
+    misses = plan.pattern_misses
+    plan.execute(q, pj, c2)
+    assert plan.pattern_misses == misses + 1
+    _, i1b = plan.execute(q, pj, c1)            # original pair: memo hit
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i1b))
+
+
+# ---------------------------------------------------------------------------
+# serving: ternary as a first-class served workload
+# ---------------------------------------------------------------------------
+
+
+def test_server_serves_ternary_with_care_mask(rng):
+    from repro.core import ArchSpec, get_plan
+    from repro.serving import CamSearchServer
+
+    m, n, dim, k = 6, 37, 100, 5
+    mod = _ternary_module(m, n, dim, k, ArchSpec(rows=16, cols=32))
+    plan = get_plan(mod)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    want_v, want_i = plan.execute(q, p, care)
+    with CamSearchServer(plan, p, care_mask=care, max_wait_ms=1.0) as srv:
+        v, i = srv.search(q)
+        snap = srv.snapshot()
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.asarray(want_v).reshape(m, k))
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.asarray(want_i).reshape(m, k))
+    assert snap["plan"]["ternary"] and snap["plan"]["packed"]
+
+
+def test_server_care_mask_validation(rng):
+    from repro.core import ArchSpec, get_plan
+    from repro.serving import CamSearchServer
+    from test_engine import _data, _sim_module
+
+    arch = ArchSpec(rows=16, cols=32)
+    tmod = _ternary_module(4, 20, 64, 3, arch)
+    q, p, care = _ternary_data(rng, 4, 20, 64)
+    with pytest.raises(ValueError):             # ternary plan, no mask
+        CamSearchServer(get_plan(tmod), p)
+    with pytest.raises(ValueError):             # wrong mask geometry
+        CamSearchServer(get_plan(tmod), p, care_mask=care[:-1])
+    bmod = _sim_module("dot", 2, False, 4, 20, 32, arch)
+    _, g = _data(rng, "dot", 4, 20, 32)
+    with pytest.raises(ValueError):             # mask on a binary plan
+        CamSearchServer(get_plan(bmod), g, care_mask=np.ones((20, 32)))
+
+
+# ---------------------------------------------------------------------------
+# property test: packed == unpacked across random geometry
+# ---------------------------------------------------------------------------
+
+
+@given(m=st.integers(1, 8), n=st.integers(1, 40), dim=st.integers(1, 80),
+       k=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_packed_unpacked_property(m, n, dim, k):
+    from repro.kernels import ops as kops
+    from repro.kernels import packing as kpack
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(m * 1000 + n * 10 + dim + k)
+    q = (rng.random((m, dim)) > 0.5).astype(np.float32)
+    p = (rng.random((n, dim)) > 0.5).astype(np.float32)
+    rv, ri = kref.pad_candidates(
+        *kref.cam_topk(q, p, metric="hamming", k=min(k, n), largest=False),
+        k, False)
+    pv, pi = kops.cam_topk_packed(kpack.pack_bits(q), kpack.pack_bits(p),
+                                  k=k, largest=False, tile_rows=16,
+                                  lanes_per_tile=1)
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+
+
+# ---------------------------------------------------------------------------
+# multi-device: packed sharded tournament (child process, 8 devices)
+# ---------------------------------------------------------------------------
+
+
+def _child_main() -> int:
+    import jax
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.core import ArchSpec, get_plan
+
+    assert jax.device_count() == DEVICES, jax.device_count()
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_engine import _data, _sim_module
+
+    rng = np.random.default_rng(11)
+    arch = ArchSpec(rows=16, cols=32)
+
+    # 137 is not divisible by 8 shards (padding tiles), 5 < k exposes the
+    # losing-slot sentinels through the cross-shard merge
+    for n in (137, 5):
+        m, dim, k = 9, 100, 6
+        mod = _sim_module("hamming", k, False, m, n, dim, arch)
+        single = get_plan(mod, shards=1)
+        sharded = get_plan(mod, shards=DEVICES)
+        unpacked = get_plan(mod, shards=DEVICES, pack=False)
+        assert single.packed and sharded.packed and not unpacked.packed
+        assert sharded.shards == DEVICES
+        q, p = _data(rng, "hamming", m, n, dim)
+        sv, si = single.execute(q, p)
+        mv, mi = sharded.execute(q, p)
+        uv, ui = unpacked.execute(q, p)
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(mi),
+                                      err_msg=f"packed sharded idx n={n}")
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(mv),
+                                      err_msg=f"packed sharded val n={n}")
+        np.testing.assert_array_equal(np.asarray(ui), np.asarray(mi),
+                                      err_msg=f"unpacked-vs-packed idx n={n}")
+        np.testing.assert_array_equal(np.asarray(uv), np.asarray(mv),
+                                      err_msg=f"unpacked-vs-packed val n={n}")
+
+    # ternary sharded: care mask sharded alongside the gallery
+    m, n, dim, k = 6, 53, 80, 4
+    tmod = _ternary_module(m, n, dim, k, arch)
+    q, p, care = _ternary_data(rng, m, n, dim)
+    t1 = get_plan(tmod, shards=1)
+    t8 = get_plan(tmod, shards=DEVICES)
+    assert t1.packed and t8.packed and t8.shards == DEVICES
+    v1, i1 = t1.execute(q, p, care)
+    v8, i8 = t8.execute(q, p, care)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v8))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i8))
+
+    print("PACKED-SHARDED-OK")
+    return 0
+
+
+def test_sharded_packed_parity_multi_device():
+    """Packed sharded tournament == packed single-device == unpacked
+    sharded, under 8 forced host devices (subprocess)."""
+    from repro.launch.mesh import forced_host_devices_env
+
+    env = forced_host_devices_env(DEVICES)
+    env.pop("REPRO_ENGINE_MAX_CHUNK", None)
+    env.pop("REPRO_ENGINE_PACK", None)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "PACKED-SHARDED-OK" in out.stdout, (
+        f"packed sharded child failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+        raise SystemExit(_child_main())
+    raise SystemExit(pytest.main([__file__, "-v"]))
