@@ -16,9 +16,9 @@ import traceback
 
 from repro.core import plan_cache_stats
 
-from . import (bench_engine, bench_packed, bench_serve, fig7_validation,
-               fig8_dse, fig9_isocapacity, gpu_comparison, roofline_table,
-               table1_density, table2_knn)
+from . import (bench_engine, bench_forest, bench_packed, bench_serve,
+               fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
+               roofline_table, table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -38,6 +38,9 @@ SUITES = [
     # single- vs multi-device serving (subprocesses with their own
     # XLA_FLAGS); detailed record in BENCH_serve.json
     ("serve_smoke", bench_serve.run),
+    # decision-forest aCAM range path vs interpreter oracle; detailed
+    # record in BENCH_forest.json (gate REPRO_FOREST_GATE, auto = 2x)
+    ("forest_smoke", bench_forest.run),
 ]
 
 

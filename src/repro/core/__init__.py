@@ -14,9 +14,9 @@ Public API::
 from .arch import (AccessMode, ArchSpec, CamType, Metric, OptimizationTarget,
                    PAPER_BASE_ARCH, SearchType, kazemi_arch)
 from .compiler import C4CAMCompiler, CompiledCamProgram, compile_fn, compile_module
-from .engine import (PendingSearch, SearchPlan, SimilaritySpec,
-                     clear_plan_cache, get_plan, merge_shard_candidates,
-                     plan_cache_stats)
+from .engine import (PendingSearch, RangePlan, RangeSpec, SearchPlan,
+                     SimilaritySpec, clear_plan_cache, get_plan,
+                     merge_shard_candidates, plan_cache_stats)
 from .ir import Block, Builder, IRError, Module, Operation, Pass, PassManager, TensorType, Value, verify
 from .torch_dialect import TracedTensor, trace
 
@@ -24,7 +24,8 @@ __all__ = [
     "AccessMode", "ArchSpec", "CamType", "Metric", "OptimizationTarget",
     "PAPER_BASE_ARCH", "SearchType", "kazemi_arch",
     "C4CAMCompiler", "CompiledCamProgram", "compile_fn", "compile_module",
-    "PendingSearch", "SearchPlan", "SimilaritySpec", "clear_plan_cache",
+    "PendingSearch", "RangePlan", "RangeSpec", "SearchPlan",
+    "SimilaritySpec", "clear_plan_cache",
     "get_plan", "merge_shard_candidates", "plan_cache_stats",
     "Block", "Builder", "IRError", "Module", "Operation", "Pass",
     "PassManager", "TensorType", "Value", "verify",

@@ -43,7 +43,22 @@ class Metric:
     HAMMING = "hamming"
     EUCLIDEAN = "eucl"
     DOT = "dot"
-    ALL = (HAMMING, EUCLIDEAN, DOT)
+    COSINE = "cos"
+    ALL = (HAMMING, EUCLIDEAN, DOT, COSINE)
+
+    @staticmethod
+    def validate(name: str) -> str:
+        """Reject unknown metric names at construction time.
+
+        The engine and IR accept every member of ``ALL`` (including
+        ``cos``, which the physical search runs as bipolar Hamming);
+        anything else used to surface only as a deep ``ValueError``
+        inside kernel dispatch.
+        """
+        if name not in Metric.ALL:
+            raise ValueError(
+                f"unknown metric {name!r}; expected one of {Metric.ALL}")
+        return name
 
 
 class AccessMode:

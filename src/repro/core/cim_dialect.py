@@ -20,11 +20,13 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from .arch import Metric
 from .ir import Block, Builder, IRError, Module, Operation, Region, TensorType, Value
 
 __all__ = [
     "DEVICE_TYPE", "make_acquire", "make_execute", "make_release",
-    "make_yield", "make_similarity", "execute_blocks", "CIM_COMPUTE_OPS",
+    "make_yield", "make_similarity", "make_range_search", "execute_blocks",
+    "CIM_COMPUTE_OPS",
 ]
 
 #: pseudo-type for device handles (shape (), dtype tag)
@@ -93,7 +95,7 @@ def make_similarity(block: Block, queries: Value, patterns: Value, *,
     ``popcount((q ^ p) & care)`` match.
     """
     m = queries.type.shape[0] if queries.type.rank == 2 else 1
-    attrs = {"metric": metric, "k": k, "largest": largest}
+    attrs = {"metric": Metric.validate(metric), "k": k, "largest": largest}
     if care is not None:
         if metric != "hamming":
             raise IRError("care masks (ternary TCAM search) require "
@@ -106,6 +108,58 @@ def make_similarity(block: Block, queries: Value, patterns: Value, *,
     op = Operation("cim.similarity", operands,
                    [TensorType((m, k), queries.type.dtype),
                     TensorType((m, k), "i32")], attrs)
+    block.append(op)
+    return op
+
+
+def make_range_search(block: Block, queries: Value, *,
+                      patterns: Optional[Value] = None,
+                      lo: Optional[Value] = None, hi: Optional[Value] = None,
+                      metric: Optional[str] = None,
+                      threshold: Optional[float] = None, below: bool = True,
+                      extra_attrs: Optional[Dict[str, Any]] = None
+                      ) -> Operation:
+    """``cim.range_search``: boolean match search (paper §II ``TH`` mode).
+
+    Two forms, both returning one ``(M, N)`` ``i1`` match matrix:
+
+    * **threshold** — ``patterns`` + ``metric`` + ``threshold``: row
+      ``j`` matches query ``i`` iff its distance/similarity is at/below
+      the threshold (``below=True``, the TH discharge contract of
+      :func:`repro.kernels.ref.cam_range`) or at/above it
+      (``below=False`` — "at least this similar" for dot/cos).
+    * **interval** (analog CAM) — ``lo`` + ``hi``, each ``(N, D)``: row
+      ``j`` matches iff ``lo[j, d] <= q[i, d] <= hi[j, d]`` for every
+      dimension; a wildcard dimension stores the full-range interval.
+      This is the aCAM cell contract
+      (:func:`repro.kernels.ref.acam_match`) that maps decision-forest
+      branches onto CAM rows.
+    """
+    m = queries.type.shape[0] if queries.type.rank == 2 else 1
+    attrs: Dict[str, Any] = {}
+    if lo is not None or hi is not None:
+        if lo is None or hi is None or patterns is not None or \
+                metric is not None or threshold is not None:
+            raise IRError("interval range search takes exactly lo + hi "
+                          "(no patterns/metric/threshold)")
+        if lo.type.shape != hi.type.shape:
+            raise IRError(f"lo/hi shape mismatch: {lo.type.shape} vs "
+                          f"{hi.type.shape}")
+        n = lo.type.shape[-2]
+        attrs.update(mode="interval")
+        operands = [queries, lo, hi]
+    else:
+        if patterns is None or metric is None or threshold is None:
+            raise IRError("threshold range search needs patterns + metric "
+                          "+ threshold")
+        n = patterns.type.shape[-2]
+        attrs.update(mode="threshold", metric=Metric.validate(metric),
+                     threshold=float(threshold), below=bool(below))
+        operands = [queries, patterns]
+    if extra_attrs:
+        attrs.update(extra_attrs)
+    op = Operation("cim.range_search", operands,
+                   [TensorType((m, n), "i1")], attrs)
     block.append(op)
     return op
 

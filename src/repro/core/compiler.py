@@ -41,6 +41,13 @@ default: the plan stores the gallery as uint32 lanes and searches via
 XOR+popcount — bit-identical results, 32x smaller resident gallery.
 ``compile_module(..., pack=False)`` forces the float path (and the
 packing choice is part of the plan-cache key either way).
+
+The plan cache holds a second family alongside ``SearchPlan``:
+pure *range* programs (``cim.range_search`` — the paper's TH threshold
+mode, or the analog-CAM interval match that carries decision-forest
+inference, see ``repro.forest`` and ``docs/forest.md``) compile into a
+:class:`~repro.core.engine.RangePlan` whose result is the boolean
+``(M, N)`` match matrix.
 """
 
 from __future__ import annotations

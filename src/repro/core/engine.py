@@ -54,6 +54,20 @@ units (``ceil(dims_per_tile / 32)`` lanes per tile).  The packing choice
 joins the plan-cache key, as does the operand dtype recorded in the
 spec.
 
+Range plans (second plan family)
+--------------------------------
+Pure *range* programs — ``cim.range_search`` / ``cim.tiled_range_search``,
+the paper's TH threshold mode and the analog-CAM interval match behind
+decision-forest inference — compile into a :class:`RangePlan` living in
+the same process-wide cache (its frozen :class:`RangeSpec` can never
+collide with a :class:`SimilaritySpec` key).  The executable shares the
+tile geometry, query micro-batching, pattern memoisation, packed
+popcount path and sharded ``shard_map`` machinery; the difference is
+the epilogue: no cross-tile tournament — every stored row owns a match
+line, so row tiles (and shards) *concatenate* their boolean match
+slices in ascending row order.  See the range section of
+``docs/engine.md`` and ``docs/forest.md``.
+
 Sharded execution (multi-device)
 --------------------------------
 ``get_plan(..., shards=S)`` compiles the same program against a 1-D
@@ -89,7 +103,8 @@ from ..launch.mesh import make_data_mesh
 from .ir import Module
 
 __all__ = [
-    "SimilaritySpec", "SearchPlan", "PendingSearch", "extract_plan_spec",
+    "SimilaritySpec", "RangeSpec", "SearchPlan", "RangePlan",
+    "PendingSearch", "extract_plan_spec", "extract_range_spec",
     "get_plan", "merge_shard_candidates", "plan_cache_stats",
     "clear_plan_cache",
 ]
@@ -223,9 +238,44 @@ class SimilaritySpec:
     in_dtypes: Tuple[str, ...] = ("f32", "f32")
 
 
+@dataclass(frozen=True)
+class RangeSpec:
+    """Structural summary of a partitioned range-search program.
+
+    The second plan family: boolean match search (paper TH mode /
+    analog-CAM interval match) instead of top-k.  Shares the plan
+    cache, tile geometry, micro-batching, pattern memoisation, packing
+    and sharding machinery with :class:`SimilaritySpec` plans; being a
+    distinct (frozen, hashable) type, its cache keys can never collide
+    with a similarity plan's.
+    """
+
+    #: "threshold" (distance vs tau) or "interval" (aCAM lo/hi cells)
+    mode: str
+    #: logical metric for threshold mode; the sentinel "interval" for
+    #: interval mode (not packable, encoding is a passthrough)
+    metric: str
+    threshold: float           # static: part of the plan key
+    below: bool                # True: match iff value <= tau; False: >=
+    tile_rows: int
+    dims_per_tile: int
+    grid_rows: int
+    grid_cols: int
+    m: int                     # traced query count (batch hint only)
+    n: int                     # stored rows
+    dim: int
+    query_arg: int
+    #: module-argument positions of the stored operands — (patterns,)
+    #: for threshold mode, (lo, hi) for interval mode
+    pattern_args: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    in_dtypes: Tuple[str, ...] = ("f32", "f32")
+
+
 _SIM_OPS = {"cim.similarity", "cim.tiled_similarity"}
 _TILE_OPS = {"cim.search_tile", "cim.merge_partial", "cim.topk_tile",
              "cim.reshape_result"}
+_RANGE_OPS = {"cim.range_search", "cim.tiled_range_search"}
 
 
 def extract_plan_spec(module: Module) -> Optional[SimilaritySpec]:
@@ -334,6 +384,78 @@ def _spec_from_unrolled(body, arg_pos) -> Optional[SimilaritySpec]:
         out_v_shape=tuple(fin.results[0].type.shape),
         out_i_shape=tuple(fin.results[1].type.shape),
         in_dtypes=(q.type.dtype, p.type.dtype))
+
+
+def extract_range_spec(module: Module) -> Optional[RangeSpec]:
+    """Return the spec if ``module`` is a pure range-search program.
+
+    Accepted shape mirrors :func:`extract_plan_spec` with a single
+    ``cim.range_search`` / ``cim.tiled_range_search`` (one ``i1``
+    result) in the execute body, operands fed straight from module
+    arguments.  Anything else returns ``None`` — the interpreter stays
+    the general path.
+    """
+    args = module.arguments
+    arg_pos = {id(a): i for i, a in enumerate(args)}
+    execute = None
+    ret = None
+    for op in module.body.operations:
+        if op.name in ("cim.acquire", "cim.release"):
+            continue
+        if op.name == "cim.execute":
+            if execute is not None:
+                return None
+            execute = op
+            continue
+        if op.name == "func.return":
+            ret = op
+            continue
+        return None
+    if execute is None or ret is None or len(execute.results) != 1:
+        return None
+    if [id(v) for v in ret.operands] != [id(r) for r in execute.results]:
+        return None
+
+    body = execute.body_ops()
+    if len(body) != 2:
+        return None
+    rs, yld = body
+    if rs.name not in _RANGE_OPS or yld.name != "cim.yield":
+        return None
+    if [id(v) for v in yld.operands] != [id(r) for r in rs.results]:
+        return None
+    if any(id(v) not in arg_pos for v in rs.operands):
+        return None
+    a = rs.attributes
+    mode = a.get("mode", "threshold")
+    if mode == "interval":
+        if len(rs.operands) != 3:
+            return None
+        metric = "interval"
+    else:
+        if len(rs.operands) != 2 or "metric" not in a:
+            return None
+        metric = a["metric"]
+    q = rs.operands[0]
+    stored = rs.operands[1]
+    n, dim = stored.type.shape[-2], stored.type.shape[-1]
+    tr = int(a.get("tile_rows", 0)) or n
+    dpt = int(a.get("dims_per_tile", 0)) or dim
+    gr = int(a.get("grid_rows", 0)) or -(-n // tr)
+    gc = int(a.get("grid_cols", 0)) or -(-dim // dpt)
+    m = 1
+    for d in q.type.shape[:-1]:
+        m *= d
+    return RangeSpec(
+        mode=mode, metric=metric,
+        threshold=float(a.get("threshold", 0.0)),
+        below=bool(a.get("below", True)),
+        tile_rows=tr, dims_per_tile=dpt, grid_rows=gr, grid_cols=gc,
+        m=m, n=n, dim=dim,
+        query_arg=arg_pos[id(q)],
+        pattern_args=tuple(arg_pos[id(v)] for v in rs.operands[1:]),
+        out_shape=tuple(rs.results[0].type.shape),
+        in_dtypes=tuple(v.type.dtype for v in rs.operands))
 
 
 # ---------------------------------------------------------------------------
@@ -658,6 +780,187 @@ def _build_pallas_executable(spec: SimilaritySpec, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# Range-search executables (boolean match: TH threshold / aCAM interval)
+# ---------------------------------------------------------------------------
+
+
+def _range_col_fn(spec: RangeSpec, packed: bool) -> Callable:
+    """Per-column-tile partial value for a range program.
+
+    Threshold mode accumulates the same physical distances the search
+    path uses (packed popcounts included); interval mode accumulates
+    aCAM *violation counts* — ``(q < lo) | (q > hi)`` per cell, summed.
+    Both are additive over column tiles, so the scan reproduces the
+    dense oracle exactly (integer counts) or in identical float order
+    (eucl, mirroring :func:`kref.tiled_distances`).
+    """
+    if spec.mode == "interval":
+        # the pinned oracle IS the per-tile function: violation counts
+        # are additive over dimension tiles by construction
+        return lambda qc, pr: kref.acam_violations(qc, pr[0], pr[1])
+    phys_metric, _, _ = _metric_values(spec.metric, True)
+    if packed:
+        return lambda qc, pr: kref.packed_distances(qc, pr[0])
+    return lambda qc, pr: kref.distances(qc, pr[0], phys_metric)
+
+
+def _range_tile_scan(spec: RangeSpec, batch: int, col_fn: Callable):
+    """Row-tile scan for range programs: ``scan(qt, pt)`` accumulates
+    each row tile's physical value over the column tiles and returns
+    the stacked ``(n_tiles, batch, tile_rows)`` value blocks.  No
+    tournament — every stored row keeps its own match line."""
+    tr = spec.tile_rows
+
+    def tile_value(qt, pr):
+        def col_step(acc, xs):
+            return acc + col_fn(xs[0], xs[1:]), None
+
+        dist, _ = jax.lax.scan(
+            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr))
+        return dist
+
+    def scan(qt, pt):
+        def row_step(carry, xs):
+            return carry, tile_value(qt, xs)
+
+        _, dists = jax.lax.scan(row_step, None, pt)
+        return dists                                    # (gr, B, tr)
+
+    return scan
+
+
+def _range_compare(spec: RangeSpec):
+    """Value block -> boolean match block, in the logical metric domain."""
+    if spec.mode == "interval":
+        return lambda d: d == 0
+    _, to_logical, _ = _metric_values(spec.metric, True)
+    tau, below, dim = spec.threshold, spec.below, float(spec.dim)
+    if below:
+        return lambda d: to_logical(d, dim) <= tau
+    return lambda d: to_logical(d, dim) >= tau
+
+
+def _lay_range_patterns(pats, spec: RangeSpec, gr_total: int,
+                        packed: bool) -> Tuple[jax.Array, ...]:
+    """Stored operands laid out as per-subarray tiles.
+
+    ``(patterns,)`` or ``(lo, hi)``, each ``(gr_total, gc, tr, X)``.
+    Zero padding is interval-safe: padded dims carry ``q = lo = hi =
+    0`` (never a violation) and padded rows land beyond ``spec.n``,
+    where finalize slices them off.
+    """
+    leaves = []
+    for p in pats:
+        leaves.extend(_lay_patterns(p, None, spec, gr_total, packed))
+    return tuple(leaves)
+
+
+def _build_range_scan_executable(spec: RangeSpec, batch: int,
+                                 packed: bool = False):
+    """(prepare, chunk_fn) for the jnp range path: chunk_fn returns the
+    ``(batch, grid_rows * tile_rows)`` boolean match block."""
+    gr = spec.grid_rows
+    scan = _range_tile_scan(spec, batch, _range_col_fn(spec, packed))
+    compare = _range_compare(spec)
+
+    def prepare(*pats):
+        return _lay_range_patterns(pats, spec, gr, packed)
+
+    def chunk_fn(q, pt):
+        qt = _layout_queries(q, spec, batch, packed)
+        d = scan(qt, pt)                                 # (gr, B, tr)
+        hit = compare(d)
+        return hit.transpose(1, 0, 2).reshape(batch, -1)
+
+    return jax.jit(prepare), jax.jit(chunk_fn)
+
+
+def _build_range_sharded_executable(spec: RangeSpec, batch: int, shards: int,
+                                    packed: bool = False):
+    """(prepare, chunk_fn) sharding stored rows over a device mesh.
+
+    Same bank-level row split as the sharded search executable, but the
+    per-device outputs are boolean match slices that simply
+    *concatenate* in shard order (== ascending global row order) at
+    finalize — range search has no cross-shard tournament, so the
+    per-device program is trivially collective-free.
+    """
+    tr, gr = spec.tile_rows, spec.grid_rows
+    mesh = make_data_mesh(shards)
+    tps = -(-gr // shards)
+    gr_pad = shards * tps
+    scan = _range_tile_scan(spec, batch, _range_col_fn(spec, packed))
+    compare = _range_compare(spec)
+
+    def prepare(*pats):
+        pt = _lay_range_patterns(pats, spec, gr_pad, packed)
+        sh = NamedSharding(mesh, PartitionSpec("data"))
+        return tuple(jax.device_put(x, sh) for x in pt)
+
+    def local_scan(qt, pt):
+        d = scan(qt, pt)                                 # (tps, B, tr)
+        hit = compare(d)
+        return hit.transpose(1, 0, 2).reshape(batch, tps * tr)[None]
+
+    def chunk_fn(q, pt):
+        qt = _layout_queries(q, spec, batch, packed)
+        return shard_map(
+            local_scan, mesh=mesh,
+            in_specs=(PartitionSpec(), PartitionSpec("data")),
+            out_specs=PartitionSpec("data"),
+            check_rep=False)(qt, pt)                     # (S, B, tps*tr)
+
+    return prepare, jax.jit(chunk_fn)
+
+
+def _build_range_pallas_executable(spec: RangeSpec, batch: int):
+    """(prepare, chunk_fn) driving the fused aCAM / threshold kernels.
+
+    The match threshold (or the ``violations == 0`` test) happens at
+    block-extraction time inside the kernel — only an int8 matrix
+    leaves it.  Unpacked operands only (the packed popcount path lives
+    in the jnp executable).
+    """
+    from ..kernels import ops as kops
+
+    n, dim = spec.n, spec.dim
+    bn = max(8, min(spec.tile_rows, n))
+    bd = min(spec.dims_per_tile, dim)
+    bm = min(128, max(8, batch))
+    interval = spec.mode == "interval"
+    if not interval:
+        phys_metric, _, _ = _metric_values(spec.metric, True)
+        to_logical = "bipolar" if spec.metric in ("dot", "cos") \
+            else "identity"
+
+    def prepare(*pats):
+        if interval:
+            return tuple(
+                kops.pad_to_blocks(jnp.asarray(p).astype(jnp.float32),
+                                   bn, bd)
+                for p in pats)
+        pe = _encode(jnp.asarray(pats[0]), spec.metric).astype(jnp.float32)
+        return (kops.pad_to_blocks(pe, bn, bd),)
+
+    def chunk_fn(q, pp):
+        if interval:
+            qp = kops.pad_to_blocks(q.astype(jnp.float32), bm, bd)
+            hit = kops.acam_match_prepadded(
+                qp, pp[0], pp[1], n_valid=n, block_m=bm, block_n=bn,
+                block_d=bd)
+        else:
+            qe = _encode(q, spec.metric).astype(jnp.float32)
+            qp = kops.pad_to_blocks(qe, bm, bd)
+            hit = kops.cam_range_match_prepadded(
+                qp, pp[0], metric=phys_metric, threshold=spec.threshold,
+                below=spec.below, to_logical=to_logical, dim=dim,
+                n_valid=n, block_m=bm, block_n=bn, block_d=bd)
+        return hit[:batch] != 0
+
+    return jax.jit(prepare), jax.jit(chunk_fn)
+
+
+# ---------------------------------------------------------------------------
 # SearchPlan
 # ---------------------------------------------------------------------------
 
@@ -675,6 +978,48 @@ class PendingSearch:
     m: int
     lead: Tuple[int, ...]
     chunks: list
+
+
+def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
+                      check: Callable[[], None]):
+    """Per-plan pattern-prep memoisation shared by both plan families.
+
+    ``srcs`` are the stored-operand sources the prepared layout derives
+    from — ``(gallery,)``, ``(gallery, care)`` or ``(lo, hi)``; all must
+    be immutable ``jax.Array`` values to be memoised (a numpy array can
+    be mutated in place under an unchanged id/shape/dtype).  Mutable
+    inputs re-prepare on every call and still count as telemetry misses
+    — a numpy-gallery workload reading hits=0/misses=0 would look fully
+    cached while re-packing the gallery on every search.  The cache
+    entry keeps strong references to the sources so their ids cannot be
+    recycled while it lives.  ``check`` runs only when actually
+    preparing (memo hits skip it).
+    """
+    def ident(x):
+        return (id(x), tuple(x.shape), str(x.dtype))
+
+    if not all(isinstance(s, jax.Array) for s in srcs):
+        with plan._pattern_lock:
+            plan.pattern_misses += 1
+        check()
+        return run()
+    key = tuple(ident(s) for s in srcs)
+    with plan._pattern_lock:
+        hit = plan._pattern_cache.get(key)
+        if hit is not None:
+            plan.pattern_hits += 1
+            plan._pattern_cache.move_to_end(key)
+            return hit[-1]
+    check()
+    prepared = run()
+    with plan._pattern_lock:
+        plan.pattern_misses += 1
+        plan._pattern_cache[key] = (srcs, prepared)
+        slots = plan._pattern_cache_slots()
+        while len(plan._pattern_cache) > slots:
+            plan._pattern_cache.popitem(last=False)
+            plan.pattern_evictions += 1
+    return prepared
 
 
 @dataclass
@@ -724,50 +1069,23 @@ class SearchPlan:
         gallery can be mutated in place under an unchanged id/shape/dtype,
         which would silently serve stale prepared patterns.  Mutable
         inputs are re-prepared on every call (the pre-engine behaviour);
-        callers wanting the memo pass the gallery as a jax array.  The
-        key keeps a strong reference to the source so its id cannot be
-        recycled while the entry lives.  Ternary plans key on the
-        (gallery, care-mask) pair — both must be jax arrays to memoise.
+        callers wanting the memo pass the gallery as a jax array.
+        Ternary plans key on the (gallery, care-mask) pair — both must
+        be jax arrays to memoise.
         """
-        def ident(x):
-            return (id(x), tuple(x.shape), str(x.dtype))
-
-        def check(p):
+        def check():
             # guarded before (not inside) the jitted prepare, and only
             # when actually preparing — memo hits skip it: packing
             # collapses non-binary alphabets silently, see the guard
             if self.packed and self.spec.metric == "hamming":
-                _check_binary_cells(p, "patterns")
+                _check_binary_cells(p_src, "patterns")
 
-        memoizable = isinstance(p_src, jax.Array) and (
-            care_src is None or isinstance(care_src, jax.Array))
-        if not memoizable:
-            # still a miss for the telemetry: every call re-prepares, and
-            # the counters must say so (a numpy-gallery workload reading
-            # hits=0/misses=0 would look fully cached while re-packing
-            # the gallery on every search)
-            with self._pattern_lock:
-                self.pattern_misses += 1
-            check(p_src)
-            return self._prepare(jnp.asarray(p_src), care_src)
-        key = (ident(p_src),
-               None if care_src is None else ident(care_src))
-        with self._pattern_lock:
-            hit = self._pattern_cache.get(key)
-            if hit is not None:
-                self.pattern_hits += 1
-                self._pattern_cache.move_to_end(key)
-                return hit[-1]
-        check(p_src)
-        prepared = self._prepare(p_src, care_src)
-        with self._pattern_lock:
-            self.pattern_misses += 1
-            self._pattern_cache[key] = (p_src, care_src, prepared)
-            slots = self._pattern_cache_slots()
-            while len(self._pattern_cache) > slots:
-                self._pattern_cache.popitem(last=False)
-                self.pattern_evictions += 1
-        return prepared
+        srcs = (p_src,) if care_src is None else (p_src, care_src)
+        return _memoised_prepare(
+            self, srcs,
+            lambda: self._prepare(p_src if isinstance(p_src, jax.Array)
+                                  else jnp.asarray(p_src), care_src),
+            check)
 
     def dispatch(self, *inputs) -> "PendingSearch":
         """Enqueue the plan's chunks without waiting for device results.
@@ -856,6 +1174,86 @@ class SearchPlan:
         return v, i
 
 
+@dataclass
+class RangePlan(SearchPlan):
+    """A compiled, reusable executable for one range-search program.
+
+    Same plan-cache citizenship, micro-batching, pattern memoisation,
+    packing and sharding as :class:`SearchPlan`; the result is a single
+    ``(M, N)`` boolean match matrix instead of ``(values, indices)``.
+    ``spec`` is a :class:`RangeSpec`.
+    """
+
+    def _prepared_patterns(self, *pats):
+        def check():
+            if self.packed and self.spec.metric == "hamming":
+                _check_binary_cells(pats[0], "patterns")
+
+        return _memoised_prepare(
+            self, tuple(pats),
+            lambda: self._prepare(*(p if isinstance(p, jax.Array)
+                                    else jnp.asarray(p) for p in pats)),
+            check)
+
+    def dispatch(self, *inputs) -> "PendingSearch":
+        """Enqueue the plan's chunks; ``chunks`` hold ``(match, valid)``
+        pairs of async boolean blocks.  Same thread-safety contract as
+        the search plan (the serving layer drives one shared plan)."""
+        with self._stats_lock:
+            self.executions += 1
+        spec = self.spec
+        q_src = inputs[spec.query_arg]
+        pats = tuple(inputs[i] for i in spec.pattern_args)
+        q2, lead = _as_2d(jnp.asarray(q_src))
+        m = q2.shape[0]
+        if self.packed and spec.metric == "hamming" and \
+                not isinstance(q_src, jax.Array):
+            _check_binary_cells(q_src, "queries")
+        pp = self._prepared_patterns(*pats)
+
+        b = self.batch
+        chunks = []
+        for s in range(0, m, b):
+            chunk = q2[s:s + b]
+            valid = chunk.shape[0]
+            if valid < b:
+                chunk = jnp.pad(chunk, ((0, b - valid), (0, 0)))
+            hit = self._chunk_fn(chunk, pp)
+            with self._stats_lock:
+                self.chunks_run += 1
+            chunks.append((hit, valid))
+        return PendingSearch(plan=self, m=m, lead=lead, chunks=chunks)
+
+    def finalize(self, pending: "PendingSearch"):
+        """Materialise a dispatched range search into the boolean match
+        matrix: concatenate per-shard slices (shard order == ascending
+        global row order — no tournament), drop padded rows/chunks,
+        shape for the compiled module."""
+        spec = self.spec
+        xp = np if self.shards > 1 else jnp
+        outs = []
+        for hit, valid in pending.chunks:
+            if self.shards > 1:
+                h = np.asarray(hit)                       # (S, B, cols)
+                h = np.transpose(h, (1, 0, 2)).reshape(h.shape[1], -1)
+            else:
+                h = hit
+            outs.append(h[:valid, :spec.n])
+        if not outs:    # zero queries: well-shaped empty result
+            outs = [xp.zeros((0, spec.n), bool)]
+        match = outs[0] if len(outs) == 1 else xp.concatenate(outs, axis=0)
+        m, lead = pending.m, pending.lead
+        if m * spec.n == _size(spec.out_shape):
+            return match.reshape(spec.out_shape)
+        return match.reshape(lead + (spec.n,))
+
+    def execute(self, *inputs):
+        """Run the plan; returns the ``(M, N)`` boolean match matrix (a
+        jax array regardless of shard count, like the search plan)."""
+        match = self.finalize(self.dispatch(*inputs))
+        return jnp.asarray(match) if self.shards > 1 else match
+
+
 def _size(shape: Tuple[int, ...]) -> int:
     n = 1
     for d in shape:
@@ -925,6 +1323,8 @@ def get_plan(module: Module, *, backend: str = "jnp",
     """
     try:
         spec = extract_plan_spec(module)
+        if spec is None:
+            spec = extract_range_spec(module)
     except Exception:       # malformed/exotic IR: the interpreter handles it
         spec = None
     if spec is None:
@@ -936,8 +1336,17 @@ def get_plan(module: Module, *, backend: str = "jnp",
         # the refusal does not depend on how many devices this host has
         raise ValueError(
             f"sharded plans require the 'jnp' backend, got {backend!r}")
+    is_range = isinstance(spec, RangeSpec)
     packed = _resolve_pack(spec, pack)
-    if spec.care_arg is not None and not packed and backend == "pallas":
+    if is_range and backend == "pallas" and packed:
+        # the fused range kernels take float cells; the packed popcount
+        # range path lives in the jnp executable
+        if pack:
+            raise ValueError(
+                "packed range search requires the 'jnp' backend")
+        packed = False
+    if getattr(spec, "care_arg", None) is not None and not packed \
+            and backend == "pallas":
         raise ValueError(
             "ternary (care-masked) search on the pallas backend requires "
             "packed execution; pass pack=True (and unset "
@@ -952,15 +1361,29 @@ def get_plan(module: Module, *, backend: str = "jnp",
             _PLAN_CACHE.move_to_end(key)
             return plan
         _STATS["misses"] += 1
-    if s > 1:
-        prepare, chunk_fn = _build_sharded_executable(spec, b, s,
-                                                      packed=packed)
-    elif backend == "pallas":
-        prepare, chunk_fn = _build_pallas_executable(spec, b, packed=packed)
+    if is_range:
+        if s > 1:
+            prepare, chunk_fn = _build_range_sharded_executable(
+                spec, b, s, packed=packed)
+        elif backend == "pallas":
+            prepare, chunk_fn = _build_range_pallas_executable(spec, b)
+        else:
+            prepare, chunk_fn = _build_range_scan_executable(
+                spec, b, packed=packed)
+        plan = RangePlan(spec=spec, backend=backend, batch=b, shards=s,
+                         packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
     else:
-        prepare, chunk_fn = _build_scan_executable(spec, b, packed=packed)
-    plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
-                      packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
+        if s > 1:
+            prepare, chunk_fn = _build_sharded_executable(spec, b, s,
+                                                          packed=packed)
+        elif backend == "pallas":
+            prepare, chunk_fn = _build_pallas_executable(spec, b,
+                                                         packed=packed)
+        else:
+            prepare, chunk_fn = _build_scan_executable(spec, b,
+                                                       packed=packed)
+        plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
+                          packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
     with _CACHE_LOCK:
         # lost-race double insert is harmless but keep one canonical plan
         plan = _PLAN_CACHE.setdefault(key, plan)

@@ -38,7 +38,7 @@ from ..kernels import ref as kref
 from .engine import _as_2d, _encode, _metric_values
 from .ir import IRError, Module, Operation, Value
 
-__all__ = ["execute_module", "build_search_fn"]
+__all__ = ["execute_module", "build_search_fn", "build_range_fn"]
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +150,48 @@ def build_search_fn(metric: str, k: int, largest: bool, *, tile_rows: int,
     return fn
 
 
+def build_range_fn(mode: str, *, metric: Optional[str] = None,
+                   threshold: float = 0.0, below: bool = True,
+                   tile_rows: int = 0, dims_per_tile: int = 0
+                   ) -> Callable[..., jax.Array]:
+    """Vectorized boolean range-match oracle (``cim.range_search``).
+
+    * ``mode="interval"`` — ``fn(q, lo, hi)``: the aCAM contract of
+      :func:`kref.acam_match` (pure comparisons + integer counts, so
+      the result is tiling-invariant and bit-identical under any
+      partition).
+    * ``mode="threshold"`` — ``fn(q, p)``: encode to the physical cell
+      domain, accumulate *tiled* partial distances in the same order
+      the engine's scan runs (:func:`kref.tiled_distances`), convert to
+      the logical metric domain, compare against the threshold.  Using
+      the tiled accumulation here keeps interpreter and engine
+      bit-identical for every metric, analog ones included.
+    """
+    if mode == "interval":
+        def fn(queries, lo, hi):
+            q2, lead = _as_2d(queries)
+            match = kref.acam_match(q2, jnp.asarray(lo), jnp.asarray(hi))
+            return match.reshape(lead + (match.shape[-1],))
+        return fn
+
+    phys_metric, to_logical, _ = _metric_values(metric, True)
+
+    def fn(queries, patterns):
+        q2, lead = _as_2d(queries)
+        qe = _encode(q2, metric)
+        pe = _encode(jnp.asarray(patterns), metric)
+        dim = q2.shape[-1]
+        tr = tile_rows or pe.shape[0]
+        dpt = dims_per_tile or dim
+        d = kref.tiled_distances(qe, pe, metric=phys_metric, tile_rows=tr,
+                                 dims_per_tile=dpt)
+        v = to_logical(d, float(dim))
+        match = (v <= threshold) if below else (v >= threshold)
+        return match.reshape(lead + (match.shape[-1],))
+
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # IR interpreter
 # ---------------------------------------------------------------------------
@@ -205,6 +247,24 @@ def execute_module(module: Module, *inputs, backend: str = "jnp"
             v = v.reshape(op.results[0].type.shape)
             i = i.reshape(op.results[1].type.shape)
             return (v, i)
+        if nm == "cim.range_search" or nm == "cim.tiled_range_search":
+            mode = op.attributes.get("mode", "threshold")
+            tr = int(op.attributes.get("tile_rows", 0))
+            dpt = int(op.attributes.get("dims_per_tile", 0))
+            fn = build_range_fn(
+                mode, metric=op.attributes.get("metric"),
+                threshold=float(op.attributes.get("threshold", 0.0)),
+                below=bool(op.attributes.get("below", True)),
+                tile_rows=tr, dims_per_tile=dpt)
+            args = [env[id(v)] for v in op.operands]
+            match = fn(*args)
+            out_shape = op.results[0].type.shape
+            want = 1
+            for d in out_shape:
+                want *= d
+            if match.size == want:   # runtime M may differ from the trace
+                match = match.reshape(out_shape)
+            return (match,)
         if nm == "cim.search_tile":
             q = env[id(op.operands[0])]
             p = env[id(op.operands[1])]

@@ -42,6 +42,10 @@ class MappingPlan:
     dims_per_tile: int
     cells_per_value: int
     # mapping
+    #: sensing mode — "best" (top-k / WTA periphery) or "range" (every
+    #: row's match line is read out: aCAM interval search and the TH
+    #: threshold mode).  Informs the camsim sensing-cost selection.
+    search_type: str = "best"
     stack: int = 1                   # selective-search batches per subarray
     logical_tiles: int = 0
     physical_subarrays: int = 0
@@ -114,6 +118,7 @@ def derive_plan(arch: ArchSpec, part: Dict[str, Any]) -> MappingPlan:
         arch=arch, m_queries=m, n_rows=n, dim=dim,
         value_bits=int(part["value_bits"]), metric=part["metric"],
         k=int(part["k"]), largest=bool(part["largest"]),
+        search_type=str(part.get("search_type", "best")),
         grid_rows=grid_rows, grid_cols=grid_cols,
         dims_per_tile=int(part["dims_per_tile"]),
         cells_per_value=int(part["cells_per_value"]),
@@ -179,7 +184,8 @@ class CamMap(Pass):
             def batch_body(bbb: Builder):
                 bbb.create("cam.write_value", [s.result], [], attrs)
                 bbb.create("cam.search", [s.result], [],
-                           {"type": "best", "selective": plan.stack > 1, **attrs})
+                           {"type": plan.search_type,
+                            "selective": plan.stack > 1, **attrs})
                 rd = bbb.create("cam.read_value", [s.result],
                                 [TensorType((plan.m_queries, a.rows), "f32")],
                                 {"mode": "raw", **attrs})

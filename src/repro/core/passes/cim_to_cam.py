@@ -104,6 +104,41 @@ class CimToCam(Pass):
             return inner_map.get(op.operands[i], op.operands[i])
 
         sub = handles["subarray"]
+        if op.name in ("cim.range_search", "cim.tiled_range_search"):
+            mode = op.attributes.get("mode", "threshold")
+            if mode == "interval":
+                # interval cells only exist on analog CAMs: each cell
+                # stores [lo, hi] as two conductances (Li et al.); a
+                # digital TCAM/BCAM has no encoding for them
+                if self.cam_type != CamType.ACAM:
+                    raise ValueError(
+                        f"interval range search requires cam_type="
+                        f"'{CamType.ACAM}' (analog interval cells), got "
+                        f"{self.cam_type!r}")
+                cfg = {"metric": "interval", "encoding": "analog"}
+            else:
+                value_bits = int(op.attributes.get("value_bits", 8))
+                cfg = device_search_config(self.cam_type,
+                                           op.attributes["metric"],
+                                           value_bits)
+            attrs = dict(op.attributes)
+            attrs.update(cfg)
+            attrs["cam_type"] = self.cam_type
+            # interval rows program two bounds per cell; threshold rows
+            # store patterns like a best-match search
+            b.create("cam.write_value", [sub, *map(opnd, range(1, len(op.operands)))],
+                     [], attrs)
+            b.create("cam.search", [sub, opnd(0)], [],
+                     {"type": SearchType.RANGE, **attrs})
+            r = b.create("cam.read_value", [sub],
+                         [res.type for res in op.results],
+                         {"mode": "match_lines", **attrs})
+            for old_r, new_r in zip(op.results, r.results):
+                inner_map[old_r] = new_r
+            ctx.setdefault("cam_search_configs", []).append(
+                {"search_type": SearchType.RANGE, **cfg,
+                 "cam_type": self.cam_type})
+            return
         if op.name in ("cim.search_tile", "cim.tiled_similarity"):
             value_bits = int(op.attributes.get("value_bits", 8))
             cfg = device_search_config(self.cam_type,

@@ -53,11 +53,14 @@ class CompulsoryPartition(Pass):
                 continue
             body = exe.body_ops()
             sims = [op for op in body if op.name == "cim.similarity"]
-            if not sims:
+            ranges = [op for op in body if op.name == "cim.range_search"]
+            if not sims and not ranges:
                 continue
             blk = exe.region().block()
             for sim in sims:
                 self._partition_one(blk, sim, arch, ctx)
+            for rs in ranges:
+                self._partition_range(blk, rs, arch, ctx)
         return module
 
     # ------------------------------------------------------------------
@@ -101,6 +104,51 @@ class CompulsoryPartition(Pass):
             op.parent = blk
         final = new_ops[-1]
         mapping = dict(zip(sim.results, final.results))
+        for op in blk.operations:
+            op.operands = [mapping.get(v, v) for v in op.operands]
+
+    # ------------------------------------------------------------------
+    def _partition_range(self, blk, rs: Operation, arch: ArchSpec,
+                         ctx: Dict[str, Any]) -> None:
+        """Tile a ``cim.range_search`` to subarray granularity.
+
+        Range search has no cross-tile candidate tournament: column
+        tiles still accumulate partial distances / violation counts
+        (``merge_partial horizontal``), but row tiles *concatenate*
+        their boolean match slices — every stored row reports its own
+        match line, so the loop-structured ``cim.tiled_range_search``
+        form is emitted for every grid size (unrolling would only
+        replicate the concatenation wiring).
+        """
+        queries = rs.operands[0]
+        stored = rs.operands[1]          # patterns, or the lo bound
+        n_rows, dim = stored.type.shape[-2], stored.type.shape[-1]
+        m = 1
+        for d in queries.type.shape[:-1]:
+            m *= d
+        mode = rs.attributes.get("mode", "threshold")
+        value_bits = int(rs.attributes.get("value_bits", 8))
+        grid_rows, grid_cols, cpv, dpt = tile_grid(arch, n_rows, dim,
+                                                   value_bits)
+        common = dict(rs.attributes)
+        common.update({"value_bits": value_bits, "grid_rows": grid_rows,
+                       "grid_cols": grid_cols, "tile_rows": arch.rows,
+                       "tile_cols": arch.cols, "dims_per_tile": dpt,
+                       "cells_per_value": cpv, "m": m, "n": n_rows,
+                       "dim": dim})
+        info = dict(common)
+        # MappingPlan/cost-model fields the similarity records carry;
+        # a range search senses every row's match line (no top-k)
+        info.setdefault("metric", "interval" if mode == "interval"
+                        else rs.attributes["metric"])
+        info.update({"k": 0, "largest": False, "search_type": "range"})
+        ctx.setdefault("partition_info", []).append(info)
+        tiled = Operation("cim.tiled_range_search", list(rs.operands),
+                          [r.type for r in rs.results], common)
+        idx = blk.operations.index(rs)
+        blk.operations[idx:idx + 1] = [tiled]
+        tiled.parent = blk
+        mapping = dict(zip(rs.results, tiled.results))
         for op in blk.operations:
             op.operands = [mapping.get(v, v) for v in op.operands]
 

@@ -7,6 +7,10 @@
                       binary/ternary (TCAM wildcard) fast path:
                       `hamming = popcount(q ^ p)`, ternary
                       `popcount((q ^ p) & care)`.
+* `acam`            — analog-CAM range search: fused interval match
+                      (`lo <= q <= hi` per cell, wildcard = full range)
+                      and in-kernel thresholded distance match (the
+                      paper's TH sensing mode).
 * `flash_attention` — online-softmax attention forward (the LM framework's
                       hot spot; §Perf cell B's TPU answer).
 

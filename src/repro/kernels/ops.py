@@ -19,12 +19,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as kref
+from .acam import acam_match_pallas, range_match_pallas
 from .cam_search import (distance_pallas, fused_topk_pallas,
                          fused_topk_packed_pallas)
 
 __all__ = ["cam_topk", "cam_topk_prepadded", "cam_topk_packed",
            "cam_topk_packed_prepadded", "pad_to_blocks", "cam_exact",
-           "cam_range"]
+           "cam_range", "acam_match", "acam_match_prepadded",
+           "cam_range_match", "cam_range_match_prepadded"]
 
 
 def _on_tpu() -> bool:
@@ -185,3 +187,84 @@ def cam_range(queries: jax.Array, patterns: jax.Array, threshold: float, *,
               interpret: Optional[bool] = None) -> jax.Array:
     return cam_distances(queries, patterns, metric=metric,
                          interpret=interpret) <= threshold
+
+
+# ---------------------------------------------------------------------------
+# aCAM range search (interval + fused threshold match)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_valid", "block_m", "block_n",
+                                             "block_d", "interpret"))
+def acam_match_prepadded(qp: jax.Array, lop: jax.Array, hip: jax.Array, *,
+                         n_valid: int, block_m: int, block_n: int,
+                         block_d: int, interpret: Optional[bool] = None
+                         ) -> jax.Array:
+    """Interval-match kernel launch for block-aligned operands.
+
+    The hot path of the engine's interval ``RangePlan`` on the pallas
+    backend: ``lo``/``hi`` were padded once behind the plan cache.
+    Returns the padded ``(M_pad, N_pad)`` int8 matrix; callers slice.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return acam_match_pallas(qp, lop, hip, block_m=block_m, block_n=block_n,
+                             block_d=block_d, n_valid=n_valid,
+                             interpret=interpret)
+
+
+@jax.jit
+def acam_match(queries: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """(M, N) boolean aCAM interval match via the fused Pallas kernel.
+
+    Semantics pinned by :func:`ref.acam_match`: row ``j`` matches iff
+    ``lo[j, d] <= q[i, d] <= hi[j, d]`` for all ``d`` (wildcard = full
+    range).  Pure comparisons + integer counts, so kernel and oracle
+    agree bit-for-bit.
+    """
+    m = queries.shape[0]
+    n = lo.shape[0]
+    out = acam_match_pallas(queries.astype(jnp.float32),
+                            lo.astype(jnp.float32), hi.astype(jnp.float32),
+                            n_valid=n, interpret=not _on_tpu())
+    return out[:m, :n] != 0
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "threshold", "below", "to_logical", "dim", "n_valid", "block_m",
+    "block_n", "block_d", "interpret"))
+def cam_range_match_prepadded(qp: jax.Array, pp: jax.Array, *, metric: str,
+                              threshold: float, below: bool, to_logical: str,
+                              dim: int, n_valid: int, block_m: int,
+                              block_n: int, block_d: int,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Fused threshold-match launch for block-aligned operands (int8)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return range_match_pallas(qp, pp, metric=metric, threshold=threshold,
+                              below=below, to_logical=to_logical, dim=dim,
+                              block_m=block_m, block_n=block_n,
+                              block_d=block_d, n_valid=n_valid,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "threshold", "below",
+                                             "interpret"))
+def cam_range_match(queries: jax.Array, patterns: jax.Array, *, metric: str,
+                    threshold: float, below: bool = True,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """(M, N) boolean threshold match with the threshold fused in-kernel.
+
+    Unlike :func:`cam_range` (distance matrix materialised as float32,
+    compared on the host), the compare happens at block-extraction time
+    and only an int8 matrix leaves the kernel — 4x less result traffic
+    for the TH sensing mode.  Physical-metric contract matches
+    :func:`ref.cam_range` on hamming/dot/eucl.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    out = range_match_pallas(queries.astype(jnp.float32),
+                             patterns.astype(jnp.float32), metric=metric,
+                             threshold=threshold, below=below,
+                             n_valid=patterns.shape[0], interpret=interpret)
+    return out != 0

@@ -34,9 +34,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["distances", "packed_distances", "ternary_distances", "cam_topk",
-           "cam_topk_ternary", "cam_exact", "cam_range", "cam_topk_tiled",
-           "merge_topk", "pad_candidates"]
+__all__ = ["distances", "packed_distances", "ternary_distances",
+           "tile_distance", "tiled_distances", "cam_topk",
+           "cam_topk_ternary", "cam_exact", "cam_range", "acam_match",
+           "acam_violations", "cam_topk_tiled", "merge_topk",
+           "pad_candidates"]
 
 
 def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array:
@@ -137,9 +139,104 @@ def cam_exact(queries: jax.Array, patterns: jax.Array, *, metric: str = "hamming
 @partial(jax.jit, static_argnames=("metric",))
 def cam_range(queries: jax.Array, patterns: jax.Array, threshold: float,
               *, metric: str = "hamming") -> jax.Array:
-    """(M, N) boolean threshold-match matrix (distance <= threshold)."""
+    """(M, N) boolean threshold-match matrix (distance <= threshold).
+
+    The paper's TH sensing mode: a row matches iff its distance is at
+    or below the threshold — ties are *inclusive* (a match-line that
+    discharges exactly at the reference level still latches).  For
+    similarity metrics (``dot``/``cos``) the same ``<=`` contract holds
+    on the similarity value; callers wanting "at least this similar"
+    negate or use the engine's ``below=False`` range programs.
+    """
     d = distances(queries, patterns, metric)
     return d <= threshold
+
+
+def acam_violations(queries: jax.Array, lo: jax.Array, hi: jax.Array
+                    ) -> jax.Array:
+    """(M, N) count of interval violations per (query, row) pair.
+
+    ``lo``/``hi``: (N, D) per-row per-dimension interval bounds of an
+    analog CAM (each aCAM cell stores an interval and matches iff the
+    analog input falls inside it — Li et al., *Analog content
+    addressable memories with memristors*).  A wildcard dimension is a
+    full-range interval (``lo = -inf, hi = +inf``), which can never be
+    violated.  Counts are small integers returned as float32 (exact),
+    and they are *additive over dimension tiles* — the tiled engine
+    path accumulates per-column-tile partial counts and reproduces the
+    dense count bit-for-bit.
+    """
+    q = queries.astype(jnp.float32)[:, None, :]
+    viol = (q < lo.astype(jnp.float32)[None, :, :]) | \
+        (q > hi.astype(jnp.float32)[None, :, :])
+    return viol.sum(-1).astype(jnp.float32)
+
+
+@jax.jit
+def acam_match(queries: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """(M, N) boolean aCAM interval-match matrix.
+
+    Row ``j`` matches query ``i`` iff ``lo[j, d] <= q[i, d] <= hi[j, d]``
+    for every dimension ``d`` — the analog CAM match-line stays charged
+    only when all cells are inside their stored interval.  This is the
+    semantic contract the Pallas interval kernel and the engine's
+    ``RangePlan`` interval mode must match exactly (pure comparisons and
+    integer counts: no arithmetic, so the result is tiling-invariant).
+    """
+    return acam_violations(queries, lo, hi) == 0
+
+
+def tile_distance(q_t: jax.Array, p_t: jax.Array, metric: str) -> jax.Array:
+    """One column tile's (M, rows) partial distance block.
+
+    The *single* definition of the per-tile arithmetic every tiled path
+    shares — :func:`cam_topk_tiled`, :func:`tiled_distances`, and the
+    engine's scan executables all accumulate exactly these float
+    operations, which is what makes their bit-identity a structural
+    property rather than a maintained coincidence.
+    """
+    if metric == "hamming":
+        return (q_t[:, None, :] != p_t[None, :, :]).sum(-1).astype(jnp.float32)
+    if metric == "dot":
+        return q_t @ p_t.T
+    if metric == "eucl":
+        qq = (q_t * q_t).sum(-1, keepdims=True)
+        ppv = (p_t * p_t).sum(-1)
+        return qq + ppv[None, :] - 2.0 * (q_t @ p_t.T)
+    raise ValueError(f"tiled path does not support metric {metric!r}")
+
+
+def tiled_distances(queries: jax.Array, patterns: jax.Array, *, metric: str,
+                    tile_rows: int, dims_per_tile: int) -> jax.Array:
+    """(M, N) distance matrix with *tiled* partial-sum accumulation.
+
+    Same per-column-tile arithmetic (:func:`tile_distance`) and
+    left-to-right accumulation order as :func:`cam_topk_tiled` — this
+    is the distance surface the partitioned hardware actually senses,
+    and the oracle the engine's ``RangePlan`` threshold path must match
+    bit-for-bit (identical float operations in identical order, for
+    *every* metric including eucl).  Bit-identical to
+    :func:`distances` for the integer metrics.
+    """
+    m, dim = queries.shape
+    n = patterns.shape[0]
+    gr = -(-n // tile_rows)
+    gc = -(-dim // dims_per_tile)
+    qp = jnp.pad(queries.astype(jnp.float32),
+                 ((0, 0), (0, gc * dims_per_tile - dim)))
+    pp = jnp.pad(patterns.astype(jnp.float32),
+                 ((0, gr * tile_rows - n), (0, gc * dims_per_tile - dim)))
+
+    rows = []
+    for r in range(gr):
+        p_rows = pp[r * tile_rows:(r + 1) * tile_rows]
+        dist = None
+        for c in range(gc):
+            sl = slice(c * dims_per_tile, (c + 1) * dims_per_tile)
+            part = tile_distance(qp[:, sl], p_rows[:, sl], metric)
+            dist = part if dist is None else dist + part   # horizontal merge
+        rows.append(dist)
+    return jnp.concatenate(rows, axis=-1)[:, :n]
 
 
 def pad_candidates(vals: jax.Array, idx: jax.Array, k: int, largest: bool
@@ -207,15 +304,7 @@ def cam_topk_tiled(queries: jax.Array, patterns: jax.Array, *, metric: str,
         if c_t is not None:
             return ((q_t[:, None, :] != p_t[None, :, :])
                     & (c_t[None, :, :] != 0)).sum(-1).astype(jnp.float32)
-        if metric == "hamming":
-            return (q_t[:, None, :] != p_t[None, :, :]).sum(-1).astype(jnp.float32)
-        if metric == "dot":
-            return q_t @ p_t.T
-        if metric == "eucl":
-            qq = (q_t * q_t).sum(-1, keepdims=True)
-            ppv = (p_t * p_t).sum(-1)
-            return qq + ppv[None, :] - 2.0 * (q_t @ p_t.T)
-        raise ValueError(f"tiled path does not support metric {metric!r}")
+        return tile_distance(q_t, p_t, metric)
 
     acc_v = acc_i = None
     for r in range(gr):

@@ -60,19 +60,22 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.compiler import CompiledCamProgram
-from ..core.engine import SearchPlan
+from ..core.engine import RangePlan, SearchPlan
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
 
 
 @dataclass
 class SearchResult:
-    """Per-request outcome: top-k values/indices row-aligned with the
+    """Per-request outcome: top-k values/indices (best-match plans) or
+    the boolean match rows (range plans), row-aligned with the
     submitted queries, plus queueing/batching latency telemetry."""
 
     rid: int
     values: Optional[np.ndarray] = None
     indices: Optional[np.ndarray] = None
+    #: range-plan requests: (rows, n) boolean match matrix
+    matches: Optional[np.ndarray] = None
     error: Optional[BaseException] = None
     submitted_at: float = 0.0
     completed_at: float = 0.0
@@ -104,11 +107,17 @@ class CamSearchServer:
     ----------
     program:
         A :class:`CompiledCamProgram` whose ``engine_plan`` is set (any
-        pure similarity program), or a bare :class:`SearchPlan`.
+        pure similarity *or* range program), or a bare
+        :class:`SearchPlan` / :class:`RangePlan`.  Range plans make the
+        server a match server: each request's result carries the
+        boolean ``matches`` rows instead of values/indices — this is
+        the decision-forest serving path (one interval row per tree
+        branch; see ``docs/forest.md``).
     gallery:
-        The stored patterns.  Converted to a jax array once so the
-        plan's pattern memo (and, for sharded plans, the device layout)
-        is hit by every batch.
+        The stored patterns — or, for an *interval* range plan, the
+        ``(lo, hi)`` pair of per-row bound arrays.  Converted to jax
+        arrays once so the plan's pattern memo (and, for sharded plans,
+        the device layout) is hit by every batch.
     care_mask:
         Per-pattern TCAM wildcard mask ``(n, dim)`` — required when the
         plan's program is ternary (a care-mask operand in its spec),
@@ -144,26 +153,51 @@ class CamSearchServer:
                             f"got {type(program).__name__}")
         import jax.numpy as jnp
         self.plan = plan
-        self.gallery = jnp.asarray(gallery)
-        if plan.spec.care_arg is not None:
-            if care_mask is None:
-                raise ValueError(
-                    "ternary plan (TCAM wildcard search) needs a care_mask")
-            care = np.asarray(care_mask)
-            if care.shape != (plan.spec.n, plan.spec.dim):
-                raise ValueError(
-                    f"care_mask shape {care.shape} != gallery geometry "
-                    f"({plan.spec.n}, {plan.spec.dim})")
-            # jax array for the same reason as the gallery: the plan's
-            # pattern memo keys on the (gallery, care) pair of arrays
-            self.care = jnp.asarray(care)
-        elif care_mask is not None:
-            raise ValueError("care_mask given but the plan's program has "
-                             "no care operand (not a ternary search)")
-        else:
+        self.is_range = isinstance(plan, RangePlan)
+        if self.is_range:
+            if care_mask is not None:
+                raise ValueError("care_mask only applies to ternary "
+                                 "best-match plans, not range plans")
+            n_pats = len(plan.spec.pattern_args)
+            if n_pats == 2:       # interval mode: gallery is (lo, hi)
+                if not (isinstance(gallery, (tuple, list))
+                        and len(gallery) == 2):
+                    raise ValueError(
+                        "interval range plan needs gallery=(lo, hi)")
+                self.gallery = tuple(jnp.asarray(g) for g in gallery)
+            else:
+                self.gallery = (jnp.asarray(gallery),)
+            for g in self.gallery:
+                if tuple(g.shape) != (plan.spec.n, plan.spec.dim):
+                    raise ValueError(
+                        f"stored operand shape {tuple(g.shape)} != plan "
+                        f"geometry ({plan.spec.n}, {plan.spec.dim})")
             self.care = None
+        else:
+            self.gallery = jnp.asarray(gallery)
+            if plan.spec.care_arg is not None:
+                if care_mask is None:
+                    raise ValueError("ternary plan (TCAM wildcard search) "
+                                     "needs a care_mask")
+                care = np.asarray(care_mask)
+                if care.shape != (plan.spec.n, plan.spec.dim):
+                    raise ValueError(
+                        f"care_mask shape {care.shape} != gallery geometry "
+                        f"({plan.spec.n}, {plan.spec.dim})")
+                # jax array for the same reason as the gallery: the plan's
+                # pattern memo keys on the (gallery, care) pair of arrays
+                self.care = jnp.asarray(care)
+            elif care_mask is not None:
+                raise ValueError("care_mask given but the plan's program "
+                                 "has no care operand (not a ternary "
+                                 "search)")
+            else:
+                self.care = None
         self.max_wait = max_wait_ms / 1e3
         self.max_batch = int(max_batch or plan.batch)
+        self._init_state(max_inflight)
+
+    def _init_state(self, max_inflight: int) -> None:
         self._queue: "queue.Queue[Optional[SearchRequest]]" = queue.Queue()
         self._completions: "queue.Queue[Optional[Tuple[Any, ...]]]" = \
             queue.Queue(maxsize=max(1, int(max_inflight)))
@@ -253,11 +287,27 @@ class CamSearchServer:
                timeout: Optional[float] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Blocking search: submit + wait, raising the batch's error if
-        execution failed.  Thread-safe; this is the worker-thread API."""
+        execution failed.  Thread-safe; this is the worker-thread API.
+        Best-match plans only — range plans use :meth:`match`."""
+        if self.is_range:
+            raise TypeError("range plan: use match() (boolean matches, "
+                            "not values/indices)")
         res = self.submit(queries).wait(timeout)
         if res.error is not None:
             raise res.error
         return res.values, res.indices
+
+    def match(self, queries: np.ndarray,
+              timeout: Optional[float] = None) -> np.ndarray:
+        """Blocking range search: the ``(rows, n)`` boolean match matrix
+        for this request's query rows (range plans only) — each row of
+        a forest gallery flags the tree branches the sample satisfies."""
+        if not self.is_range:
+            raise TypeError("best-match plan: use search()")
+        res = self.submit(queries).wait(timeout)
+        if res.error is not None:
+            raise res.error
+        return res.matches
 
     # -- batcher -----------------------------------------------------------
 
@@ -307,13 +357,21 @@ class CamSearchServer:
         try:
             rows = np.concatenate([r.queries for r in batch], axis=0)
             spec = self.plan.spec
-            n_args = max(spec.query_arg, spec.pattern_arg,
-                         -1 if spec.care_arg is None else spec.care_arg) + 1
-            inputs: List[Any] = [None] * n_args
-            inputs[spec.query_arg] = rows
-            inputs[spec.pattern_arg] = self.gallery
-            if spec.care_arg is not None:
-                inputs[spec.care_arg] = self.care
+            if self.is_range:
+                n_args = max(spec.query_arg, *spec.pattern_args) + 1
+                inputs: List[Any] = [None] * n_args
+                inputs[spec.query_arg] = rows
+                for pos, g in zip(spec.pattern_args, self.gallery):
+                    inputs[pos] = g
+            else:
+                n_args = max(spec.query_arg, spec.pattern_arg,
+                             -1 if spec.care_arg is None
+                             else spec.care_arg) + 1
+                inputs = [None] * n_args
+                inputs[spec.query_arg] = rows
+                inputs[spec.pattern_arg] = self.gallery
+                if spec.care_arg is not None:
+                    inputs[spec.care_arg] = self.care
             pending = self.plan.dispatch(*inputs)
         except BaseException as e:          # noqa: BLE001 — fanned out
             for r in batch:
@@ -331,12 +389,17 @@ class CamSearchServer:
                 break
             batch, pending, rows = item
             try:
-                values, indices = self.plan.finalize(pending)
-                # finalize shapes outputs for the *compiled module* (which
-                # may have been traced with 1-D or stacked queries); the
-                # scatter below is strictly row-major (rows, k)
-                values = np.asarray(values).reshape(rows, -1)
-                indices = np.asarray(indices).reshape(rows, -1)
+                if self.is_range:
+                    matches = np.asarray(self.plan.finalize(pending))
+                    matches = matches.reshape(rows, -1)
+                    values = indices = None
+                else:
+                    values, indices = self.plan.finalize(pending)
+                    # finalize shapes outputs for the *compiled module*
+                    # (which may have been traced with 1-D or stacked
+                    # queries); the scatter below is strictly row-major
+                    values = np.asarray(values).reshape(rows, -1)
+                    indices = np.asarray(indices).reshape(rows, -1)
             except BaseException as e:          # noqa: BLE001 — fanned out
                 for r in batch:
                     self._fail(r, e)
@@ -348,8 +411,11 @@ class CamSearchServer:
                 self.stats["queries"] += rows
             for r in batch:
                 m = r.queries.shape[0]
-                r.result.values = values[off:off + m]
-                r.result.indices = indices[off:off + m]
+                if self.is_range:
+                    r.result.matches = matches[off:off + m]
+                else:
+                    r.result.values = values[off:off + m]
+                    r.result.indices = indices[off:off + m]
                 r.result.completed_at = now
                 off += m
                 with self._lock:
@@ -378,11 +444,17 @@ class CamSearchServer:
             out["p50_ms"] = 1e3 * lat[len(lat) // 2]
             out["p95_ms"] = 1e3 * lat[min(len(lat) - 1,
                                           int(len(lat) * 0.95))]
+        spec = self.plan.spec
         out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
                        "backend": self.plan.backend,
                        "packed": self.plan.packed,
-                       "ternary": self.plan.spec.care_arg is not None,
-                       "metric": self.plan.spec.metric, "k": self.plan.spec.k,
+                       "family": "range" if self.is_range else "search",
+                       "ternary": getattr(spec, "care_arg", None) is not None,
+                       "metric": spec.metric,
                        "executions": self.plan.executions,
                        "chunks_run": self.plan.chunks_run}
+        if self.is_range:
+            out["plan"]["mode"] = spec.mode
+        else:
+            out["plan"]["k"] = spec.k
         return out

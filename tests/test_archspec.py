@@ -4,7 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (ArchSpec, CamType, OptimizationTarget,
+from repro.core import (ArchSpec, CamType, Metric, OptimizationTarget,
                         PAPER_BASE_ARCH)
 from repro.core.arch import AccessMode
 from repro.kernels import ops, ref
@@ -25,6 +25,31 @@ def test_archspec_validation():
     with pytest.raises(ValueError):
         ArchSpec(access={"bank": "parallel", "mat": "parallel",
                          "array": "diagonal", "subarray": "parallel"})
+
+
+def test_metric_all_covers_engine_metrics():
+    """Metric.ALL is the single source of truth for metric names: every
+    metric the engine/IR accept (cos included — it was missing) is
+    listed, Metric.validate pins construction-time rejection, and the
+    IR builders actually consult it."""
+    assert Metric.ALL == ("hamming", "eucl", "dot", "cos")
+    assert Metric.COSINE == "cos" and Metric.COSINE in Metric.ALL
+    for name in Metric.ALL:
+        assert Metric.validate(name) == name
+        # every listed metric must be executable by the oracle layer
+        ref.distances(jnp.zeros((2, 8)), jnp.zeros((3, 8)), name)
+    with pytest.raises(ValueError):
+        Metric.validate("manhattan")
+
+    from repro.core import Module, TensorType
+    from repro.core.cim_dialect import make_similarity
+
+    mod = Module("m", [TensorType((2, 8)), TensorType((4, 8))])
+    with pytest.raises(ValueError):
+        make_similarity(mod.body, mod.arguments[0], mod.arguments[1],
+                        metric="manhattan", k=1, largest=False)
+    make_similarity(mod.body, mod.arguments[0], mod.arguments[1],
+                    metric="cos", k=1, largest=True)
 
 
 def test_with_target_knobs():

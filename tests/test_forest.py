@@ -1,0 +1,155 @@
+"""Forest-to-CAM compiler: interval encoding, vote semantics, engine /
+interpreter / traversal parity, camsim aCAM costing, sklearn adapter,
+and the end-to-end example (which also covers 8-device sharding)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.arch import ArchSpec, CamType
+from repro.forest import (CamForestClassifier, TreeArrays,
+                          forest_to_intervals, random_forest,
+                          traverse_matches, tree_to_intervals, vote)
+
+
+def _stump(feature, thr, left_cls, right_cls):
+    """depth-1 tree: x[feature] <= thr -> left_cls else right_cls."""
+    return TreeArrays(feature=[feature, -1, -1], threshold=[thr, 0, 0],
+                      left=[1, -1, -1], right=[2, -1, -1],
+                      leaf_class=[0, left_cls, right_cls])
+
+
+def test_tree_to_intervals_encoding():
+    """Left tightens hi to thr; right tightens lo to nextafter(thr);
+    untested features stay full-range wildcards."""
+    lo, hi, cls = tree_to_intervals(_stump(1, 0.25, 3, 7), dim=4)
+    assert lo.shape == hi.shape == (2, 4)
+    by_cls = {int(c): i for i, c in enumerate(cls)}
+    l3, l7 = by_cls[3], by_cls[7]
+    thr = np.float32(0.25)
+    assert hi[l3, 1] == thr and lo[l3, 1] == -np.inf
+    assert lo[l7, 1] == np.nextafter(thr, np.float32(np.inf))
+    assert hi[l7, 1] == np.inf
+    # wildcard dims on both rows
+    for d in (0, 2, 3):
+        assert lo[:, d].tolist() == [-np.inf] * 2
+        assert hi[:, d].tolist() == [np.inf] * 2
+
+
+def test_boundary_sample_routes_like_traversal():
+    """x exactly at a threshold goes left (<=) in both encodings — the
+    nextafter trick keeps the closed-interval match bit-identical."""
+    trees = [_stump(0, 0.5, 1, 2)]
+    clf = CamForestClassifier(trees, dim=2).compile(
+        ArchSpec(rows=8, cols=8, cam_type=CamType.ACAM))
+    x = np.array([[0.5, 0.0],                          # exactly at thr
+                  [np.nextafter(np.float32(0.5), np.float32(1)), 0.0]],
+                 np.float32)
+    pred = clf.predict(x)
+    np.testing.assert_array_equal(pred, [1, 2])
+    np.testing.assert_array_equal(pred, clf.predict_reference(x))
+
+
+def test_vote_majority_and_ties():
+    leaf_class = np.array([0, 1, 1, 2], np.int32)
+    matches = np.array([[True, True, True, False],     # 1 beats 0
+                        [True, False, False, True],    # 0-2 tie -> 0
+                        [False, False, False, True]],  # only 2
+                       bool)
+    np.testing.assert_array_equal(vote(matches, leaf_class, 3), [1, 0, 2])
+
+
+@pytest.mark.parametrize("shape", [(16, 4, 24), (7, 3, 10)])
+def test_forest_parity_engine_interpreter_traversal(shape, rng):
+    n_trees, depth, dim = shape
+    trees = random_forest(rng, n_trees=n_trees, dim=dim, depth=depth,
+                          n_classes=5, feature_frac=0.5)
+    clf = CamForestClassifier(trees, dim=dim).compile(
+        ArchSpec(rows=32, cols=32, cam_type=CamType.ACAM), batch_hint=32)
+    assert clf.intervals.wildcard_frac > 0       # wildcard dims exercised
+    x = rng.standard_normal((57, dim)).astype(np.float32)
+    pred = clf.predict(x)
+    np.testing.assert_array_equal(pred, clf.predict_interpreted(x))
+    np.testing.assert_array_equal(pred, clf.predict_reference(x))
+    # one matched leaf per tree, matches equal the traversal's
+    m = clf.matches(x)
+    assert (m.sum(axis=1) == n_trees).all()
+    np.testing.assert_array_equal(
+        m, traverse_matches(trees, clf.intervals, x))
+
+
+def test_interval_lowering_requires_acam(rng):
+    trees = random_forest(rng, n_trees=2, dim=8, depth=2, n_classes=2)
+    with pytest.raises(ValueError, match="acam"):
+        CamForestClassifier(trees, dim=8).compile(
+            ArchSpec(rows=16, cols=16, cam_type=CamType.TCAM))
+
+
+def test_forest_cost_report_prices_acam(rng):
+    """camsim report covers the forest mapping; ACAM sensing costs more
+    than the same mapping priced as plain TCAM sensing would."""
+    from repro.camsim import CostModel
+    from dataclasses import replace
+
+    trees = random_forest(rng, n_trees=8, dim=16, depth=3, n_classes=3)
+    clf = CamForestClassifier(trees, dim=16).compile(
+        ArchSpec(rows=32, cols=32, cam_type=CamType.ACAM))
+    rep = clf.cost_report()
+    assert rep.latency_ns > 0 and rep.energy_fj > 0
+    plan = clf.mapping_plans[0]
+    assert plan.search_type == "range" and plan.k == 0
+    assert plan.n_rows == clf.intervals.n_rows
+    tcam_arch = replace(clf.arch, cam_type=CamType.TCAM)
+    tcam_plan = replace(plan, arch=tcam_arch)
+    assert rep.energy_fj > CostModel(tcam_arch).plan_report(tcam_plan).energy_fj
+
+
+def test_from_sklearn_adapter(rng):
+    sklearn = pytest.importorskip("sklearn")           # noqa: F841
+    from sklearn.ensemble import RandomForestClassifier
+
+    from repro.forest import from_sklearn
+
+    X = rng.standard_normal((300, 12)).astype(np.float32)
+    y = (X[:, 0] + X[:, 1] ** 2 > 0.5).astype(int)
+    sk = RandomForestClassifier(n_estimators=10, max_depth=4,
+                                random_state=0).fit(X, y)
+    trees = from_sklearn(sk)
+    assert len(trees) == 10
+    clf = CamForestClassifier(trees, dim=12).compile(
+        ArchSpec(rows=32, cols=32, cam_type=CamType.ACAM))
+    Xq = rng.standard_normal((128, 12)).astype(np.float32)
+    pred = clf.predict(Xq)
+    # bit-identical to OUR traversal of the converted trees (the pinned
+    # contract); close to sklearn's probability-averaged predict
+    np.testing.assert_array_equal(pred, clf.predict_reference(Xq))
+    assert (pred == sk.predict(Xq)).mean() > 0.8
+
+
+def test_forest_intervals_row_bookkeeping(rng):
+    trees = random_forest(rng, n_trees=4, dim=8, depth=3, n_classes=3)
+    iv = forest_to_intervals(trees, 8)
+    assert iv.n_rows == sum(t.n_leaves for t in trees)
+    assert iv.tree_id.tolist() == sorted(iv.tree_id.tolist())
+    assert iv.n_trees == 4 and 0 < iv.wildcard_frac < 1
+
+
+def test_forest_example_end_to_end():
+    """The acceptance pin: examples/forest_inference.py runs a 64-tree
+    ensemble through the RangePlan path — single-device, sharded over 8
+    forced host devices, and served — with bit-identical predictions.
+    Runs in a subprocess because the example forces the device count."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "examples",
+                                      "forest_inference.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0 and "FOREST-OK" in out.stdout, (
+        f"forest example failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")

@@ -1,0 +1,420 @@
+"""aCAM range-search subsystem: oracle contracts, Pallas kernels, the
+engine's ``RangePlan`` family (threshold + interval modes, packed /
+pallas / sharded / served), and the IR interpreter as semantic oracle.
+
+Device count is fixed at jax import time, so the multi-device parity
+matrix runs in a child process under 8 forced host devices (this file
+doubles as that child: ``python tests/test_range.py --child``).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArchSpec, Builder, Module, PassManager, RangePlan,
+                        RangeSpec, SearchPlan, TensorType, clear_plan_cache,
+                        get_plan)
+from repro.core.cim_dialect import (make_acquire, make_execute,
+                                    make_range_search, make_release,
+                                    make_similarity, make_yield)
+from repro.core.executor import execute_module
+from repro.core.ir import IRError
+from repro.core.passes import CompulsoryPartition
+from repro.kernels import ops, ref
+
+DEVICES = 8
+
+
+def _range_module(m, n, dim, arch, *, interval=False, metric="hamming",
+                  tau=0.0, below=True, value_bits=1):
+    """Hand-built range program through the partition pass."""
+    args = [TensorType((m, dim))] + \
+        [TensorType((n, dim))] * (2 if interval else 1)
+    mod = Module("rng", args)
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, list(mod.arguments),
+                       [TensorType((m, n), "i1")])
+    blk = exe.region().block()
+    if interval:
+        rs = make_range_search(blk, mod.arguments[0], lo=mod.arguments[1],
+                               hi=mod.arguments[2],
+                               extra_attrs={"value_bits": value_bits})
+    else:
+        rs = make_range_search(blk, mod.arguments[0],
+                               patterns=mod.arguments[1], metric=metric,
+                               threshold=tau, below=below,
+                               extra_attrs={"value_bits": value_bits})
+    make_yield(blk, rs.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition())
+    return pm.run(mod, {"arch": arch})
+
+
+def _interval_data(rng, m, n, dim, constrained=0.08):
+    """Queries + (lo, hi) with wildcards and a non-trivial match rate."""
+    q = rng.standard_normal((m, dim)).astype(np.float32)
+    lo = np.full((n, dim), -np.inf, np.float32)
+    hi = np.full((n, dim), np.inf, np.float32)
+    sel = rng.random((n, dim)) < constrained
+    lo[sel] = (rng.standard_normal(sel.sum()) - 2).astype(np.float32)
+    hi[sel] = lo[sel] + 3.5
+    return q, lo, hi
+
+
+# ---------------------------------------------------------------------------
+# ref oracles: cam_range promoted to a tested contract; acam_match
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric,tau", [("hamming", 28.0), ("dot", 3.0),
+                                        ("cos", 0.1), ("eucl", 130.0)])
+def test_cam_range_contract_all_metrics(metric, tau, rng):
+    """``cam_range`` is exactly ``distances <= threshold``, with a
+    non-trivial (neither empty nor full) match set at the tested tau."""
+    if metric == "hamming":
+        q = (rng.random((7, 64)) > 0.5).astype(np.float32)
+        p = (rng.random((40, 64)) > 0.5).astype(np.float32)
+    else:
+        q = rng.standard_normal((7, 64)).astype(np.float32)
+        p = rng.standard_normal((40, 64)).astype(np.float32)
+    m = np.asarray(ref.cam_range(jnp.asarray(q), jnp.asarray(p), tau,
+                                 metric=metric))
+    d = np.asarray(ref.distances(jnp.asarray(q), jnp.asarray(p), metric))
+    assert m.dtype == np.bool_ and m.shape == (7, 40)
+    np.testing.assert_array_equal(m, d <= tau)
+    assert 0 < m.sum() < m.size
+
+
+def test_cam_range_threshold_ties_inclusive(rng):
+    """A row at exactly the threshold distance matches (TH sensing
+    latches on the reference level)."""
+    q = (rng.random((1, 32)) > 0.5).astype(np.float32)
+    p = np.repeat(q, 4, axis=0)
+    p[1, :5] = 1 - p[1, :5]            # distance exactly 5
+    p[2, :6] = 1 - p[2, :6]            # distance 6
+    p[3, :] = 1 - p[3, :]              # distance 32
+    m = np.asarray(ref.cam_range(jnp.asarray(q), jnp.asarray(p), 5.0))
+    np.testing.assert_array_equal(m[0], [True, True, False, False])
+
+
+def test_cam_range_empty_match_rows(rng):
+    """Rows with no match at all stay all-False (and stay well-formed
+    through the kernel wrapper too)."""
+    q = (rng.random((3, 48)) > 0.5).astype(np.float32)
+    p = 1.0 - np.repeat(q[[0]], 10, axis=0)     # distance 48 from q[0]
+    m = np.asarray(ref.cam_range(jnp.asarray(q[[0]]), jnp.asarray(p), 4.0))
+    assert m.sum() == 0
+    k = np.asarray(ops.cam_range_match(jnp.asarray(q[[0]]), jnp.asarray(p),
+                                       metric="hamming", threshold=4.0))
+    np.testing.assert_array_equal(m, k)
+
+
+def test_acam_match_oracle_semantics():
+    """Closed-interval contract, wildcards, inclusive bounds."""
+    q = np.array([[0.5, -1.0], [2.0, 0.0]], np.float32)
+    lo = np.array([[0.5, -np.inf], [0.6, -np.inf], [-np.inf, 0.0]],
+                  np.float32)
+    hi = np.array([[0.5, np.inf], [1.0, np.inf], [np.inf, np.inf]],
+                  np.float32)
+    m = np.asarray(ref.acam_match(jnp.asarray(q), jnp.asarray(lo),
+                                  jnp.asarray(hi)))
+    # q0: row0 matches (0.5 in [0.5, 0.5] — inclusive both ends),
+    #     row1 fails (0.5 < 0.6), row2 fails (-1.0 < 0.0)
+    np.testing.assert_array_equal(m[0], [True, False, False])
+    # q1: row0/row1 fail on dim0 upper bound, row2 matches (wildcard dim0)
+    np.testing.assert_array_equal(m[1], [False, False, True])
+
+
+def test_acam_kernel_matches_oracle(rng):
+    """Pallas interval kernel == oracle on ragged, wildcard-heavy data."""
+    q, lo, hi = _interval_data(rng, 23, 137, 70)
+    r = np.asarray(ref.acam_match(jnp.asarray(q), jnp.asarray(lo),
+                                  jnp.asarray(hi)))
+    k = np.asarray(ops.acam_match(jnp.asarray(q), jnp.asarray(lo),
+                                  jnp.asarray(hi)))
+    assert 0 < r.sum() < r.size
+    np.testing.assert_array_equal(r, k)
+
+
+@pytest.mark.parametrize("metric,tau", [("hamming", 28.0), ("dot", 3.0),
+                                        ("eucl", 130.0)])
+def test_range_match_kernel_parity(metric, tau, rng):
+    """Fused thresholded kernel == cam_range oracle (physical metrics)."""
+    if metric == "hamming":
+        q = (rng.random((9, 70)) > 0.5).astype(np.float32)
+        p = (rng.random((37, 70)) > 0.5).astype(np.float32)
+    else:
+        q = rng.standard_normal((9, 70)).astype(np.float32)
+        p = rng.standard_normal((37, 70)).astype(np.float32)
+    r = np.asarray(ref.cam_range(jnp.asarray(q), jnp.asarray(p), tau,
+                                 metric=metric))
+    k = np.asarray(ops.cam_range_match(jnp.asarray(q), jnp.asarray(p),
+                                       metric=metric, threshold=tau))
+    np.testing.assert_array_equal(r, k)
+
+
+# ---------------------------------------------------------------------------
+# engine RangePlan: parity with the interpreter oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric,tau,below", [
+    ("hamming", 40.0, True), ("dot", 4.0, False), ("cos", -2.0, False),
+    ("eucl", 180.0, True)])
+@pytest.mark.parametrize("n", [37, 64, 5])
+def test_range_plan_matches_interpreter(metric, tau, below, n, rng):
+    m, dim = 9, 100
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, metric=metric, tau=tau, below=below)
+    plan = get_plan(mod)
+    assert isinstance(plan, RangePlan) and isinstance(plan.spec, RangeSpec)
+    if metric == "hamming":
+        q = (rng.random((m, dim)) > 0.5).astype(np.float32)
+        p = (rng.random((n, dim)) > 0.5).astype(np.float32)
+    else:
+        q = rng.standard_normal((m, dim)).astype(np.float32)
+        p = rng.standard_normal((n, dim)).astype(np.float32)
+    ev = np.asarray(plan.execute(q, p))
+    iv = np.asarray(execute_module(mod, q, p)[0])
+    np.testing.assert_array_equal(ev, iv)
+
+
+@pytest.mark.parametrize("n", [137, 64, 23, 5])
+def test_interval_plan_matches_interpreter(n, rng):
+    m, dim = 9, 100
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, interval=True)
+    plan = get_plan(mod)
+    assert isinstance(plan, RangePlan)
+    assert not plan.packed            # interval cells are analog floats
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    ev = np.asarray(plan.execute(q, lo, hi))
+    iv = np.asarray(execute_module(mod, q, lo, hi)[0])
+    assert 0 < ev.sum() < ev.size
+    np.testing.assert_array_equal(ev, iv)
+
+
+def test_range_plan_packed_equals_unpacked(rng):
+    """Packed XOR+popcount threshold path == float path, bit for bit."""
+    m, n, dim = 9, 64, 96
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, metric="hamming", tau=40.0)
+    packed = get_plan(mod, pack=True)
+    unpacked = get_plan(mod, pack=False)
+    assert packed.packed and not unpacked.packed and packed is not unpacked
+    q = (rng.random((m, dim)) > 0.5).astype(np.float32)
+    p = (rng.random((n, dim)) > 0.5).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(packed.execute(q, p)),
+                                  np.asarray(unpacked.execute(q, p)))
+
+
+def test_range_plan_pallas_backend(rng):
+    """Pallas range executables (both modes) match the interpreter."""
+    m, n, dim = 9, 37, 70
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, metric="eucl", tau=150.0)
+    plan = get_plan(mod, backend="pallas")
+    assert isinstance(plan, RangePlan) and not plan.packed
+    q = rng.standard_normal((m, dim)).astype(np.float32)
+    p = rng.standard_normal((n, dim)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(plan.execute(q, p)),
+                                  np.asarray(execute_module(mod, q, p)[0]))
+
+    modi = _range_module(m, n, dim, arch, interval=True)
+    plani = get_plan(modi, backend="pallas")
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    np.testing.assert_array_equal(
+        np.asarray(plani.execute(q, lo, hi)),
+        np.asarray(execute_module(modi, q, lo, hi)[0]))
+    # packed pallas range is refused explicitly, not silently unpacked
+    with pytest.raises(ValueError):
+        get_plan(_range_module(m, n, dim, arch, metric="hamming", tau=9.0),
+                 backend="pallas", pack=True)
+
+
+def test_range_plan_cache_keys(rng):
+    """Range plans live in the shared cache; threshold and mode join the
+    key; a range plan never collides with a similarity plan of the same
+    geometry."""
+    clear_plan_cache()
+    m, n, dim = 8, 32, 64
+    arch = ArchSpec(rows=16, cols=32)
+    mod_a = _range_module(m, n, dim, arch, metric="hamming", tau=10.0)
+    mod_b = _range_module(m, n, dim, arch, metric="hamming", tau=10.0)
+    mod_c = _range_module(m, n, dim, arch, metric="hamming", tau=11.0)
+    pa, pb, pc = get_plan(mod_a), get_plan(mod_b), get_plan(mod_c)
+    assert pa is pb                       # same program shape: cache hit
+    assert pa is not pc                   # threshold is part of the key
+
+    simmod = Module("sim", [TensorType((m, dim)), TensorType((n, dim))])
+    b = Builder(simmod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, list(simmod.arguments),
+                       [TensorType((m, 3)), TensorType((m, 3), "i32")])
+    blk = exe.region().block()
+    sim = make_similarity(blk, simmod.arguments[0], simmod.arguments[1],
+                          metric="hamming", k=3, largest=False,
+                          extra_attrs={"value_bits": 1})
+    make_yield(blk, sim.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition())
+    ps = get_plan(pm.run(simmod, {"arch": arch}))
+    assert isinstance(ps, SearchPlan) and not isinstance(ps, RangePlan)
+    assert ps is not pa
+
+
+def test_range_plan_microbatch_and_memo(rng):
+    """Runtime M beyond the traced batch streams in chunks; a jax-array
+    gallery hits the pattern memo on the second execute."""
+    m, n, dim = 8, 40, 64
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, 61, n, dim)
+    loj, hij = jnp.asarray(lo), jnp.asarray(hi)
+    h0, m0 = plan.pattern_hits, plan.pattern_misses
+    ev = np.asarray(plan.execute(q, loj, hij))
+    assert ev.shape == (61, n)
+    assert plan.pattern_misses == m0 + 1
+    np.asarray(plan.execute(q, loj, hij))
+    assert plan.pattern_hits == h0 + 1
+    big = _range_module(61, n, dim, arch, interval=True)
+    np.testing.assert_array_equal(
+        ev, np.asarray(execute_module(big, q, lo, hi)[0]))
+
+
+def test_range_plan_served(rng):
+    """CamSearchServer serves a range plan: concurrent clients get the
+    same matches the plan computes directly; search() refuses."""
+    import threading
+
+    from repro.serving import CamSearchServer
+
+    m, n, dim = 16, 48, 64
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _range_module(m, n, dim, arch, interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, 64, n, dim)
+    direct = np.asarray(plan.execute(q, lo, hi))
+    got = {}
+    with CamSearchServer(plan, (lo, hi), max_wait_ms=1.0) as srv:
+        with pytest.raises(TypeError):
+            srv.search(q[:2])
+        parts = np.array_split(np.arange(64), 4)
+        def client(c):
+            got[c] = srv.match(q[parts[c]])
+        ts = [threading.Thread(target=client, args=(c,)) for c in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        snap = srv.snapshot()
+    served = np.concatenate([got[c] for c in range(4)])
+    np.testing.assert_array_equal(served, direct)
+    assert snap["plan"]["family"] == "range"
+    assert snap["plan"]["mode"] == "interval"
+    # geometry validation up front
+    with pytest.raises(ValueError):
+        CamSearchServer(plan, (lo[:, :-1], hi[:, :-1]))
+    with pytest.raises(ValueError):
+        CamSearchServer(plan, lo)          # interval plan needs (lo, hi)
+
+
+def test_range_search_ir_validation():
+    mod = Module("bad", [TensorType((4, 8)), TensorType((6, 8)),
+                         TensorType((6, 8))])
+    blk = mod.body
+    q, lo, hi = mod.arguments
+    with pytest.raises(IRError):
+        make_range_search(blk, q, lo=lo)               # hi missing
+    with pytest.raises(IRError):
+        make_range_search(blk, q, patterns=lo, metric="hamming")  # no tau
+    with pytest.raises(ValueError):
+        make_range_search(blk, q, patterns=lo, metric="manhattan",
+                          threshold=1.0)               # unknown metric
+    with pytest.raises(IRError):
+        make_range_search(blk, q, lo=lo, hi=hi, metric="hamming",
+                          threshold=1.0)               # mixed forms
+
+
+# ---------------------------------------------------------------------------
+# sharded parity (child process under 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+
+def _child_main() -> int:
+    import jax
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+
+    assert jax.device_count() == DEVICES, jax.device_count()
+    rng = np.random.default_rng(7)
+    arch = ArchSpec(rows=16, cols=32)
+
+    # threshold (packed hamming + float eucl) and interval modes over
+    # aligned / ragged / sub-shard / tiny galleries
+    for n in (137, 64, 23, 5):
+        m, dim = 9, 100
+        q = (rng.random((m, dim)) > 0.5).astype(np.float32)
+        p = (rng.random((n, dim)) > 0.5).astype(np.float32)
+        mod = _range_module(m, n, dim, arch, metric="hamming", tau=40.0)
+        single = get_plan(mod, shards=1)
+        sharded = get_plan(mod, shards=DEVICES)
+        assert sharded.shards == DEVICES and single is not sharded
+        sv = np.asarray(single.execute(q, p))
+        mv = np.asarray(sharded.execute(q, p))
+        iv = np.asarray(execute_module(mod, q, p)[0])
+        np.testing.assert_array_equal(sv, mv, err_msg=f"hamming n={n}")
+        np.testing.assert_array_equal(sv, iv, err_msg=f"hamming n={n}")
+
+        qf = rng.standard_normal((m, dim)).astype(np.float32)
+        pf = rng.standard_normal((n, dim)).astype(np.float32)
+        emod = _range_module(m, n, dim, arch, metric="eucl", tau=170.0)
+        es, em = get_plan(emod, shards=1), get_plan(emod, shards=DEVICES)
+        np.testing.assert_array_equal(np.asarray(es.execute(qf, pf)),
+                                      np.asarray(em.execute(qf, pf)),
+                                      err_msg=f"eucl n={n}")
+
+        imod = _range_module(m, n, dim, arch, interval=True)
+        i1, i8 = get_plan(imod, shards=1), get_plan(imod, shards=DEVICES)
+        q2, lo, hi = _interval_data(rng, m, n, dim)
+        a = np.asarray(i1.execute(q2, lo, hi))
+        b = np.asarray(i8.execute(q2, lo, hi))
+        c = np.asarray(execute_module(imod, q2, lo, hi)[0])
+        np.testing.assert_array_equal(a, b, err_msg=f"interval n={n}")
+        np.testing.assert_array_equal(a, c, err_msg=f"interval n={n}")
+
+    print("RANGE-SHARDED-OK")
+    return 0
+
+
+def test_sharded_range_parity_multi_device():
+    """Sharded RangePlan parity matrix under 8 forced host devices."""
+    from repro.launch.mesh import forced_host_devices_env
+
+    env = forced_host_devices_env(DEVICES)
+    env.pop("REPRO_ENGINE_MAX_CHUNK", None)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "RANGE-SHARDED-OK" in out.stdout, (
+        f"range sharded child failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+        raise SystemExit(_child_main())
+    raise SystemExit(pytest.main([__file__, "-v"]))
