@@ -1,0 +1,74 @@
+"""Tier-1 wall-clock budget gate.
+
+A test-suite regression (a new test accidentally quadratic, a fixture
+recompiling the world) should surface in the PR that causes it, not
+three PRs later.  CI times the tier-1 run and this script fails if it
+exceeded ``factor`` x the recorded baseline.
+
+    python -m benchmarks.check_tier1_budget --wall <seconds>
+
+Baseline lives in ``.github/tier1_baseline.json``::
+
+    {"wall_s": <seconds>, "factor": 1.5, "host": "<note>"}
+
+The baseline is host-calibrated: re-record it (set ``wall_s`` to a
+fresh CI measurement) whenever the suite legitimately grows or the
+runner hardware changes.  ``REPRO_TIER1_BUDGET`` overrides the allowed
+seconds directly; ``0``/``off`` disables the gate (recording still
+prints).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    ".github", "tier1_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--wall", type=float, required=True,
+                    help="measured tier-1 wall-clock seconds")
+    args = ap.parse_args(argv)
+
+    env = os.environ.get("REPRO_TIER1_BUDGET", "").lower()
+    if env in ("0", "off", "false"):
+        print(f"tier-1 budget gate disabled; measured {args.wall:.0f}s")
+        return 0
+
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)
+    factor = float(baseline.get("factor", 1.5))
+    override = None
+    if env and env not in ("auto",):
+        try:
+            override = float(env)
+        except ValueError:
+            print(f"ignoring non-numeric REPRO_TIER1_BUDGET={env!r}; "
+                  f"using the recorded baseline")
+    if override is not None:
+        budget = override
+        print(f"tier-1 wall clock: {args.wall:.0f}s "
+              f"(REPRO_TIER1_BUDGET override -> budget {budget:.0f}s)")
+    else:
+        budget = float(baseline["wall_s"]) * factor
+        print(f"tier-1 wall clock: {args.wall:.0f}s "
+              f"(baseline {baseline['wall_s']}s x {factor} -> "
+              f"budget {budget:.0f}s)")
+    if args.wall > budget:
+        print(f"FAIL: tier-1 suite exceeded its wall-clock budget by "
+              f"{args.wall - budget:.0f}s — either fix the regression or "
+              f"re-record .github/tier1_baseline.json in the same PR",
+              file=sys.stderr)
+        return 1
+    print("tier-1 budget OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,9 +16,9 @@ import traceback
 
 from repro.core import plan_cache_stats
 
-from . import (bench_engine, bench_forest, bench_packed, bench_serve,
-               fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
-               roofline_table, table1_density, table2_knn)
+from . import (bench_engine, bench_forest, bench_hdc, bench_packed,
+               bench_serve, fig7_validation, fig8_dse, fig9_isocapacity,
+               gpu_comparison, roofline_table, table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -41,6 +41,9 @@ SUITES = [
     # decision-forest aCAM range path vs interpreter oracle; detailed
     # record in BENCH_forest.json (gate REPRO_FOREST_GATE, auto = 2x)
     ("forest_smoke", bench_forest.run),
+    # incremental update_rows vs full gallery re-prepare + HDC retrain
+    # record; detailed record in BENCH_hdc.json (REPRO_HDC_GATE, auto = 3x)
+    ("hdc_smoke", bench_hdc.run),
 ]
 
 

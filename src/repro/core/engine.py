@@ -68,6 +68,24 @@ line, so row tiles (and shards) *concatenate* their boolean match
 slices in ascending row order.  See the range section of
 ``docs/engine.md`` and ``docs/forest.md``.
 
+Gallery mutation (online-learning workloads)
+--------------------------------------------
+Stored patterns are immutable *inputs* to a plan, but serving workloads
+whose galleries change under live traffic — HDC retraining rewrites
+class vectors, one-shot learners add exemplars — cannot afford a full
+re-prepare (re-encode + re-pack + re-layout of every row) per touched
+row.  :meth:`SearchPlan.update_rows` / :meth:`RangePlan.update_rows`
+apply a row-granular mutation and rewrite **only the touched row
+tiles** of the memoised prepared layout: the updated gallery comes back
+as a fresh immutable ``jax.Array`` whose pattern-memo entry was seeded
+incrementally (packed lanes repacked per tile, sharded layouts
+re-pinned so each tile lands on its owning shard, pallas layouts
+row-scattered).  Results after an update are bit-identical to
+re-preparing the mutated gallery from scratch — the incremental path
+runs the same encode/pack/layout arithmetic on the touched tiles.
+``REPRO_ENGINE_UPDATE=off`` disables the incremental rewrite (the
+mutation still happens; the next dispatch re-prepares in full).
+
 Sharded execution (multi-device)
 --------------------------------
 ``get_plan(..., shards=S)`` compiles the same program against a 1-D
@@ -88,7 +106,7 @@ from __future__ import annotations
 import os
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -190,6 +208,42 @@ def _resolve_pack(spec: "SimilaritySpec", pack: Optional[bool]) -> bool:
             f"packed execution requires a binary/bipolar metric "
             f"(hamming/dot/cos), got {spec.metric!r}")
     return bool(pack)
+
+
+def _update_enabled() -> bool:
+    """``REPRO_ENGINE_UPDATE`` kill switch for the incremental update
+    path: ``off``/``0`` makes ``update_rows`` still apply the mutation
+    but skip the memo rewrite — the next dispatch re-prepares in full
+    (the pre-update behaviour, kept reachable for triage)."""
+    env = os.environ.get("REPRO_ENGINE_UPDATE", "auto").lower()
+    return env not in ("0", "off", "false")
+
+
+#: source-gallery mutation for update_rows.  The donating variant
+#: reuses the old gallery's buffer (an in-place scatter — the 80 MB
+#: copy of a large float gallery is otherwise the dominant update
+#: cost); callers opt in only when nothing else references the array.
+_scatter_rows = jax.jit(lambda g, i, r: g.at[i].set(r))
+_scatter_rows_donated = jax.jit(lambda g, i, r: g.at[i].set(r),
+                                donate_argnums=0)
+
+
+def _tile_rows_block(arr: jax.Array, tiles: jax.Array, tr: int,
+                     n: int) -> jax.Array:
+    """Gather whole row tiles out of a stored operand (jit-traceable).
+
+    Returns the ``(len(tiles) * tr, dim)`` row block covering the given
+    row tiles, with slots at/beyond row ``n`` zeroed — exactly the
+    content a full prepare lays out for those tiles (it zero-pads
+    ragged rows *after* encoding, but every cell encoding maps 0 -> 0,
+    so zeroing the raw rows first is equivalent).
+    """
+    tiles = jnp.asarray(tiles, jnp.int32)
+    row_ids = (tiles[:, None] * tr
+               + jnp.arange(tr, dtype=jnp.int32)).reshape(-1)
+    valid = row_ids < n
+    block = jnp.asarray(arr)[jnp.minimum(row_ids, n - 1)]
+    return jnp.where(valid[:, None], block, 0)
 
 
 def _as_2d(q: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -607,9 +661,83 @@ def _lay_patterns(p, care, spec: SimilaritySpec, gr_total: int,
     return tuple(leaves)
 
 
+def _tile_row_update(spec, packed: bool, placement=None):
+    """Row-update closure for the tile-layout executables (jnp + sharded).
+
+    ``update(prepared, srcs, idx)`` re-lays only the row tiles touched
+    by ``idx`` — running the *same* encode/pack/layout code a full
+    prepare runs, on a ``len(tiles)``-tile slice — and scatters them
+    into the prepared leaves.  ``srcs`` are the **post-mutation** stored
+    operands, ``(gallery,)`` / ``(gallery, care)`` / ``(lo, hi)``.
+    ``placement`` (sharded plans) re-pins each updated leaf to the mesh
+    so every rewritten tile lands back on its owning shard.
+    """
+    def relay(prepared, srcs, tiles):
+        # tiles has static length under jit; the jit cache retraces per
+        # touched-tile count, which a retraining loop repeats constantly
+        nt = tiles.shape[0]
+        tspec = replace(spec, n=nt * spec.tile_rows)
+        blocks = [_tile_rows_block(s, tiles, spec.tile_rows, spec.n)
+                  for s in srcs]
+        if isinstance(spec, SimilaritySpec):
+            fresh = _lay_patterns(blocks[0],
+                                  blocks[1] if len(blocks) > 1 else None,
+                                  tspec, nt, packed)
+        else:
+            fresh = _lay_range_patterns(blocks, tspec, nt, packed)
+        return tuple(leaf.at[tiles].set(f.astype(leaf.dtype))
+                     for leaf, f in zip(prepared, fresh))
+
+    # the donating variant scatters the fresh tiles into the old
+    # prepared leaves' buffers in place (the caller just invalidated
+    # the old layout — see update_rows(donate=True))
+    relay_jit = jax.jit(relay)
+    relay_don = jax.jit(relay, donate_argnums=0)
+
+    def update(prepared, srcs, idx, donate=False):
+        tiles = np.unique(np.asarray(idx, np.int64) // spec.tile_rows)
+        fn = relay_don if donate else relay_jit
+        out = fn(tuple(prepared), tuple(srcs), jnp.asarray(tiles, jnp.int32))
+        if placement is not None:
+            out = tuple(jax.device_put(x, placement) for x in out)
+        return out
+
+    return update
+
+
+def _row_scatter_update(spec, packed: bool, interval: bool = False):
+    """Row-update closure for the pallas executables, whose prepared
+    layout is the block-padded 2-D operand itself: encode/pack just the
+    touched rows and scatter them (padding lanes/columns stay zero)."""
+    def relay(prepared, srcs, j):
+        out = []
+        for leaf, s in zip(prepared, srcs):
+            rows = jnp.asarray(s)[j]
+            if packed:
+                enc = kpack.pack_bits(_bits(rows, spec.metric))
+            elif interval:
+                enc = rows.astype(jnp.float32)
+            else:
+                enc = _encode(rows, spec.metric).astype(jnp.float32)
+            enc = jnp.pad(enc, ((0, 0), (0, leaf.shape[1] - enc.shape[1])))
+            out.append(leaf.at[j].set(enc.astype(leaf.dtype)))
+        return tuple(out)
+
+    relay_jit = jax.jit(relay)
+    relay_don = jax.jit(relay, donate_argnums=0)
+
+    def update(prepared, srcs, idx, donate=False):
+        fn = relay_don if donate else relay_jit
+        return fn(tuple(prepared), tuple(srcs),
+                  jnp.asarray(np.asarray(idx, np.int64)))
+
+    return update
+
+
 def _build_scan_executable(spec: SimilaritySpec, batch: int,
                            packed: bool = False):
-    """(prepare_patterns, chunk_fn) for the jnp (reference-tiled) backend.
+    """(prepare_patterns, chunk_fn, row_update) for the jnp
+    (reference-tiled) backend.
 
     ``chunk_fn`` mirrors ``kernels.ref.cam_topk_tiled`` exactly — same
     partial-sum order, same stable top-k and tournament merges — but as a
@@ -632,12 +760,13 @@ def _build_scan_executable(spec: SimilaritySpec, batch: int,
         v, i = scan(qt, pt, roffs)
         return to_logical(v, float(dim)), i
 
-    return jax.jit(prepare), jax.jit(chunk_fn)
+    return jax.jit(prepare), jax.jit(chunk_fn), _tile_row_update(spec, packed)
 
 
 def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int,
                               packed: bool = False):
-    """(prepare_patterns, chunk_fn) sharding gallery rows over a device mesh.
+    """(prepare_patterns, chunk_fn, row_update) sharding gallery rows
+    over a device mesh.
 
     Device ``d`` holds row tiles ``[d*tps, (d+1)*tps)`` of the padded
     gallery (``tps = ceil(grid_rows / shards)``) and runs the *same*
@@ -696,7 +825,9 @@ def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int,
             out_specs=(PartitionSpec("data"), PartitionSpec("data")),
             check_rep=False)(qt, pt)                          # (S, B, k)
 
-    return prepare, jax.jit(chunk_fn)
+    sh = NamedSharding(mesh, PartitionSpec("data"))
+    return prepare, jax.jit(chunk_fn), _tile_row_update(spec, packed,
+                                                        placement=sh)
 
 
 def merge_shard_candidates(values: Any, indices: Any, *, k: int,
@@ -726,7 +857,8 @@ def merge_shard_candidates(values: Any, indices: Any, *, k: int,
 
 def _build_pallas_executable(spec: SimilaritySpec, batch: int,
                              packed: bool = False):
-    """(prepare_patterns, chunk_fn) driving the fused Pallas kernels.
+    """(prepare_patterns, chunk_fn, row_update) driving the fused
+    Pallas kernels.
 
     Pattern encoding and block padding run once per stored array (hoisted
     behind the plan cache) instead of on every ``cam_topk`` call.  With
@@ -776,7 +908,8 @@ def _build_pallas_executable(spec: SimilaritySpec, batch: int,
         v, i = kref.pad_candidates(v[:batch], i[:batch], k, phys_largest)
         return to_logical(v, float(dim)), i
 
-    return jax.jit(prepare), jax.jit(chunk_fn)
+    return jax.jit(prepare), jax.jit(chunk_fn), _row_scatter_update(spec,
+                                                                    packed)
 
 
 # ---------------------------------------------------------------------------
@@ -857,8 +990,8 @@ def _lay_range_patterns(pats, spec: RangeSpec, gr_total: int,
 
 def _build_range_scan_executable(spec: RangeSpec, batch: int,
                                  packed: bool = False):
-    """(prepare, chunk_fn) for the jnp range path: chunk_fn returns the
-    ``(batch, grid_rows * tile_rows)`` boolean match block."""
+    """(prepare, chunk_fn, row_update) for the jnp range path: chunk_fn
+    returns the ``(batch, grid_rows * tile_rows)`` boolean match block."""
     gr = spec.grid_rows
     scan = _range_tile_scan(spec, batch, _range_col_fn(spec, packed))
     compare = _range_compare(spec)
@@ -872,12 +1005,13 @@ def _build_range_scan_executable(spec: RangeSpec, batch: int,
         hit = compare(d)
         return hit.transpose(1, 0, 2).reshape(batch, -1)
 
-    return jax.jit(prepare), jax.jit(chunk_fn)
+    return jax.jit(prepare), jax.jit(chunk_fn), _tile_row_update(spec, packed)
 
 
 def _build_range_sharded_executable(spec: RangeSpec, batch: int, shards: int,
                                     packed: bool = False):
-    """(prepare, chunk_fn) sharding stored rows over a device mesh.
+    """(prepare, chunk_fn, row_update) sharding stored rows over a
+    device mesh.
 
     Same bank-level row split as the sharded search executable, but the
     per-device outputs are boolean match slices that simply
@@ -910,11 +1044,14 @@ def _build_range_sharded_executable(spec: RangeSpec, batch: int, shards: int,
             out_specs=PartitionSpec("data"),
             check_rep=False)(qt, pt)                     # (S, B, tps*tr)
 
-    return prepare, jax.jit(chunk_fn)
+    sh = NamedSharding(mesh, PartitionSpec("data"))
+    return prepare, jax.jit(chunk_fn), _tile_row_update(spec, packed,
+                                                        placement=sh)
 
 
 def _build_range_pallas_executable(spec: RangeSpec, batch: int):
-    """(prepare, chunk_fn) driving the fused aCAM / threshold kernels.
+    """(prepare, chunk_fn, row_update) driving the fused aCAM /
+    threshold kernels.
 
     The match threshold (or the ``violations == 0`` test) happens at
     block-extraction time inside the kernel — only an int8 matrix
@@ -957,7 +1094,8 @@ def _build_range_pallas_executable(spec: RangeSpec, batch: int):
                 n_valid=n, block_m=bm, block_n=bn, block_d=bd)
         return hit[:batch] != 0
 
-    return jax.jit(prepare), jax.jit(chunk_fn)
+    return jax.jit(prepare), jax.jit(chunk_fn), _row_scatter_update(
+        spec, packed=False, interval=interval)
 
 
 # ---------------------------------------------------------------------------
@@ -980,6 +1118,27 @@ class PendingSearch:
     chunks: list
 
 
+def _src_ident(x) -> Tuple:
+    """Memo identity of one stored-operand source array."""
+    return (id(x), tuple(x.shape), str(x.dtype))
+
+
+def _memo_insert(plan, srcs: Tuple[Any, ...], prepared) -> None:
+    """Insert a prepared layout into the plan's pattern memo (LRU).
+
+    The entry keeps strong references to the sources so their ids
+    cannot be recycled while it lives — same contract as the miss path
+    of :func:`_memoised_prepare`.
+    """
+    with plan._pattern_lock:
+        plan._pattern_cache[tuple(_src_ident(s) for s in srcs)] = \
+            (srcs, prepared)
+        slots = plan._pattern_cache_slots()
+        while len(plan._pattern_cache) > slots:
+            plan._pattern_cache.popitem(last=False)
+            plan.pattern_evictions += 1
+
+
 def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
                       check: Callable[[], None]):
     """Per-plan pattern-prep memoisation shared by both plan families.
@@ -995,15 +1154,12 @@ def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
     recycled while it lives.  ``check`` runs only when actually
     preparing (memo hits skip it).
     """
-    def ident(x):
-        return (id(x), tuple(x.shape), str(x.dtype))
-
     if not all(isinstance(s, jax.Array) for s in srcs):
         with plan._pattern_lock:
             plan.pattern_misses += 1
         check()
         return run()
-    key = tuple(ident(s) for s in srcs)
+    key = tuple(_src_ident(s) for s in srcs)
     with plan._pattern_lock:
         hit = plan._pattern_cache.get(key)
         if hit is not None:
@@ -1014,11 +1170,7 @@ def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
     prepared = run()
     with plan._pattern_lock:
         plan.pattern_misses += 1
-        plan._pattern_cache[key] = (srcs, prepared)
-        slots = plan._pattern_cache_slots()
-        while len(plan._pattern_cache) > slots:
-            plan._pattern_cache.popitem(last=False)
-            plan.pattern_evictions += 1
+    _memo_insert(plan, srcs, prepared)
     return prepared
 
 
@@ -1034,11 +1186,19 @@ class SearchPlan:
     shards: int = 1
     #: bit-packed execution (uint32 lanes, XOR+popcount physical search)
     packed: bool = False
+    #: backend-specific incremental row-update closure (see update_rows)
+    _row_update: Optional[Callable] = field(default=None, repr=False)
     executions: int = 0
     chunks_run: int = 0
     pattern_hits: int = 0
     pattern_misses: int = 0
     pattern_evictions: int = 0
+    #: update_rows telemetry: calls, total rows rewritten, and calls
+    #: that could not take the incremental path (memo miss / kill
+    #: switch / mutable sources) and fell back to full re-prepare
+    row_updates: int = 0
+    rows_updated: int = 0
+    row_update_fallbacks: int = 0
     _pattern_cache: "OrderedDict[Tuple, Tuple[Any, ...]]" = \
         field(default_factory=OrderedDict, repr=False)
     # plans are shared process-wide (the plan cache hands the same object
@@ -1173,6 +1333,109 @@ class SearchPlan:
             v, i = jnp.asarray(v), jnp.asarray(i)
         return v, i
 
+    # -- gallery mutation --------------------------------------------------
+
+    def _validate_update(self, idx: np.ndarray, *new_rows) -> None:
+        spec = self.spec
+        if idx.ndim != 1:
+            raise ValueError(f"indices must be 1-D, got shape {idx.shape}")
+        if idx.size == 0:
+            return
+        if idx.min() < 0 or idx.max() >= spec.n:
+            raise ValueError(
+                f"row indices out of range for an n={spec.n} gallery")
+        if np.unique(idx).size != idx.size:
+            # jax scatter with duplicate indices picks an unspecified
+            # winner; reject instead of silently choosing one
+            raise ValueError("duplicate row indices in update_rows")
+        for nr in new_rows:
+            if tuple(np.shape(nr)) != (idx.size, spec.dim):
+                raise ValueError(
+                    f"new rows shape {np.shape(nr)} != "
+                    f"({idx.size}, {spec.dim})")
+
+    def _seed_updated_memo(self, old_srcs: Tuple[Any, ...],
+                           new_srcs: Tuple[Any, ...], idx: np.ndarray,
+                           donate: bool = False) -> None:
+        """Derive the mutated sources' prepared layout from the old one.
+
+        Incremental only when the old layout is memoised (immutable
+        jax-array sources that have been prepared and not evicted) and
+        the update path is enabled; otherwise a counted fallback — the
+        next dispatch re-prepares the new sources in full, which is
+        always correct, just not incremental.
+
+        ``donate`` (the caller just invalidated the old gallery):
+        the stale memo entry is popped and its prepared leaves' buffers
+        are reused in place for the fresh-tile scatter — no full-leaf
+        copy per update.
+        """
+        with self._stats_lock:
+            self.row_updates += 1
+            self.rows_updated += int(idx.size)
+        if self._row_update is None or not _update_enabled() or \
+                not all(isinstance(s, jax.Array) for s in old_srcs):
+            with self._stats_lock:
+                self.row_update_fallbacks += 1
+            return
+        key = tuple(_src_ident(s) for s in old_srcs)
+        with self._pattern_lock:
+            if donate:       # the old layout must not outlive its buffers
+                hit = self._pattern_cache.pop(key, None)
+            else:
+                hit = self._pattern_cache.get(key)
+        if hit is None:
+            with self._stats_lock:
+                self.row_update_fallbacks += 1
+            return
+        prepared = self._row_update(hit[-1], new_srcs, idx, donate)
+        _memo_insert(self, new_srcs, prepared)
+
+    def update_rows(self, gallery, indices, new_rows, care=None, *,
+                    donate: bool = False):
+        """Row-granular gallery mutation with incremental re-preparation.
+
+        Returns the updated gallery as a fresh immutable ``jax.Array``
+        whose prepared layout was derived from ``gallery``'s memoised
+        layout by rewriting only the row tiles ``indices`` touch —
+        encode/pack/layout runs on those tiles alone (sharded plans
+        re-pin the leaves so each tile lands on its owning shard), so an
+        online-learning workload touching 1% of a large gallery skips
+        ~99% of the re-prepare work.  Results are bit-identical to a
+        full re-prepare of the mutated gallery.
+
+        ``care`` must be the plan's care mask for ternary programs (the
+        memo keys on the (gallery, care) pair; the mask itself is
+        immutable).  If ``gallery``'s layout is not memoised — numpy
+        source, never dispatched, or evicted — the mutation still
+        happens and the next dispatch re-prepares in full (counted in
+        ``row_update_fallbacks``).
+
+        ``donate=True`` reuses ``gallery``'s device buffer for the
+        mutation (in-place scatter instead of a full-gallery copy —
+        the copy otherwise dominates large-gallery updates).  Only pass
+        it when nothing else will read ``gallery`` afterwards: the old
+        array is invalidated, exactly like jit donation.
+        """
+        spec = self.spec
+        if (care is None) != (spec.care_arg is None):
+            raise ValueError("care mask must be passed iff the plan's "
+                             "program is ternary")
+        idx = np.atleast_1d(np.asarray(indices, np.int64))
+        self._validate_update(idx, new_rows)
+        g = gallery if isinstance(gallery, jax.Array) else jnp.asarray(gallery)
+        if idx.size == 0:
+            return g
+        if self.packed and spec.metric == "hamming":
+            _check_binary_cells(new_rows, "updated rows")
+        scatter = _scatter_rows_donated if donate else _scatter_rows
+        new_g = scatter(g, jnp.asarray(idx),
+                        jnp.asarray(new_rows).astype(g.dtype))
+        old_srcs = (g,) if care is None else (g, care)
+        new_srcs = (new_g,) if care is None else (new_g, care)
+        self._seed_updated_memo(old_srcs, new_srcs, idx, donate)
+        return new_g
+
 
 @dataclass
 class RangePlan(SearchPlan):
@@ -1252,6 +1515,43 @@ class RangePlan(SearchPlan):
         jax array regardless of shard count, like the search plan)."""
         match = self.finalize(self.dispatch(*inputs))
         return jnp.asarray(match) if self.shards > 1 else match
+
+    def update_rows(self, stored, indices, new_rows, care=None, *,
+                    donate: bool = False):
+        """Row-granular mutation of a range plan's stored operands.
+
+        ``stored`` is the current stored content — the pattern array
+        for threshold mode, the ``(lo, hi)`` pair for interval mode —
+        and ``new_rows`` matches that structure with ``(len(indices),
+        dim)`` row blocks.  Returns the updated operand(s) in the same
+        structure (jax arrays), memo-seeded incrementally exactly like
+        :meth:`SearchPlan.update_rows` (including the ``donate``
+        buffer-reuse contract).
+        """
+        if care is not None:
+            raise ValueError("range plans have no care operand")
+        spec = self.spec
+        multi = len(spec.pattern_args) == 2
+        olds = tuple(stored) if multi else (stored,)
+        news = tuple(new_rows) if multi else (new_rows,)
+        if len(olds) != len(spec.pattern_args) or len(news) != len(olds):
+            raise ValueError(
+                f"expected {len(spec.pattern_args)} stored operand(s) "
+                f"and matching new-row block(s)")
+        idx = np.atleast_1d(np.asarray(indices, np.int64))
+        self._validate_update(idx, *news)
+        gj = tuple(o if isinstance(o, jax.Array) else jnp.asarray(o)
+                   for o in olds)
+        if idx.size == 0:
+            return gj if multi else gj[0]
+        if self.packed and spec.metric == "hamming":
+            _check_binary_cells(news[0], "updated rows")
+        j = jnp.asarray(idx)
+        scatter = _scatter_rows_donated if donate else _scatter_rows
+        upd = tuple(scatter(g, j, jnp.asarray(nr).astype(g.dtype))
+                    for g, nr in zip(gj, news))
+        self._seed_updated_memo(gj, upd, idx, donate)
+        return upd if multi else upd[0]
 
 
 def _size(shape: Tuple[int, ...]) -> int:
@@ -1363,27 +1663,30 @@ def get_plan(module: Module, *, backend: str = "jnp",
         _STATS["misses"] += 1
     if is_range:
         if s > 1:
-            prepare, chunk_fn = _build_range_sharded_executable(
+            prepare, chunk_fn, row_update = _build_range_sharded_executable(
                 spec, b, s, packed=packed)
         elif backend == "pallas":
-            prepare, chunk_fn = _build_range_pallas_executable(spec, b)
+            prepare, chunk_fn, row_update = _build_range_pallas_executable(
+                spec, b)
         else:
-            prepare, chunk_fn = _build_range_scan_executable(
+            prepare, chunk_fn, row_update = _build_range_scan_executable(
                 spec, b, packed=packed)
         plan = RangePlan(spec=spec, backend=backend, batch=b, shards=s,
-                         packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
+                         packed=packed, _prepare=prepare, _chunk_fn=chunk_fn,
+                         _row_update=row_update)
     else:
         if s > 1:
-            prepare, chunk_fn = _build_sharded_executable(spec, b, s,
-                                                          packed=packed)
+            prepare, chunk_fn, row_update = _build_sharded_executable(
+                spec, b, s, packed=packed)
         elif backend == "pallas":
-            prepare, chunk_fn = _build_pallas_executable(spec, b,
-                                                         packed=packed)
+            prepare, chunk_fn, row_update = _build_pallas_executable(
+                spec, b, packed=packed)
         else:
-            prepare, chunk_fn = _build_scan_executable(spec, b,
-                                                       packed=packed)
+            prepare, chunk_fn, row_update = _build_scan_executable(
+                spec, b, packed=packed)
         plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
-                          packed=packed, _prepare=prepare, _chunk_fn=chunk_fn)
+                          packed=packed, _prepare=prepare, _chunk_fn=chunk_fn,
+                          _row_update=row_update)
     with _CACHE_LOCK:
         # lost-race double insert is harmless but keep one canonical plan
         plan = _PLAN_CACHE.setdefault(key, plan)

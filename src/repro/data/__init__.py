@@ -14,7 +14,8 @@ the pipeline generates deterministic synthetic data with matched shapes:
   restarts resume the stream exactly (the loader state is one integer).
 """
 
-from .synthetic import TokenStream, hdc_dataset, knn_dataset
+from .synthetic import TokenStream, hdc_dataset, hdc_mnist_dataset, knn_dataset
 from .loader import ShardedLoader
 
-__all__ = ["TokenStream", "hdc_dataset", "knn_dataset", "ShardedLoader"]
+__all__ = ["TokenStream", "hdc_dataset", "hdc_mnist_dataset", "knn_dataset",
+           "ShardedLoader"]

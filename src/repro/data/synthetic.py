@@ -7,7 +7,7 @@ from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["TokenStream", "hdc_dataset", "knn_dataset"]
+__all__ = ["TokenStream", "hdc_dataset", "hdc_mnist_dataset", "knn_dataset"]
 
 
 def _rng(seed: int, *stream: int) -> np.random.Generator:
@@ -81,6 +81,42 @@ def hdc_dataset(n_classes: int = 10, dim: int = 8192, n_queries: int = 10000,
         classes = classes * 14 + rng.integers(0, 2, classes.shape)
         queries = queries * 14 + rng.integers(0, 2, queries.shape)
     return classes, queries, labels
+
+
+def hdc_mnist_dataset(n_train: int = 512, n_test: int = 256,
+                      n_classes: int = 10, side: int = 14, seed: int = 3,
+                      noise: float = 0.3, overlap: float = 0.55
+                      ) -> Tuple[np.ndarray, np.ndarray,
+                                 np.ndarray, np.ndarray]:
+    """MNIST-shaped *feature* samples for the end-to-end HDC pipeline.
+
+    Unlike :func:`hdc_dataset` (which hands out ready-made class
+    hypervectors — the associative-memory *recall* workload), this
+    returns raw ``side x side`` images in ``[0, 1]`` that must be
+    **encoded** into hypervectors: each class owns a blob template
+    drawn as ``overlap`` parts shared background + ``(1 - overlap)``
+    class-specific structure, and samples add pixel noise.  The overlap
+    makes classes confusable enough that one-shot HDC training lands
+    mid-range and perceptron retraining visibly improves it — the
+    regime Figs. 8/9 retrain in.
+
+    Returns ``(train_x (n_train, side*side), train_y, test_x, test_y)``.
+    """
+    rng = _rng(seed, 2)
+    dim = side * side
+    background = rng.random(dim).astype(np.float32)
+    templates = (overlap * background[None, :]
+                 + (1 - overlap) * rng.random((n_classes, dim))
+                 ).astype(np.float32)
+
+    def draw(n: int) -> Tuple[np.ndarray, np.ndarray]:
+        y = rng.integers(0, n_classes, size=n).astype(np.int32)
+        x = templates[y] + rng.normal(0.0, noise, (n, dim)).astype(np.float32)
+        return np.clip(x, 0.0, 1.0).astype(np.float32), y
+
+    train_x, train_y = draw(n_train)
+    test_x, test_y = draw(n_test)
+    return train_x, train_y, test_x, test_y
 
 
 def knn_dataset(n_gallery: int = 180_000, dim: int = 1024,

@@ -1,0 +1,28 @@
+"""Hyperdimensional computing on CAM — the paper's flagship workload.
+
+The Fig. 8/9 and GPU-comparison experiments all classify MNIST-style
+data with HDC on the hand-crafted CAM design of Kazemi et al. [22]:
+samples are encoded into high-dimensional bipolar *hypervectors*
+(record-based encoding: per-feature key hypervectors bound with
+quantised level hypervectors, majority-bundled), class prototypes live
+in an **associative memory** of bundled training encodings, and
+classification is a nearest-neighbour search — which is exactly the
+engine's packed-hamming :class:`~repro.core.engine.SearchPlan` (bipolar
+argmax-dot == argmin-hamming, the ``cim_to_cam`` identity).
+
+* :mod:`repro.hdc.encoding` — item/level memories and the hypervector
+  encoder (one-hot matmul decomposition, fused Pallas kernel, and the
+  dense oracle all bit-identical).
+* :mod:`repro.hdc.classifier` — :class:`HdcClassifier`: one-shot
+  training, perceptron-style retraining (misclassified encodings
+  subtracted from the wrong class and re-bundled into the right one),
+  and **online** retraining against live search traffic through
+  ``CamSearchServer.update_gallery`` / ``SearchPlan.update_rows``.
+
+See ``docs/hdc.md`` and ``examples/hdc_mnist.py``.
+"""
+
+from .classifier import HdcClassifier
+from .encoding import ItemMemory, level_hypervectors
+
+__all__ = ["HdcClassifier", "ItemMemory", "level_hypervectors"]

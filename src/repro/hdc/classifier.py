@@ -1,0 +1,247 @@
+"""HDC classifier: associative memory served by the search engine.
+
+Training keeps per-class **integer accumulators** (sums of bipolar
+training encodings); the served associative memory is their sign
+(majority bundle, tie -> +1).  Classification lowers to the compiled
+similarity stack: a ``cim.similarity`` program (``metric="dot"``,
+``k=1``, ``largest=True``) over bipolar operands, which the engine
+executes as a packed XOR+popcount hamming search (argmax-dot ==
+argmin-hamming for bipolar data — the ``cim_to_cam`` identity), exactly
+the Kazemi et al. [22] hand-crafted design the compiler targets.
+
+Retraining is the perceptron-style HDC update: each misclassified
+encoding is subtracted from the predicted class's accumulator and added
+to the true class's.  Only the touched classes' AM rows change, which
+is what :meth:`SearchPlan.update_rows` /
+:meth:`CamSearchServer.update_gallery` make cheap — `retrain_epoch`
+pushes just those rows, so retraining runs *online* against live
+search traffic (see ``examples/hdc_mnist.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .encoding import ItemMemory
+
+__all__ = ["HdcClassifier"]
+
+
+class HdcClassifier:
+    """Encode -> associative-memory classify -> retrain, on the engine.
+
+    Parameters mirror :class:`ItemMemory` (features, hypervector dim,
+    quantisation levels/range); ``n_classes`` sizes the associative
+    memory.  Call :meth:`fit` (one-shot bundling), :meth:`compile`
+    (lower to a SearchPlan), then :meth:`predict` /
+    :meth:`retrain_epoch`.
+    """
+
+    def __init__(self, n_features: int, n_classes: int, *, dim: int = 2048,
+                 n_levels: int = 16, lo: float = 0.0, hi: float = 1.0,
+                 seed: int = 0):
+        self.item = ItemMemory(n_features, dim=dim, n_levels=n_levels,
+                               lo=lo, hi=hi, seed=seed)
+        self.n_classes = int(n_classes)
+        self.dim = int(dim)
+        # integer accumulators: sums of +-1 encodings stay exact
+        self.class_sums = np.zeros((self.n_classes, self.dim), np.int64)
+        self.plan = None
+        self._gallery = None
+
+    # -- encoding / training ----------------------------------------------
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """(M, F) features -> (M, H) bipolar encodings (float32)."""
+        return self.item.encode(x)
+
+    def am(self) -> np.ndarray:
+        """(C, H) bipolar associative memory: sign of the accumulators,
+        tie -> +1 (the :func:`~repro.kernels.ref.hdc_bundle` contract)."""
+        return np.where(self.class_sums >= 0, 1.0, -1.0).astype(np.float32)
+
+    def fit(self, x: np.ndarray, y: np.ndarray,
+            encoded: Optional[np.ndarray] = None) -> "HdcClassifier":
+        """One-shot training: bundle every encoding into its class."""
+        enc = self.encode(x) if encoded is None else encoded
+        y = np.asarray(y, np.int64)
+        np.add.at(self.class_sums, y, enc.astype(np.int64))
+        self._refresh_gallery(np.unique(y))
+        return self
+
+    # -- lowering ----------------------------------------------------------
+
+    def compile(self, arch=None, *, batch_hint: int = 64,
+                backend: str = "jnp", shards: Optional[int] = None,
+                pack: Optional[bool] = None) -> "HdcClassifier":
+        """Lower classification onto ``arch`` and build the engine plan.
+
+        The program is a hand-built fused ``cim.similarity`` (dot, k=1,
+        largest) run through ``CompulsoryPartition`` — the same stack
+        every compiled workload uses — so the plan lands in the
+        process-wide cache and packs automatically.  Returns ``self``.
+        """
+        import jax.numpy as jnp
+
+        from ..core.arch import ArchSpec
+        from ..core.cim_dialect import (make_acquire, make_execute,
+                                        make_release, make_similarity,
+                                        make_yield)
+        from ..core.engine import get_plan
+        from ..core.ir import Builder, Module, PassManager, TensorType
+        from ..core.passes import CompulsoryPartition
+
+        if arch is None:
+            arch = ArchSpec(rows=32, cols=64)
+        m = max(1, int(batch_hint))
+        mod = Module("hdc_classify",
+                     [TensorType((m, self.dim)),
+                      TensorType((self.n_classes, self.dim))],
+                     arg_names=["queries", "am"])
+        b = Builder(mod.body)
+        dev = make_acquire(b)
+        exe = make_execute(b, dev.result, list(mod.arguments),
+                           [TensorType((m, 1)), TensorType((m, 1), "i32")])
+        blk = exe.region().block()
+        sim = make_similarity(blk, mod.arguments[0], mod.arguments[1],
+                              metric="dot", k=1, largest=True)
+        make_yield(blk, sim.results)
+        make_release(b, dev.result)
+        b.ret(exe.results)
+
+        pm = PassManager()
+        pm.add(CompulsoryPartition())
+        self.stages = {"cim_partitioned": pm.run(mod, {"arch": arch})}
+        self.arch = arch
+        self.plan = get_plan(self.stages["cim_partitioned"], backend=backend,
+                             shards=shards, pack=pack)
+        if self.plan is None:                  # pragma: no cover
+            raise RuntimeError("HDC program did not yield a SearchPlan")
+        self._gallery = jnp.asarray(self.am())
+        return self
+
+    def _require_compiled(self):
+        if self.plan is None:
+            raise RuntimeError("call compile() first")
+
+    @property
+    def gallery(self):
+        """The served associative memory (jax array, plan-memoised)."""
+        self._require_compiled()
+        return self._gallery
+
+    def _refresh_gallery(self, changed: np.ndarray) -> None:
+        """Push changed AM rows into the plan's memoised layout."""
+        if self.plan is None or self._gallery is None:
+            return
+        changed = np.asarray(changed, np.int64)
+        if changed.size == 0:
+            return
+        self._gallery = self.plan.update_rows(self._gallery, changed,
+                                              self.am()[changed])
+
+    # -- inference ---------------------------------------------------------
+
+    def predict(self, x: Optional[np.ndarray] = None, *,
+                encoded: Optional[np.ndarray] = None) -> np.ndarray:
+        """(M,) class predictions through the compiled search plan."""
+        self._require_compiled()
+        enc = self.encode(x) if encoded is None else encoded
+        _, idx = self.plan.execute(enc, self._gallery)
+        return np.asarray(idx)[:, 0].astype(np.int32)
+
+    def predict_interpreted(self, x: Optional[np.ndarray] = None, *,
+                            encoded: Optional[np.ndarray] = None
+                            ) -> np.ndarray:
+        """Predictions via the IR interpreter (semantic oracle)."""
+        from ..core.executor import execute_module
+
+        self._require_compiled()
+        enc = self.encode(x) if encoded is None else encoded
+        am = self.am()
+        # the interpreter executes the traced shape exactly — chunk to
+        # the module's query count (padding the tail with row 0, sliced
+        # off below; the engine instead re-chunks internally)
+        m = self.plan.spec.m
+        outs = [np.empty((0,), np.int32)]
+        for s in range(0, enc.shape[0], m):
+            chunk = enc[s:s + m]
+            valid = chunk.shape[0]
+            if valid < m:
+                chunk = np.pad(chunk, ((0, m - valid), (0, 0)),
+                               mode="edge")
+            _, idx = execute_module(self.stages["cim_partitioned"], chunk, am)
+            outs.append(np.asarray(idx)[:valid, 0])
+        return np.concatenate(outs).astype(np.int32)
+
+    def predict_reference(self, x: Optional[np.ndarray] = None, *,
+                          encoded: Optional[np.ndarray] = None) -> np.ndarray:
+        """Predictions via dense numpy argmax-dot (lowest-index ties —
+        the same deterministic tie-break the engine pins)."""
+        enc = self.encode(x) if encoded is None else encoded
+        scores = enc.astype(np.float32) @ self.am().T
+        return np.argmax(scores, axis=1).astype(np.int32)
+
+    # -- retraining --------------------------------------------------------
+
+    def retrain_step(self, encoded: np.ndarray, y: np.ndarray,
+                     preds: np.ndarray) -> np.ndarray:
+        """Apply the perceptron update for one prediction batch.
+
+        Misclassified encodings move from the predicted class's
+        accumulator to the true class's.  Returns the (sorted, unique)
+        class ids whose accumulators changed — the rows a server must
+        re-serve.  The caller owns pushing those rows
+        (:meth:`retrain_epoch` does both).
+        """
+        y = np.asarray(y, np.int64)
+        preds = np.asarray(preds, np.int64)
+        wrong = preds != y
+        if not wrong.any():
+            return np.empty((0,), np.int64)
+        enc = encoded[wrong].astype(np.int64)
+        np.add.at(self.class_sums, y[wrong], enc)
+        np.subtract.at(self.class_sums, preds[wrong], enc)
+        return np.unique(np.concatenate([y[wrong], preds[wrong]]))
+
+    def retrain_epoch(self, x: np.ndarray, y: np.ndarray, *,
+                      encoded: Optional[np.ndarray] = None,
+                      server=None) -> Tuple[float, int]:
+        """One retraining epoch; returns (pre-update accuracy, #rows pushed).
+
+        Predictions come from the live path — the attached
+        ``CamSearchServer`` when given (so retraining competes with
+        real traffic), the compiled plan otherwise — and the touched AM
+        rows are pushed back through ``server.update_gallery`` /
+        ``plan.update_rows``, i.e. the gallery mutates **between
+        micro-batches while the server keeps serving**.
+        """
+        self._require_compiled()
+        enc = self.encode(x) if encoded is None else encoded
+        if server is not None:
+            _, idx = server.search(enc)
+            preds = np.asarray(idx)[:, 0].astype(np.int64)
+        else:
+            preds = self.predict(encoded=enc).astype(np.int64)
+        acc = float((preds == np.asarray(y)).mean())
+        changed = self.retrain_step(enc, y, preds)
+        if changed.size:
+            if server is not None:
+                server.update_gallery(changed, self.am()[changed])
+                self._gallery = server.gallery
+            else:
+                self._refresh_gallery(changed)
+        return acc, int(changed.size)
+
+    def summary(self) -> dict:
+        out = {"classes": self.n_classes, "dim": self.dim,
+               "features": self.item.n_features,
+               "levels": self.item.n_levels}
+        if self.plan is not None:
+            out.update(backend=self.plan.backend, shards=self.plan.shards,
+                       packed=self.plan.packed, batch=self.plan.batch,
+                       grid=(self.plan.spec.grid_rows,
+                             self.plan.spec.grid_cols))
+        return out

@@ -1,0 +1,135 @@
+"""Item/level memories and the record-based hypervector encoder.
+
+Encoding contract (shared bit-for-bit by three execution paths):
+
+* features are quantised into ``n_levels`` buckets over ``[lo, hi]``;
+* each feature position owns a random bipolar *key* hypervector, each
+  level a *level* hypervector from a thermometer code (adjacent levels
+  differ in ``H / (2 * (L - 1))`` dimensions, so level similarity
+  decays with level distance — the standard HDC encoding for
+  continuous features);
+* a sample is the majority bundle over features of
+  ``bind(key[f], level[q[f]])``, sign ties -> +1.
+
+The default host path computes the bundle through the one-hot matmul
+decomposition (``sum_l (q == l) @ keys * levels[l]`` — no (M, F, H)
+intermediate); ``REPRO_HDC_KERNEL`` selects the fused Pallas kernel
+(``pallas``, auto-on on TPU) or the dense oracle (``ref``).  All sums
+are small integers, exact in float32, so every path emits identical
+hypervectors.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+
+__all__ = ["ItemMemory", "level_hypervectors", "random_hypervectors"]
+
+
+def random_hypervectors(rng: np.random.Generator, n: int,
+                        dim: int) -> np.ndarray:
+    """(n, dim) i.i.d. random bipolar +-1 hypervectors (float32)."""
+    return np.where(rng.random((n, dim)) < 0.5, -1.0, 1.0).astype(np.float32)
+
+
+def level_hypervectors(rng: np.random.Generator, n_levels: int,
+                       dim: int) -> np.ndarray:
+    """(L, dim) thermometer-correlated level hypervectors.
+
+    Level 0 is random; each next level flips a fresh segment of
+    ``dim // (2 * (L - 1))`` dimensions (no dimension flips twice), so
+    the top level sits at ~50% hamming distance from the bottom and
+    similarity decays linearly with level distance.
+    """
+    lv = np.empty((n_levels, dim), np.float32)
+    lv[0] = random_hypervectors(rng, 1, dim)[0]
+    if n_levels == 1:
+        return lv
+    perm = rng.permutation(dim)
+    seg = dim // (2 * (n_levels - 1))
+    for level in range(1, n_levels):
+        lv[level] = lv[level - 1]
+        flip = perm[(level - 1) * seg:level * seg]
+        lv[level, flip] = -lv[level, flip]
+    return lv
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels",))
+def _encode_matmul(q: jax.Array, keys: jax.Array, levels: jax.Array, *,
+                   n_levels: int) -> jax.Array:
+    """One-hot matmul decomposition of the encode sum (see module doc)."""
+    acc = jnp.zeros((q.shape[0], keys.shape[1]), jnp.float32)
+    for level in range(n_levels):
+        onehot = (q == level).astype(jnp.float32)
+        acc = acc + (onehot @ keys) * levels[level][None, :]
+    return jnp.where(acc >= 0, 1.0, -1.0)
+
+
+def _kernel_choice() -> str:
+    env = os.environ.get("REPRO_HDC_KERNEL", "auto").lower()
+    if env == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "matmul"
+    if env not in ("matmul", "pallas", "ref"):
+        raise ValueError(f"REPRO_HDC_KERNEL must be auto/matmul/pallas/ref, "
+                         f"got {env!r}")
+    return env
+
+
+class ItemMemory:
+    """Key + level hypervector memories with a fixed quantisation range.
+
+    Deterministic in ``seed``; ``encode`` accepts ``(M, F)`` float
+    features and returns ``(M, H)`` bipolar hypervectors (numpy
+    float32).  The encode path is selected by ``REPRO_HDC_KERNEL``
+    (``kernel=`` overrides) — all paths are bit-identical.
+    """
+
+    def __init__(self, n_features: int, *, dim: int = 2048,
+                 n_levels: int = 16, lo: float = 0.0, hi: float = 1.0,
+                 seed: int = 0):
+        if n_levels < 1:
+            raise ValueError("n_levels must be >= 1")
+        if not hi > lo:
+            raise ValueError(f"need hi > lo, got [{lo}, {hi}]")
+        self.n_features = int(n_features)
+        self.dim = int(dim)
+        self.n_levels = int(n_levels)
+        self.lo, self.hi = float(lo), float(hi)
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 0]))
+        self.keys = random_hypervectors(rng, self.n_features, self.dim)
+        self.levels = level_hypervectors(rng, self.n_levels, self.dim)
+        self._keys_j = jnp.asarray(self.keys)
+        self._levels_j = jnp.asarray(self.levels)
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """(M, F) float features -> (M, F) int32 level indices."""
+        x = np.asarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.n_features:
+            raise ValueError(f"features must be (M, {self.n_features}), "
+                             f"got {x.shape}")
+        t = (x - self.lo) / (self.hi - self.lo)
+        return np.clip((t * self.n_levels).astype(np.int32), 0,
+                       self.n_levels - 1)
+
+    def encode(self, x: np.ndarray,
+               kernel: Optional[str] = None) -> np.ndarray:
+        """(M, F) features -> (M, H) bipolar hypervectors (float32)."""
+        q = jnp.asarray(self.quantize(x))
+        kind = kernel or _kernel_choice()
+        if kind == "pallas":
+            enc = kops.hdc_encode(q, self._keys_j, self._levels_j)
+        elif kind == "ref":
+            enc = kref.hdc_encode(q, self._keys_j, self._levels_j)
+        else:
+            enc = _encode_matmul(q, self._keys_j, self._levels_j,
+                                 n_levels=self.n_levels)
+        return np.asarray(enc)

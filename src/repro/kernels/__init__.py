@@ -11,6 +11,10 @@
                       (`lo <= q <= hi` per cell, wildcard = full range)
                       and in-kernel thresholded distance match (the
                       paper's TH sensing mode).
+* `hdc_encode`      — fused HDC hypervector encoding (bind + majority
+                      bundle via the one-hot matmul decomposition);
+                      oracles `ref.hdc_bind/hdc_bundle/hdc_permute/
+                      hdc_encode`.
 * `flash_attention` — online-softmax attention forward (the LM framework's
                       hot spot; §Perf cell B's TPU answer).
 

@@ -22,11 +22,13 @@ from . import ref as kref
 from .acam import acam_match_pallas, range_match_pallas
 from .cam_search import (distance_pallas, fused_topk_pallas,
                          fused_topk_packed_pallas)
+from .hdc_encode import hdc_encode_pallas
 
 __all__ = ["cam_topk", "cam_topk_prepadded", "cam_topk_packed",
            "cam_topk_packed_prepadded", "pad_to_blocks", "cam_exact",
            "cam_range", "acam_match", "acam_match_prepadded",
-           "cam_range_match", "cam_range_match_prepadded"]
+           "cam_range_match", "cam_range_match_prepadded",
+           "hdc_bind", "hdc_bundle", "hdc_permute", "hdc_encode"]
 
 
 def _on_tpu() -> bool:
@@ -160,6 +162,46 @@ def cam_topk(queries: jax.Array, patterns: jax.Array, *, metric: str, k: int,
     # k > N: pad with the shared losing sentinels (same helper the engine
     # and tiled reference use, so every path emits identical pad content)
     return kref.pad_candidates(vals[:m], idx[:m], k, largest)
+
+
+# ---------------------------------------------------------------------------
+# HDC hypervector encoding
+# ---------------------------------------------------------------------------
+
+#: bind / bundle / permute are pure jnp in every execution path (the
+#: fused encode kernel inlines bind+bundle); the public wrappers jit the
+#: pinned oracles so callers get one import surface for the HDC algebra
+hdc_bind = jax.jit(kref.hdc_bind)
+hdc_bundle = jax.jit(kref.hdc_bundle)
+hdc_permute = jax.jit(kref.hdc_permute, static_argnames=("shift",))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f", "block_h",
+                                             "interpret"))
+def hdc_encode(level_idx: jax.Array, keys: jax.Array, levels: jax.Array, *,
+               block_m: int = 128, block_f: int = 256, block_h: int = 256,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """(M, H) bipolar encodings via the fused Pallas kernel.
+
+    Pads ``level_idx`` with level 0 and ``keys`` with zero rows (a
+    padded feature's one-hot only ever hits zeroed key rows, so padding
+    contributes nothing — see ``kernels/hdc_encode.py``), launches the
+    kernel, and slices the valid block.  Bit-identical to
+    :func:`ref.hdc_encode` (integer sums, sign tie -> +1).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, f = level_idx.shape
+    h = keys.shape[1]
+    bm = min(block_m, max(8, m))
+    bf = min(block_f, f)
+    bh = min(block_h, h)
+    qp = pad_to_blocks(level_idx.astype(jnp.int32), bm, bf)
+    kp = pad_to_blocks(keys.astype(jnp.float32), bf, bh)
+    lp = jnp.pad(levels.astype(jnp.float32), ((0, 0), (0, (-h) % bh)))
+    out = hdc_encode_pallas(qp, kp, lp, block_m=bm, block_f=bf, block_h=bh,
+                            interpret=interpret)
+    return out[:m, :h]
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))

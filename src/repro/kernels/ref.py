@@ -38,7 +38,8 @@ __all__ = ["distances", "packed_distances", "ternary_distances",
            "tile_distance", "tiled_distances", "cam_topk",
            "cam_topk_ternary", "cam_exact", "cam_range", "acam_match",
            "acam_violations", "cam_topk_tiled", "merge_topk",
-           "pad_candidates"]
+           "pad_candidates", "hdc_bind", "hdc_bundle", "hdc_permute",
+           "hdc_encode"]
 
 
 def distances(queries: jax.Array, patterns: jax.Array, metric: str) -> jax.Array:
@@ -95,6 +96,60 @@ def ternary_distances(queries: jax.Array, patterns: jax.Array,
     """
     mism = queries[:, None, :] != patterns[None, :, :]
     return (mism & (care[None, :, :] != 0)).sum(-1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# HDC hypervector algebra (bipolar {-1, +1} convention)
+# ---------------------------------------------------------------------------
+
+
+def hdc_bind(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise bind of bipolar hypervectors: multiplication.
+
+    For bipolar ±1 data, multiply *is* XOR in the sign domain
+    (``(-1)^(x ^ y)``), which is the TCAM-friendly binding the packed
+    engine path exploits — binding never changes the alphabet.
+    """
+    return (a * b).astype(jnp.float32)
+
+
+def hdc_bundle(stack: jax.Array) -> jax.Array:
+    """Majority bundle along axis 0: sign of the elementwise sum.
+
+    Ties (an even stack splitting evenly) resolve to **+1** — the
+    deterministic contract every execution path (oracle, fused encode
+    kernel, classifier AM refresh) must share for bit-identity.
+    """
+    s = jnp.sum(stack.astype(jnp.float32), axis=0)
+    return jnp.where(s >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def hdc_permute(x: jax.Array, shift: int) -> jax.Array:
+    """Cyclic permutation (roll) along the hypervector dimension —
+    the sequence/position operator of the HDC algebra."""
+    return jnp.roll(x, shift, axis=-1)
+
+
+def hdc_encode(level_idx: jax.Array, keys: jax.Array,
+               levels: jax.Array) -> jax.Array:
+    """Record-based hypervector encoding — the semantic oracle.
+
+    ``level_idx``: (M, F) int quantised feature levels; ``keys``: (F, H)
+    bipolar per-feature (position) hypervectors; ``levels``: (L, H)
+    bipolar level hypervectors.  Sample ``m`` encodes as the majority
+    bundle over features of ``bind(keys[f], levels[level_idx[m, f]])``,
+    tie -> +1 (:func:`hdc_bundle`).  All sums are small integers, exact
+    in float32 — the fused Pallas kernel's matmul decomposition
+    (:mod:`repro.kernels.hdc_encode`) reproduces them bit-for-bit.
+
+    Materialises the dense (M, F, H) bound tensor: oracle use only (the
+    production paths are the fused kernel and the one-hot matmul
+    decomposition in :mod:`repro.hdc.encoding`).
+    """
+    bound = keys[None, :, :].astype(jnp.float32) * \
+        levels.astype(jnp.float32)[level_idx]              # (M, F, H)
+    s = bound.sum(axis=1)
+    return jnp.where(s >= 0, 1.0, -1.0).astype(jnp.float32)
 
 
 def _topk_with_ties(scores: jax.Array, k: int, largest: bool

@@ -45,6 +45,21 @@ construct the server with ``care_mask=...`` and every batch carries the
 per-pattern wildcard mask alongside the gallery (both memoised behind
 the plan's pattern cache; binary/bipolar plans additionally run
 bit-packed — see the packed section of ``docs/engine.md``).
+
+Live gallery mutation
+---------------------
+:meth:`CamSearchServer.update_gallery` rewrites stored rows **between
+micro-batches** while the server keeps serving: a writer-priority
+reader/writer lock covers the batcher's dispatch (reader) and the
+update (writer), so every dispatched batch sees exactly one gallery
+version — a request's rows are never computed against a half-applied
+update — and a pending writer blocks *new* batches rather than starving
+behind a steady request stream.  The row rewrite itself is the engine's
+incremental :meth:`~repro.core.engine.SearchPlan.update_rows` path
+(only the touched row tiles of the memoised prepared layout are
+re-encoded/re-packed), which is what makes online HDC retraining —
+misclassified queries re-bundled into class vectors, then re-served —
+cheap against live traffic (see ``repro.hdc`` and ``docs/hdc.md``).
 """
 
 from __future__ import annotations
@@ -63,6 +78,51 @@ from ..core.compiler import CompiledCamProgram
 from ..core.engine import RangePlan, SearchPlan
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
+
+
+class _WriterPriorityLock:
+    """A reader/writer lock where waiting writers block new readers.
+
+    The batcher takes the read side around every batch dispatch (many
+    batches may overlap the completion pipeline, but dispatch itself is
+    the only point that reads the gallery); ``update_gallery`` takes
+    the write side.  Writer priority matters under load: a steady
+    request stream keeps the read side continuously busy, and a plain
+    RW lock would starve the update forever.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writers_waiting = 0
+        self._writing = False
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writing or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writing or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writing = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writing = False
+            self._cond.notify_all()
 
 
 @dataclass
@@ -207,11 +267,14 @@ class CamSearchServer:
         self._running = False
         self._accepting = False
         self._lock = threading.Lock()
+        # gallery consistency: batch dispatch reads, update_gallery writes
+        self._gallery_lock = _WriterPriorityLock()
         # bounded: a long-lived server must not grow per-request state
         self._latencies: "deque[float]" = deque(maxlen=4096)
         self.stats: Dict[str, Any] = {
             "requests": 0, "queries": 0, "batches": 0,
             "batched_rows": 0, "errors": 0,
+            "gallery_updates": 0, "rows_updated": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -309,6 +372,55 @@ class CamSearchServer:
             raise res.error
         return res.matches
 
+    def update_gallery(self, indices, new_rows, *,
+                       donate: bool = False) -> None:
+        """Rewrite stored gallery rows between micro-batches, live.
+
+        ``indices``: row ids to replace; ``new_rows``: ``(len(indices),
+        dim)`` replacement rows — for *interval* range plans a
+        ``(lo_rows, hi_rows)`` pair.  Applied under the writer side of
+        the gallery lock: in-flight batches finish against the old
+        gallery, every batch dispatched afterwards sees the new one
+        (never a mix), and a pending update blocks new batches instead
+        of starving behind steady traffic.  The rewrite itself is the
+        plan's incremental :meth:`~repro.core.engine.SearchPlan.
+        update_rows` — only the touched row tiles are re-prepared, so
+        online-learning loops can call this at high rate.
+
+        Thread-safe; raises (synchronously, nothing half-applied) on
+        malformed indices/rows.  Ternary servers keep their care mask
+        fixed — wildcards describe the program, not the data.
+
+        ``donate=True`` forwards the engine's buffer-donation contract
+        (in-place scatter, no full-gallery copy): pass it only when no
+        code outside the server still reads the current gallery array
+        (e.g. the array handed to the constructor was numpy, so the
+        server owns its jax copy).
+        """
+        if self.is_range and len(self.plan.spec.pattern_args) == 2:
+            if not (isinstance(new_rows, (tuple, list))
+                    and len(new_rows) == 2):
+                raise ValueError(
+                    "interval range plan needs new_rows=(lo_rows, hi_rows)")
+        self._gallery_lock.acquire_write()
+        try:
+            if self.is_range:
+                multi = len(self.plan.spec.pattern_args) == 2
+                stored = self.gallery if multi else self.gallery[0]
+                updated = self.plan.update_rows(stored, indices, new_rows,
+                                                donate=donate)
+                self.gallery = tuple(updated) if multi else (updated,)
+            else:
+                self.gallery = self.plan.update_rows(
+                    self.gallery, indices, new_rows, care=self.care,
+                    donate=donate)
+            n_rows = int(np.atleast_1d(np.asarray(indices)).size)
+            with self._lock:
+                self.stats["gallery_updates"] += 1
+                self.stats["rows_updated"] += n_rows
+        finally:
+            self._gallery_lock.release_write()
+
     # -- batcher -----------------------------------------------------------
 
     def _drain(self, first: SearchRequest) -> List[SearchRequest]:
@@ -354,6 +466,10 @@ class CamSearchServer:
         """Dispatch one coalesced batch; the device result (async jax
         arrays) goes to the completion thread, so the batcher is free to
         coalesce and dispatch the next batch immediately."""
+        # reader side of the gallery lock: the whole read-gallery +
+        # dispatch sequence sees exactly one gallery version, and a
+        # waiting update_gallery writer gets in before the *next* batch
+        self._gallery_lock.acquire_read()
         try:
             rows = np.concatenate([r.queries for r in batch], axis=0)
             spec = self.plan.spec
@@ -377,6 +493,8 @@ class CamSearchServer:
             for r in batch:
                 self._fail(r, e)
             return
+        finally:
+            self._gallery_lock.release_read()
         with self._lock:
             self.stats["batches"] += 1
             self.stats["batched_rows"] += rows.shape[0]
@@ -452,7 +570,10 @@ class CamSearchServer:
                        "ternary": getattr(spec, "care_arg", None) is not None,
                        "metric": spec.metric,
                        "executions": self.plan.executions,
-                       "chunks_run": self.plan.chunks_run}
+                       "chunks_run": self.plan.chunks_run,
+                       "row_updates": self.plan.row_updates,
+                       "row_update_fallbacks":
+                           self.plan.row_update_fallbacks}
         if self.is_range:
             out["plan"]["mode"] = spec.mode
         else:

@@ -1,0 +1,223 @@
+"""HDC subsystem: hypervector algebra oracles, the fused encode kernel,
+item/level memories, the classifier's engine/interpreter/oracle parity,
+perceptron retraining through ``update_rows`` / ``update_gallery``, and
+the end-to-end example (which also covers 8-device sharding)."""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.arch import ArchSpec
+from repro.hdc import HdcClassifier, ItemMemory
+from repro.hdc.encoding import level_hypervectors, random_hypervectors
+from repro.kernels import ops, ref
+from repro.serving import CamSearchServer
+
+
+def _bipolar(rng, *shape):
+    return np.where(rng.random(shape) < 0.5, -1.0, 1.0).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# hypervector algebra
+# ---------------------------------------------------------------------------
+
+
+def test_bind_is_xor_in_sign_domain(rng):
+    a, b = _bipolar(rng, 4, 64), _bipolar(rng, 4, 64)
+    bound = np.asarray(ref.hdc_bind(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(bound, a * b)
+    # binding with itself is the identity hypervector (+1 everywhere)
+    np.testing.assert_array_equal(
+        np.asarray(ref.hdc_bind(jnp.asarray(a), jnp.asarray(a))),
+        np.ones_like(a))
+    # bind preserves distance: d(a*c, b*c) == d(a, b)
+    c = _bipolar(rng, 4, 64)
+    np.testing.assert_array_equal((a * c != b * c).sum(-1),
+                                  (a != b).sum(-1))
+
+
+def test_bundle_majority_and_tie_contract(rng):
+    a, b, c = (_bipolar(rng, 1, 32)[0] for _ in range(3))
+    maj = np.asarray(ref.hdc_bundle(jnp.asarray(np.stack([a, b, c]))))
+    np.testing.assert_array_equal(maj, np.where(a + b + c >= 0, 1, -1))
+    # even stack, perfect tie -> +1 (the pinned deterministic tie-break)
+    tie = np.asarray(ref.hdc_bundle(jnp.asarray(np.stack([a, -a]))))
+    np.testing.assert_array_equal(tie, np.ones_like(a))
+
+
+def test_permute_rolls_and_inverts(rng):
+    a = _bipolar(rng, 3, 40)
+    r = np.asarray(ref.hdc_permute(jnp.asarray(a), 7))
+    np.testing.assert_array_equal(r, np.roll(a, 7, axis=-1))
+    back = np.asarray(ref.hdc_permute(jnp.asarray(r), -7))
+    np.testing.assert_array_equal(back, a)
+
+
+def test_encode_kernel_matches_oracle(rng):
+    """The fused Pallas encode kernel, the one-hot matmul decomposition,
+    and the dense oracle are bit-identical (integer sums, tie -> +1)."""
+    from repro.hdc.encoding import _encode_matmul
+
+    M, F, H, L = 9, 37, 70, 8
+    q = rng.integers(0, L, size=(M, F)).astype(np.int32)
+    keys = _bipolar(rng, F, H)
+    levels = _bipolar(rng, L, H)
+    want = np.asarray(ref.hdc_encode(jnp.asarray(q), jnp.asarray(keys),
+                                     jnp.asarray(levels)))
+    got_pl = np.asarray(ops.hdc_encode(jnp.asarray(q), jnp.asarray(keys),
+                                       jnp.asarray(levels)))
+    got_mm = np.asarray(_encode_matmul(jnp.asarray(q), jnp.asarray(keys),
+                                       jnp.asarray(levels), n_levels=L))
+    np.testing.assert_array_equal(want, got_pl)
+    np.testing.assert_array_equal(want, got_mm)
+    assert set(np.unique(want)) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# item / level memories
+# ---------------------------------------------------------------------------
+
+
+def test_level_hypervectors_thermometer(rng):
+    L, H = 9, 512
+    lv = level_hypervectors(rng, L, H)
+    d0 = [(lv[0] != lv[i]).sum() for i in range(L)]
+    # distance to level 0 grows monotonically, in equal segments
+    assert d0 == sorted(d0)
+    seg = H // (2 * (L - 1))
+    assert d0[1] == seg and d0[-1] == seg * (L - 1)
+
+
+def test_item_memory_quantize_and_determinism():
+    im = ItemMemory(8, dim=256, n_levels=4, lo=0.0, hi=1.0, seed=3)
+    x = np.array([[0.0, 0.1, 0.26, 0.5, 0.74, 0.99, 1.0, -5.0]], np.float32)
+    np.testing.assert_array_equal(im.quantize(x)[0],
+                                  [0, 0, 1, 2, 2, 3, 3, 0])
+    im2 = ItemMemory(8, dim=256, n_levels=4, seed=3)
+    np.testing.assert_array_equal(im.keys, im2.keys)
+    np.testing.assert_array_equal(im.levels, im2.levels)
+    with pytest.raises(ValueError):
+        im.quantize(np.zeros((2, 5), np.float32))     # wrong feature count
+
+
+def test_item_memory_encode_paths_agree(rng):
+    im = ItemMemory(12, dim=192, n_levels=5, seed=1)
+    x = rng.random((7, 12)).astype(np.float32)
+    e_mm = im.encode(x, kernel="matmul")
+    np.testing.assert_array_equal(e_mm, im.encode(x, kernel="ref"))
+    np.testing.assert_array_equal(e_mm, im.encode(x, kernel="pallas"))
+
+
+# ---------------------------------------------------------------------------
+# classifier
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    rng = np.random.default_rng(7)
+    C, F = 5, 24
+    templates = rng.random((C, F)).astype(np.float32)
+
+    def draw(n):
+        y = rng.integers(0, C, n).astype(np.int32)
+        x = np.clip(templates[y] + rng.normal(0, 0.3, (n, F)), 0, 1)
+        return x.astype(np.float32), y
+
+    return draw(160), draw(80), C, F
+
+
+def test_classifier_parity_and_retraining(small_problem):
+    (xtr, ytr), (xte, yte), C, F = small_problem
+    clf = HdcClassifier(F, C, dim=512, n_levels=8, seed=0)
+    clf.fit(xtr, ytr).compile(ArchSpec(rows=8, cols=64), batch_hint=64)
+    assert clf.plan.packed                 # bipolar dot rides packed lanes
+
+    pred = clf.predict(xte)
+    np.testing.assert_array_equal(pred, clf.predict_interpreted(xte))
+    np.testing.assert_array_equal(pred, clf.predict_reference(xte))
+    acc0 = (pred == yte).mean()
+    assert acc0 > 1.5 / C                  # far better than chance
+
+    enc_tr = clf.encode(xtr)
+    for _ in range(4):
+        clf.retrain_epoch(xtr, ytr, encoded=enc_tr)
+    assert clf.plan.row_update_fallbacks == 0
+    # parity survives the incremental AM updates
+    predN = clf.predict(xte)
+    np.testing.assert_array_equal(predN, clf.predict_reference(xte))
+    np.testing.assert_array_equal(predN, clf.predict_interpreted(xte))
+    assert (clf.retrain_epoch(xtr, ytr, encoded=enc_tr)[0]
+            >= (clf.predict(encoded=enc_tr) == ytr).mean() - 1e-9)
+
+
+def test_retrain_step_moves_mass_between_touched_classes(small_problem):
+    (xtr, ytr), _, C, F = small_problem
+    clf = HdcClassifier(F, C, dim=256, n_levels=8, seed=0).fit(xtr, ytr)
+    sums0 = clf.class_sums.copy()
+    enc = clf.encode(xtr[:4])
+    y = np.array([0, 1, 2, 3])
+    preds = np.array([0, 1, 3, 2])         # two misclassified
+    changed = clf.retrain_step(enc, y, preds)
+    np.testing.assert_array_equal(changed, [2, 3])
+    np.testing.assert_array_equal(clf.class_sums[[0, 1, 4]],
+                                  sums0[[0, 1, 4]])  # untouched classes
+    np.testing.assert_array_equal(
+        clf.class_sums[2], sums0[2] + enc[2].astype(np.int64)
+        - enc[3].astype(np.int64))
+    # a perfect batch is a no-op
+    assert clf.retrain_step(enc, y, y).size == 0
+
+
+def test_classifier_served_retraining_matches_offline(small_problem):
+    (xtr, ytr), (xte, _), C, F = small_problem
+    offline = HdcClassifier(F, C, dim=512, n_levels=8, seed=0)
+    offline.fit(xtr, ytr).compile(ArchSpec(rows=8, cols=64), batch_hint=64)
+    served = HdcClassifier(F, C, dim=512, n_levels=8, seed=0)
+    served.fit(xtr, ytr).compile(ArchSpec(rows=8, cols=64), batch_hint=64)
+
+    enc_tr = offline.encode(xtr)
+    for _ in range(3):
+        offline.retrain_epoch(xtr, ytr, encoded=enc_tr)
+    with CamSearchServer(served.plan, served.gallery,
+                         max_wait_ms=1.0) as srv:
+        for _ in range(3):
+            served.retrain_epoch(xtr, ytr, encoded=enc_tr, server=srv)
+        _, idx = srv.search(served.encode(xte))
+        snap = srv.snapshot()
+    # same deterministic update trajectory -> identical AMs/predictions
+    np.testing.assert_array_equal(served.class_sums, offline.class_sums)
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0].astype(np.int32),
+                                  offline.predict(xte))
+    assert snap["plan"]["row_update_fallbacks"] == 0
+    if snap["gallery_updates"]:
+        assert snap["rows_updated"] > 0
+
+
+def test_classifier_requires_compile():
+    clf = HdcClassifier(8, 3, dim=64, n_levels=4)
+    with pytest.raises(RuntimeError, match="compile"):
+        clf.predict(np.zeros((1, 8), np.float32))
+
+
+def test_hdc_example_end_to_end():
+    """The acceptance pin: examples/hdc_mnist.py encodes, trains,
+    retrains online through CamSearchServer.update_gallery under live
+    traffic, and proves single-device / sharded (8 forced host devices)
+    / served predictions bit-identical.  Runs in a subprocess because
+    the example forces the device count."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "hdc_mnist.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0 and "HDC-OK" in out.stdout, (
+        f"hdc example failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")

@@ -1,0 +1,267 @@
+"""Randomized engine/interpreter/oracle parity fuzz harness.
+
+Generates random programs across **both plan families** — similarity
+(metric x k x n<k x packed/unpacked x ternary care masks x tile
+geometry x unrolled/loop-structured IR) and range (threshold across
+metrics/polarity + aCAM interval) — and asserts that the compiled
+engine plan, the IR interpreter, and the tiled reference oracles agree:
+indices and boolean matches bit-exactly everywhere, values bit-exactly
+for the integer metrics and to float tolerance for the analog ones.
+
+Two drivers share one case generator:
+
+* a deterministic numpy-seeded sweep (``REPRO_FUZZ_CASES``, default
+  200 cases — the local profile the acceptance gate counts; set it
+  lower for a bounded CI profile) that always runs,
+* ``hypothesis`` property wrappers (via ``tests/_hypothesis_compat``)
+  that explore the same space adversarially when the dependency is
+  installed and skip cleanly when it is not.
+
+Every failure message carries the full case tuple so any mismatch is
+reproducible with ``_run_sim_case``/``_run_range_case`` directly.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core import ArchSpec, clear_plan_cache, get_plan
+from repro.core.executor import execute_module
+from repro.kernels import ref as kref
+
+from test_engine import _sim_module
+from test_range import _range_module
+
+FUZZ_CASES = max(1, int(os.environ.get("REPRO_FUZZ_CASES", "200")))
+#: similarity cases get the larger share (more axes to cross)
+SIM_CASES = (FUZZ_CASES * 3) // 5
+RANGE_CASES = FUZZ_CASES - SIM_CASES
+
+#: discrete axes — small enough that geometry keys repeat (plan-cache
+#: hits keep the sweep fast), rich enough to cross every semantics axis
+_METRICS = ("hamming", "dot", "eucl", "cos")
+_RANGE_METRICS = ("hamming", "dot", "eucl")
+_MS = (1, 2, 7, 9)
+_NS = (2, 5, 16, 21, 40)                   # includes n < k cases
+_KS = (1, 3, 6)
+_DIMS = (8, 17, 32, 64)
+_ROWS = (4, 8, 16)
+_COLS = (8, 16, 32)
+_UNROLL = (64, 0)                          # explicit tile ops vs loops
+
+
+def _draw_sim_case(rng: np.random.Generator) -> dict:
+    metric = _METRICS[rng.integers(len(_METRICS))]
+    case = {
+        "family": "sim",
+        "metric": metric,
+        "largest": bool(rng.integers(2)) if metric in ("dot", "cos")
+        else False,
+        "m": int(_MS[rng.integers(len(_MS))]),
+        "n": int(_NS[rng.integers(len(_NS))]),
+        "k": int(_KS[rng.integers(len(_KS))]),
+        "dim": int(_DIMS[rng.integers(len(_DIMS))]),
+        "rows": int(_ROWS[rng.integers(len(_ROWS))]),
+        "cols": int(_COLS[rng.integers(len(_COLS))]),
+        "unroll": int(_UNROLL[rng.integers(len(_UNROLL))]),
+        # None = auto-pack (packs hamming/dot/cos); False = float path
+        "pack": None if rng.integers(2) else False,
+        "care": bool(metric == "hamming" and rng.integers(10) < 3),
+    }
+    return case
+
+
+def _draw_range_case(rng: np.random.Generator) -> dict:
+    interval = bool(rng.integers(4) == 0)
+    metric = _RANGE_METRICS[rng.integers(len(_RANGE_METRICS))]
+    return {
+        "family": "range",
+        "interval": interval,
+        "metric": metric,
+        "below": bool(rng.integers(2)),
+        "quantile": float(rng.uniform(0.15, 0.85)),
+        "m": int(_MS[rng.integers(len(_MS))]),
+        "n": int(_NS[rng.integers(len(_NS))]),
+        "dim": int(_DIMS[rng.integers(len(_DIMS))]),
+        "rows": int(_ROWS[rng.integers(len(_ROWS))]),
+        "cols": int(_COLS[rng.integers(len(_COLS))]),
+        "pack": None if rng.integers(2) else False,
+    }
+
+
+def _data_for(rng, metric, m, n, dim):
+    """Metric-appropriate operands.
+
+    ``dot``/``cos`` draw bipolar ±1 cells — the CAM stores *bits*
+    (``_encode`` binarises via ``x > 0``), so only bipolar data makes
+    the logical dot (``dim - 2 * hamming``) equal the arithmetic dot
+    the oracles compute; that identity is exactly what the fuzz pins.
+    """
+    if metric == "hamming":
+        return ((rng.random((m, dim)) > 0.5).astype(np.float32),
+                (rng.random((n, dim)) > 0.5).astype(np.float32))
+    if metric in ("dot", "cos"):
+        return (np.where(rng.random((m, dim)) < 0.5, -1.0, 1.0
+                         ).astype(np.float32),
+                np.where(rng.random((n, dim)) < 0.5, -1.0, 1.0
+                         ).astype(np.float32))
+    return (rng.standard_normal((m, dim)).astype(np.float32),
+            rng.standard_normal((n, dim)).astype(np.float32))
+
+
+def _run_sim_case(case: dict, rng: np.random.Generator) -> None:
+    m, n, dim, k = case["m"], case["n"], case["dim"], case["k"]
+    metric, largest = case["metric"], case["largest"]
+    arch = ArchSpec(rows=case["rows"], cols=case["cols"])
+    q, p = _data_for(rng, metric, m, n, dim)
+    care = None
+    if case["care"]:
+        care = (rng.random((n, dim)) > 0.3).astype(np.float32)
+        care[rng.integers(n)] = 0.0        # an all-wildcard row
+
+    if care is None:
+        mod = _sim_module(metric, k, largest, m, n, dim, arch,
+                          unroll_limit=case["unroll"])
+        inputs = (q, p)
+    else:
+        mod = _ternary_module(m, n, dim, k, arch)
+        inputs = (q, p, care)
+    plan = get_plan(mod, pack=case["pack"])
+    assert plan is not None, f"no plan for {case}"
+
+    ev, ei = (np.asarray(x) for x in plan.execute(*inputs))
+    iv, ii = (np.asarray(x) for x in execute_module(mod, *inputs))
+    np.testing.assert_array_equal(ei, ii, err_msg=f"engine!=interp {case}")
+    if metric in ("hamming", "dot"):
+        np.testing.assert_array_equal(ev, iv,
+                                      err_msg=f"engine!=interp {case}")
+    else:
+        np.testing.assert_allclose(ev, iv, atol=1e-4,
+                                   err_msg=f"engine!=interp {case}")
+
+    # tiled ref oracle at the plan's actual geometry.  On bipolar data
+    # cos is dot up to a positive per-pair-constant norm, and the
+    # engine reports the dot value for both — so the dot oracle pins
+    # cos bit-exactly too (same integers, same stable ties).
+    tr, dpt = plan.spec.tile_rows, plan.spec.dims_per_tile
+    oracle_metric = "dot" if metric == "cos" else metric
+    rv, ri = (np.asarray(x) for x in kref.cam_topk_tiled(
+        jnp.asarray(q), jnp.asarray(p), metric=oracle_metric, k=k,
+        largest=largest, tile_rows=tr, dims_per_tile=dpt,
+        care=None if care is None else jnp.asarray(care)))
+    np.testing.assert_array_equal(ei, ri, err_msg=f"engine!=oracle {case}")
+    if metric == "eucl":
+        np.testing.assert_allclose(ev, rv, atol=1e-4,
+                                   err_msg=f"engine!=oracle {case}")
+    else:
+        np.testing.assert_array_equal(ev, rv,
+                                      err_msg=f"engine!=oracle {case}")
+
+
+def _run_range_case(case: dict, rng: np.random.Generator) -> None:
+    m, n, dim = case["m"], case["n"], case["dim"]
+    arch = ArchSpec(rows=case["rows"], cols=case["cols"])
+    if case["interval"]:
+        q = rng.standard_normal((m, dim)).astype(np.float32)
+        lo = np.full((n, dim), -np.inf, np.float32)
+        hi = np.full((n, dim), np.inf, np.float32)
+        sel = rng.random((n, dim)) < 0.2
+        lo[sel] = (rng.standard_normal(sel.sum()) - 1.5).astype(np.float32)
+        hi[sel] = lo[sel] + rng.uniform(0.5, 4.0)
+        mod = _range_module(m, n, dim, arch, interval=True)
+        plan = get_plan(mod, pack=case["pack"])
+        assert plan is not None, f"no plan for {case}"
+        em = np.asarray(plan.execute(q, lo, hi))
+        im = np.asarray(execute_module(mod, q, lo, hi)[0])
+        rm = np.asarray(kref.acam_match(jnp.asarray(q), jnp.asarray(lo),
+                                        jnp.asarray(hi)))
+        np.testing.assert_array_equal(em, im,
+                                      err_msg=f"engine!=interp {case}")
+        np.testing.assert_array_equal(em, rm,
+                                      err_msg=f"engine!=oracle {case}")
+        return
+
+    metric = case["metric"]
+    q, p = _data_for(rng, metric, m, n, dim)
+    mod0 = _range_module(m, n, dim, arch, metric=metric, tau=0.0)
+    probe = get_plan(mod0)
+    tr, dpt = probe.spec.tile_rows, probe.spec.dims_per_tile
+    d = np.asarray(kref.tiled_distances(jnp.asarray(q), jnp.asarray(p),
+                                        metric=metric, tile_rows=tr,
+                                        dims_per_tile=dpt))
+    tau = float(np.quantile(d, case["quantile"]))
+    mod = _range_module(m, n, dim, arch, metric=metric, tau=tau,
+                        below=case["below"])
+    plan = get_plan(mod, pack=case["pack"])
+    assert plan is not None, f"no plan for {case}"
+    em = np.asarray(plan.execute(q, p))
+    im = np.asarray(execute_module(mod, q, p)[0])
+    rm = (d <= tau) if case["below"] else (d >= tau)
+    np.testing.assert_array_equal(em, im, err_msg=f"engine!=interp {case}")
+    np.testing.assert_array_equal(em, rm, err_msg=f"engine!=oracle {case}")
+
+
+def _ternary_module(m, n, dim, k, arch):
+    from repro.core.cim_dialect import (make_acquire, make_execute,
+                                       make_release, make_similarity,
+                                       make_yield)
+    from repro.core.ir import Builder, Module, PassManager, TensorType
+    from repro.core.passes import CompulsoryPartition
+
+    mod = Module("fuzz_tern", [TensorType((m, dim)), TensorType((n, dim)),
+                               TensorType((n, dim))])
+    q_a, p_a, c_a = mod.arguments
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, [q_a, p_a, c_a],
+                       [TensorType((m, k)), TensorType((m, k), "i32")])
+    blk = exe.region().block()
+    sim = make_similarity(blk, q_a, p_a, metric="hamming", k=k,
+                          largest=False, care=c_a)
+    make_yield(blk, sim.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition())
+    return pm.run(mod, {"arch": arch})
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweep (always runs; REPRO_FUZZ_CASES bounds it)
+# ---------------------------------------------------------------------------
+
+
+def test_fuzz_similarity_family():
+    clear_plan_cache()
+    master = np.random.default_rng(20260729)
+    for i in range(SIM_CASES):
+        rng = np.random.default_rng(np.random.SeedSequence([20260729, i]))
+        _run_sim_case(_draw_sim_case(master), rng)
+
+
+def test_fuzz_range_family():
+    master = np.random.default_rng(733)
+    for i in range(RANGE_CASES):
+        rng = np.random.default_rng(np.random.SeedSequence([733, i]))
+        _run_range_case(_draw_range_case(master), rng)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property wrappers (skip cleanly without the dependency)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fuzz_similarity_property(seed):
+    rng = np.random.default_rng(seed)
+    _run_sim_case(_draw_sim_case(rng), rng)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fuzz_range_property(seed):
+    rng = np.random.default_rng(seed)
+    _run_range_case(_draw_range_case(rng), rng)

@@ -1,0 +1,130 @@
+"""Plan-cache key disjointness regression pins.
+
+The plan-cache key has been widened three times (shards in PR 2,
+packed + operand dtypes in PR 3, the RangeSpec family + threshold in
+PR 4).  Each widening happened because two *different* executables
+could silently share a cache slot.  This file exhaustively crosses the
+spec axes and asserts that no two distinct configurations produce equal
+cache keys — so the next axis added to the engine fails loudly here
+instead of colliding silently.
+"""
+
+import itertools
+
+from repro.core import (ArchSpec, RangeSpec, SimilaritySpec,
+                        clear_plan_cache, get_plan)
+
+from test_engine import _sim_module
+from test_range import _range_module
+
+
+def _sim_specs():
+    """SimilaritySpec instances across every key-relevant axis."""
+    specs = []
+    for metric, k, largest, care_arg, dtypes, n, dim in itertools.product(
+            ("hamming", "dot", "eucl"), (1, 4), (False, True),
+            (None, 2), (("f32", "f32"), ("u32", "u32")),
+            (16, 33), (32, 64)):
+        if care_arg is not None and metric != "hamming":
+            continue                       # ternary is hamming-only
+        in_dtypes = dtypes if care_arg is None else dtypes + (dtypes[0],)
+        specs.append(SimilaritySpec(
+            metric=metric, k=k, largest=largest, tile_rows=16,
+            dims_per_tile=32, grid_rows=-(-n // 16), grid_cols=-(-dim // 32),
+            m=8, n=n, dim=dim, query_arg=0, pattern_arg=1,
+            out_v_shape=(8, k), out_i_shape=(8, k),
+            care_arg=care_arg, in_dtypes=in_dtypes))
+    return specs
+
+
+def _range_specs():
+    """RangeSpec instances across mode/metric/threshold/polarity axes."""
+    specs = []
+    for mode, metric, tau, below, n, dim in itertools.product(
+            ("threshold", "interval"), ("hamming", "dot", "eucl"),
+            (0.0, 1.5), (True, False), (16, 33), (32, 64)):
+        if mode == "interval":
+            if metric != "hamming" or tau != 0.0 or not below:
+                continue                   # interval has no such axes
+            metric_eff, pattern_args, dtypes = \
+                "interval", (1, 2), ("f32", "f32", "f32")
+        else:
+            metric_eff, pattern_args, dtypes = \
+                metric, (1,), ("f32", "f32")
+        specs.append(RangeSpec(
+            mode=mode, metric=metric_eff, threshold=tau, below=below,
+            tile_rows=16, dims_per_tile=32, grid_rows=-(-n // 16),
+            grid_cols=-(-dim // 32), m=8, n=n, dim=dim, query_arg=0,
+            pattern_args=pattern_args, out_shape=(8, n),
+            in_dtypes=dtypes))
+    return specs
+
+
+def test_cache_keys_disjoint_across_all_axes():
+    """Exhaustive cross: (spec, backend, batch, shards, packed) keys are
+    pairwise distinct for every distinct configuration."""
+    specs = _sim_specs() + _range_specs()
+    keys = []
+    for spec in specs:
+        for backend, batch, shards, packed in itertools.product(
+                ("jnp", "pallas"), (8, 64), (1, 4), (False, True)):
+            keys.append((spec, backend, batch, shards, packed))
+    assert len(keys) == len(set(keys)), (
+        f"{len(keys) - len(set(keys))} plan-cache key collisions across "
+        f"{len(specs)} specs")
+    # hashability sanity: every key actually lands in a dict slot
+    assert len({k: None for k in keys}) == len(keys)
+
+
+def test_similarity_and_range_specs_never_compare_equal():
+    """The two plan families share the cache dict; a frozen-dataclass
+    type split is what keeps their keys disjoint — pin it."""
+    for s in _sim_specs():
+        for r in _range_specs():
+            assert s != r and r != s
+    # even with maximally-aligned field values
+    s = _sim_specs()[0]
+    r = _range_specs()[0]
+    assert hash((s,)) != hash((r,)) or s != r
+
+
+def test_get_plan_returns_distinct_plans_per_axis():
+    """End-to-end: axes that must split the cache do split it."""
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("hamming", 3, False, 6, 24, 32, arch)
+
+    packed = get_plan(mod)                 # auto-pack for hamming
+    unpacked = get_plan(mod, pack=False)
+    assert packed is not unpacked and packed.packed and not unpacked.packed
+
+    jnp_plan = get_plan(mod, backend="jnp")
+    pallas_plan = get_plan(mod, backend="pallas")
+    assert jnp_plan is not pallas_plan
+
+    b8 = get_plan(mod, batch=8)
+    b16 = get_plan(mod, batch=16)
+    assert b8 is not b16
+
+    # threshold joins the RangeSpec key: same program shape, different
+    # tau/polarity -> different plans
+    r1 = get_plan(_range_module(4, 20, 32, arch, metric="hamming", tau=4.0))
+    r2 = get_plan(_range_module(4, 20, 32, arch, metric="hamming", tau=5.0))
+    r3 = get_plan(_range_module(4, 20, 32, arch, metric="hamming", tau=4.0,
+                                below=False))
+    assert r1 is not r2 and r1 is not r3 and r2 is not r3
+
+    # a range program can never hit a similarity plan's slot
+    sim_like = get_plan(_sim_module("hamming", 1, False, 4, 20, 32, arch))
+    assert sim_like is not None and sim_like is not r1
+
+
+def test_spec_equality_is_value_based():
+    """Equal configurations must share a plan (the cache-hit side)."""
+    a, b = _sim_specs()[0], _sim_specs()[0]
+    assert a == b and hash(a) == hash(b)
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    p1 = get_plan(_sim_module("dot", 2, False, 4, 16, 32, arch))
+    p2 = get_plan(_sim_module("dot", 2, False, 4, 16, 32, arch))
+    assert p1 is p2

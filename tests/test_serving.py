@@ -207,3 +207,145 @@ def test_linger_launches_partial_batches(compiled, rng):
         srv.search(q, timeout=60)
         assert time.perf_counter() - t0 < 30   # bounded, not starved
         assert srv.snapshot()["batches"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# failure paths: shutdown with in-flight traffic, double shutdown,
+# update_gallery racing concurrent searches
+# ---------------------------------------------------------------------------
+
+
+def test_stop_with_inflight_requests_completes_every_future(compiled, rng):
+    """Shutdown under live traffic: every outstanding future completes
+    (result or 'server stopped' error — never a hang), worker threads
+    join, and both server threads are gone afterwards."""
+    prog, gallery = compiled
+    srv = CamSearchServer(prog, gallery, max_wait_ms=1.0).start()
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    outcomes = []
+
+    def client():
+        try:
+            while True:
+                v, _ = srv.search(q, timeout=60)
+                outcomes.append(("ok", v.shape))
+        except RuntimeError as e:          # stopped mid-traffic
+            outcomes.append(("stopped", str(e)))
+        except Exception as e:             # noqa: BLE001
+            outcomes.append(("unexpected", e))
+
+    threads = [threading.Thread(target=client) for _ in range(6)]
+    for t in threads:
+        t.start()
+    deadline = time.perf_counter() + 30
+    while not any(o[0] == "ok" for o in outcomes):
+        assert time.perf_counter() < deadline, "no traffic before stop"
+        time.sleep(0.001)
+    srv.stop()                             # front door closes mid-flight
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "client deadlocked across shutdown"
+    assert srv._thread is None and srv._completer is None
+    assert all(kind in ("ok", "stopped") for kind, _ in outcomes), outcomes
+    assert sum(1 for kind, _ in outcomes if kind == "stopped") == 6
+
+
+def test_double_stop_is_idempotent(compiled, rng):
+    prog, gallery = compiled
+    srv = CamSearchServer(prog, gallery)
+    srv.stop()                             # stop before start: no-op
+    srv.start()
+    srv.search(rng.standard_normal((1, 64)).astype(np.float32), timeout=60)
+    srv.stop()
+    srv.stop()                             # second stop: no-op, no error
+    assert srv._thread is None and srv._completer is None
+    with pytest.raises(RuntimeError):
+        srv.submit(np.zeros((1, 64), np.float32))
+
+
+def test_update_gallery_racing_searches_stays_consistent(compiled, rng):
+    """Concurrent searches racing update_gallery under the writer-
+    priority lock: every response must match ONE gallery version
+    exactly — a batch must never see a half-applied update."""
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    n, dim = gallery.shape
+    g_a = gallery
+    g_b = np.ascontiguousarray(gallery[::-1])   # distinguishable version
+    q = rng.standard_normal((3, dim)).astype(np.float32)
+    va, ia = (np.asarray(x) for x in plan.execute(q, g_a))
+    vb, ib = (np.asarray(x) for x in plan.execute(q, g_b))
+    assert not np.array_equal(ia, ib)           # versions distinguishable
+
+    results, errs = [], []
+    stop = threading.Event()
+
+    def searcher():
+        try:
+            while not stop.is_set():
+                results.append(srv.search(q, timeout=60))
+        except Exception as e:                  # noqa: BLE001
+            errs.append(e)
+
+    with CamSearchServer(prog, gallery, max_wait_ms=0.5) as srv:
+        threads = [threading.Thread(target=searcher) for _ in range(4)]
+        for t in threads:
+            t.start()
+        rows = np.arange(n)
+        for flip in range(40):                  # hammer full-gallery swaps
+            srv.update_gallery(rows, g_b if flip % 2 == 0 else g_a)
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+        snap = srv.snapshot()
+    assert not errs, errs[:1]
+    assert snap["gallery_updates"] == 40
+    assert results, "no searches completed during the race"
+    for v, i in results:
+        matches_a = np.array_equal(i, ia) and np.array_equal(v, va)
+        matches_b = np.array_equal(i, ib) and np.array_equal(v, vb)
+        assert matches_a or matches_b, \
+            "response matches neither gallery version (torn update)"
+
+
+def test_update_gallery_validates_synchronously(compiled, rng):
+    prog, gallery = compiled
+    n, dim = gallery.shape
+    with CamSearchServer(prog, gallery) as srv:
+        with pytest.raises(ValueError):
+            srv.update_gallery([n], rng.standard_normal(
+                (1, dim)).astype(np.float32))          # out of range
+        with pytest.raises(ValueError):
+            srv.update_gallery([0], rng.standard_normal(
+                (2, dim)).astype(np.float32))          # row-count mismatch
+        # server stays healthy for good traffic and good updates
+        srv.update_gallery([0, 1], rng.standard_normal(
+            (2, dim)).astype(np.float32))
+        v, _ = srv.search(rng.standard_normal((2, dim)).astype(np.float32),
+                          timeout=60)
+        assert v.shape == (2, 4)
+        assert srv.snapshot()["gallery_updates"] == 1
+
+
+def test_update_gallery_interval_range_server(rng):
+    """Range-plan servers mutate (lo, hi) rows as a pair."""
+    from repro.core import get_plan
+    from test_range import _interval_data, _range_module
+    from repro.core.arch import ArchSpec
+
+    m, n, dim = 4, 30, 32
+    mod = _range_module(m, n, dim, ArchSpec(rows=8, cols=16), interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    with CamSearchServer(plan, (lo, hi), max_wait_ms=1.0) as srv:
+        before = srv.match(q, timeout=60)
+        with pytest.raises(ValueError, match="lo_rows"):
+            srv.update_gallery([0], lo[:1])    # must be a (lo, hi) pair
+        srv.update_gallery([0, n - 1],
+                           (lo[[0, n - 1]] - 10.0, hi[[0, n - 1]] + 10.0))
+        after = srv.match(q, timeout=60)
+    assert before.shape == after.shape == (m, n)
+    # widened intervals can only add matches on the touched rows
+    assert (after[:, [0, n - 1]] >= before[:, [0, n - 1]]).all()
+    untouched = [c for c in range(n) if c not in (0, n - 1)]
+    np.testing.assert_array_equal(after[:, untouched], before[:, untouched])

@@ -1,0 +1,336 @@
+"""Engine gallery mutation: ``update_rows`` on both plan families.
+
+The pinned contract: an incrementally updated gallery's results are
+bit-identical to re-preparing the mutated gallery from scratch, on
+every backend (jnp / pallas / sharded), packed and unpacked, and the
+memoised prepared layout is reused (no full re-prepare).  The sharded
+leg runs in a child process under 8 forced host devices
+(``python tests/test_update_rows.py --child``).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArchSpec, clear_plan_cache, get_plan
+from repro.core.engine import _update_enabled
+
+from test_engine import _data, _sim_module
+from test_range import _interval_data, _range_module
+
+DEVICES = 8
+
+
+def _fresh_oracle(mod, q, gallery, **kw):
+    """Full re-prepare oracle: a fresh plan on the mutated gallery."""
+    clear_plan_cache()
+    plan = get_plan(mod, **kw)
+    out = plan.execute(q, *(gallery if isinstance(gallery, tuple)
+                            else (gallery,)))
+    clear_plan_cache()
+    return out
+
+
+@pytest.mark.parametrize("metric,largest", [("hamming", False),
+                                            ("dot", True), ("eucl", False)])
+def test_update_rows_matches_full_reprepare(metric, largest, rng):
+    m, n, dim, k = 6, 37, 64, 4
+    mod = _sim_module(metric, k, largest, m, n, dim, ArchSpec(rows=16,
+                                                              cols=32))
+    plan = get_plan(mod)
+    q, p = _data(rng, metric, m, n, dim)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+
+    idx = np.array([0, 17, 36])            # first, middle, ragged-last rows
+    new = _data(rng, metric, 3, n, dim)[0]
+    pj2 = plan.update_rows(pj, idx, new)
+    assert isinstance(pj2, jnp.ndarray)
+    np.testing.assert_array_equal(np.asarray(pj2)[idx], new)
+
+    hits0, fb0 = plan.pattern_hits, plan.row_update_fallbacks
+    v1, i1 = plan.execute(q, pj2)
+    assert plan.pattern_hits == hits0 + 1, "updated layout not memo-seeded"
+    assert plan.row_update_fallbacks == fb0
+    assert plan.row_updates >= 1 and plan.rows_updated >= 3
+
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(pj2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_update_rows_pallas_backend(rng):
+    mod = _sim_module("dot", 3, False, 6, 40, 64, ArchSpec(rows=16, cols=32))
+    plan = get_plan(mod, backend="pallas")
+    q, p = _data(rng, "dot", 6, 40, 64)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+    idx = np.array([5, 39])
+    pj2 = plan.update_rows(pj, idx, _data(rng, "dot", 2, 40, 64)[0])
+    hits0 = plan.pattern_hits
+    v1, i1 = plan.execute(q, pj2)
+    assert plan.pattern_hits == hits0 + 1
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(pj2), backend="pallas")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_update_rows_unpacked_float_path(rng):
+    """pack=False keeps the float tile layout; updates rewrite it too."""
+    mod = _sim_module("hamming", 3, False, 5, 29, 48, ArchSpec(rows=8,
+                                                               cols=16))
+    plan = get_plan(mod, pack=False)
+    assert not plan.packed
+    q, p = _data(rng, "hamming", 5, 29, 48)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+    idx = np.array([2, 28])
+    pj2 = plan.update_rows(pj, idx, _data(rng, "hamming", 2, 29, 48)[0])
+    hits0 = plan.pattern_hits
+    v1, i1 = plan.execute(q, pj2)
+    assert plan.pattern_hits == hits0 + 1
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(pj2), pack=False)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_update_rows_range_threshold_and_interval(rng):
+    m, n, dim = 4, 29, 48
+    arch = ArchSpec(rows=8, cols=16)
+    idx = np.array([3, 28])
+
+    mod = _range_module(m, n, dim, arch, metric="hamming", tau=20.0)
+    plan = get_plan(mod)
+    q = (rng.random((m, dim)) > .5).astype(np.float32)
+    p = (rng.random((n, dim)) > .5).astype(np.float32)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+    pj2 = plan.update_rows(pj, idx, (rng.random((2, dim)) > .5
+                                     ).astype(np.float32))
+    hits0 = plan.pattern_hits
+    m1 = np.asarray(plan.execute(q, pj2))
+    assert plan.pattern_hits == hits0 + 1
+    np.testing.assert_array_equal(m1, np.asarray(
+        _fresh_oracle(mod, q, np.asarray(pj2))))
+
+    mod = _range_module(m, n, dim, arch, interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    loj, hij = jnp.asarray(lo), jnp.asarray(hi)
+    plan.execute(q, loj, hij)
+    loj2, hij2 = plan.update_rows((loj, hij), idx,
+                                  (lo[idx] - 1.0, hi[idx] + 1.0))
+    hits0 = plan.pattern_hits
+    m1 = np.asarray(plan.execute(q, loj2, hij2))
+    assert plan.pattern_hits == hits0 + 1
+    np.testing.assert_array_equal(m1, np.asarray(
+        _fresh_oracle(mod, q, (np.asarray(loj2), np.asarray(hij2)))))
+
+
+def test_update_rows_ternary_keys_on_gallery_care_pair(rng):
+    """Ternary plans memo on (gallery, care); updating gallery rows keeps
+    serving the same wildcard mask and stays bit-exact."""
+    from repro.core.cim_dialect import (make_acquire, make_execute,
+                                        make_release, make_similarity,
+                                        make_yield)
+    from repro.core.ir import Builder, Module, PassManager, TensorType
+    from repro.core.passes import CompulsoryPartition
+
+    m, n, dim, k = 4, 21, 40, 3
+    mod = Module("tern", [TensorType((m, dim)), TensorType((n, dim)),
+                          TensorType((n, dim))])
+    q_a, p_a, c_a = mod.arguments
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    exe = make_execute(b, dev.result, [q_a, p_a, c_a],
+                       [TensorType((m, k)), TensorType((m, k), "i32")])
+    blk = exe.region().block()
+    sim = make_similarity(blk, q_a, p_a, metric="hamming", k=k,
+                          largest=False, care=c_a)
+    make_yield(blk, sim.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    pm = PassManager()
+    pm.add(CompulsoryPartition())
+    part = pm.run(mod, {"arch": ArchSpec(rows=8, cols=16)})
+
+    plan = get_plan(part)
+    q = (rng.random((m, dim)) > .5).astype(np.float32)
+    p = (rng.random((n, dim)) > .5).astype(np.float32)
+    care = (rng.random((n, dim)) > .3).astype(np.float32)
+    pj, cj = jnp.asarray(p), jnp.asarray(care)
+    plan.execute(q, pj, cj)
+
+    with pytest.raises(ValueError, match="care"):
+        plan.update_rows(pj, [0], (rng.random((1, dim)) > .5
+                                   ).astype(np.float32))
+    idx = np.array([0, 20])
+    pj2 = plan.update_rows(pj, idx, (rng.random((2, dim)) > .5
+                                     ).astype(np.float32), care=cj)
+    hits0 = plan.pattern_hits
+    v1, i1 = plan.execute(q, pj2, cj)
+    assert plan.pattern_hits == hits0 + 1
+    clear_plan_cache()
+    v2, i2 = get_plan(part).execute(q, np.asarray(pj2), care)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_update_rows_validation(rng):
+    mod = _sim_module("dot", 2, False, 4, 16, 32, ArchSpec(rows=8, cols=16))
+    plan = get_plan(mod)
+    q, p = _data(rng, "dot", 4, 16, 32)
+    pj = jnp.asarray(p)
+    good = _data(rng, "dot", 2, 16, 32)[0]
+    with pytest.raises(ValueError, match="out of range"):
+        plan.update_rows(pj, [0, 16], good)
+    with pytest.raises(ValueError, match="duplicate"):
+        plan.update_rows(pj, [3, 3], good)
+    with pytest.raises(ValueError, match="shape"):
+        plan.update_rows(pj, [3], good)            # 2 rows for 1 index
+    # empty update is a no-op returning the gallery unchanged
+    assert plan.update_rows(pj, np.empty(0, np.int64),
+                            np.empty((0, 32), np.float32)) is pj
+
+
+def test_update_rows_fallback_paths(rng, monkeypatch):
+    """Numpy galleries, never-prepared galleries, and the kill switch
+    all fall back (counted) — and stay correct via full re-prepare."""
+    mod = _sim_module("hamming", 2, False, 4, 20, 32, ArchSpec(rows=8,
+                                                               cols=16))
+    plan = get_plan(mod)
+    q, p = _data(rng, "hamming", 4, 20, 32)
+    new = _data(rng, "hamming", 1, 20, 32)[0]
+
+    # numpy gallery: never memoised -> fallback, still correct
+    fb0 = plan.row_update_fallbacks
+    p2 = plan.update_rows(p, [5], new)
+    assert plan.row_update_fallbacks == fb0 + 1
+    v1, i1 = plan.execute(q, p2)
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    # jax gallery that was never dispatched -> memo miss -> fallback
+    pj = jnp.asarray(p)
+    fb0 = plan.row_update_fallbacks
+    plan.update_rows(pj, [5], new)
+    assert plan.row_update_fallbacks == fb0 + 1
+
+    # kill switch: mutation still applied, memo rewrite skipped
+    monkeypatch.setenv("REPRO_ENGINE_UPDATE", "off")
+    assert not _update_enabled()
+    plan.execute(q, pj)
+    misses0, fb0 = plan.pattern_misses, plan.row_update_fallbacks
+    pj2 = plan.update_rows(pj, [5], new)
+    assert plan.row_update_fallbacks == fb0 + 1
+    v1, i1 = plan.execute(q, pj2)          # full re-prepare (counted miss)
+    assert plan.pattern_misses == misses0 + 1
+    monkeypatch.delenv("REPRO_ENGINE_UPDATE")
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(pj2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_update_rows_packed_enforces_binary_contract(rng):
+    mod = _sim_module("hamming", 2, False, 4, 16, 32, ArchSpec(rows=8,
+                                                               cols=16))
+    plan = get_plan(mod)
+    assert plan.packed
+    q, p = _data(rng, "hamming", 4, 16, 32)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+    with pytest.raises(ValueError, match="binary"):
+        plan.update_rows(pj, [0], np.full((1, 32), 2.0, np.float32))
+
+
+def test_repeated_updates_chain_incrementally(rng):
+    """Each update seeds the memo for the next: a retraining loop of K
+    updates performs zero full re-prepares after the first dispatch."""
+    mod = _sim_module("dot", 2, True, 4, 24, 32, ArchSpec(rows=8, cols=16))
+    plan = get_plan(mod)
+    q, p = _data(rng, "dot", 4, 24, 32)
+    g = jnp.asarray(p)
+    plan.execute(q, g)
+    misses0 = plan.pattern_misses
+    for step in range(5):
+        g = plan.update_rows(g, [step, 23 - step],
+                             _data(rng, "dot", 2, 24, 32)[0])
+        plan.execute(q, g)
+    assert plan.pattern_misses == misses0
+    assert plan.row_update_fallbacks == 0
+    v1, i1 = plan.execute(q, g)
+    v2, i2 = _fresh_oracle(mod, q, np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+# ---------------------------------------------------------------------------
+# sharded: child process under 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+def _child() -> None:
+    import jax
+
+    assert jax.device_count() == DEVICES, jax.device_count()
+    rng = np.random.default_rng(5)
+    m, n, dim, k = 5, 77, 64, 4
+    mod = _sim_module("hamming", k, False, m, n, dim, ArchSpec(rows=8,
+                                                               cols=32))
+    plan = get_plan(mod, shards=DEVICES)
+    assert plan.shards == DEVICES
+    q, p = _data(rng, "hamming", m, n, dim)
+    pj = jnp.asarray(p)
+    plan.execute(q, pj)
+    idx = np.array([0, 40, 76])
+    pj2 = plan.update_rows(pj, idx, _data(rng, "hamming", 3, n, dim)[0])
+    hits0 = plan.pattern_hits
+    v1, i1 = plan.execute(q, pj2)
+    assert plan.pattern_hits == hits0 + 1, "sharded update not memo-seeded"
+    assert plan.row_update_fallbacks == 0
+    v2, i2 = get_plan(mod, shards=1).execute(q, np.asarray(pj2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+    # range plan, sharded, interval mode
+    mod = _range_module(4, 50, 32, ArchSpec(rows=8, cols=16), interval=True)
+    plan = get_plan(mod, shards=DEVICES)
+    q, lo, hi = _interval_data(rng, 4, 50, 32)
+    loj, hij = jnp.asarray(lo), jnp.asarray(hi)
+    plan.execute(q, loj, hij)
+    loj2, hij2 = plan.update_rows((loj, hij), [0, 49],
+                                  (lo[[0, 49]] - 1, hi[[0, 49]] + 1))
+    hits0 = plan.pattern_hits
+    m1 = np.asarray(plan.execute(q, loj2, hij2))
+    assert plan.pattern_hits == hits0 + 1
+    m2 = np.asarray(get_plan(mod, shards=1).execute(
+        q, np.asarray(loj2), np.asarray(hij2)))
+    np.testing.assert_array_equal(m1, m2)
+    print("UPDATE-SHARDED-OK")
+
+
+def test_update_rows_sharded_eight_devices():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={DEVICES}")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        env=env, capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.abspath(__file__)))
+    assert out.returncode == 0 and "UPDATE-SHARDED-OK" in out.stdout, (
+        f"sharded update child failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        raise SystemExit("run under pytest, or with --child")
