@@ -16,9 +16,10 @@ import traceback
 
 from repro.core import plan_cache_stats
 
-from . import (bench_engine, bench_forest, bench_hdc, bench_packed,
-               bench_serve, fig7_validation, fig8_dse, fig9_isocapacity,
-               gpu_comparison, roofline_table, table1_density, table2_knn)
+from . import (bench_engine, bench_faults, bench_forest, bench_hdc,
+               bench_packed, bench_serve, fig7_validation, fig8_dse,
+               fig9_isocapacity, gpu_comparison, roofline_table,
+               table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -44,6 +45,10 @@ SUITES = [
     # incremental update_rows vs full gallery re-prepare + HDC retrain
     # record; detailed record in BENCH_hdc.json (REPRO_HDC_GATE, auto = 3x)
     ("hdc_smoke", bench_hdc.run),
+    # accuracy under injected device faults (unhardened vs HardenedPlan)
+    # + resilient serving through transient outages; detailed record in
+    # BENCH_faults.json (gate REPRO_FAULTS_GATE, auto = 0.9x clean)
+    ("faults_smoke", bench_faults.run),
 ]
 
 

@@ -103,7 +103,6 @@ plan-cache key; requests beyond the host's device count clamp.
 
 from __future__ import annotations
 
-import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field, replace
@@ -118,13 +117,14 @@ from jax.sharding import NamedSharding, PartitionSpec
 from ..kernels import packing as kpack
 from ..kernels import ref as kref
 from ..launch.mesh import make_data_mesh
+from .envcfg import env_flag, env_int
 from .ir import Module
 
 __all__ = [
     "SimilaritySpec", "RangeSpec", "SearchPlan", "RangePlan",
     "PendingSearch", "extract_plan_spec", "extract_range_spec",
-    "get_plan", "merge_shard_candidates", "plan_cache_stats",
-    "clear_plan_cache",
+    "get_plan", "merge_shard_candidates", "module_for_spec",
+    "plan_cache_stats", "clear_plan_cache",
 ]
 
 
@@ -201,8 +201,7 @@ def _resolve_pack(spec: "SimilaritySpec", pack: Optional[bool]) -> bool:
     """
     packable = spec.metric in _PACKABLE_METRICS
     if pack is None:
-        env = os.environ.get("REPRO_ENGINE_PACK", "auto").lower()
-        return packable and env not in ("0", "off", "false")
+        return packable and env_flag("REPRO_ENGINE_PACK", True)
     if pack and not packable:
         raise ValueError(
             f"packed execution requires a binary/bipolar metric "
@@ -215,8 +214,28 @@ def _update_enabled() -> bool:
     path: ``off``/``0`` makes ``update_rows`` still apply the mutation
     but skip the memo rewrite — the next dispatch re-prepares in full
     (the pre-update behaviour, kept reachable for triage)."""
-    env = os.environ.get("REPRO_ENGINE_UPDATE", "auto").lower()
-    return env not in ("0", "off", "false")
+    return env_flag("REPRO_ENGINE_UPDATE", True)
+
+
+def _normalize_faults(faults):
+    """Validate/normalise a dispatch-time fault model.
+
+    The engine duck-types the model (``is_null`` /
+    ``corrupt_stored(srcs, spec)``, hashable) so ``repro.core`` never
+    imports ``repro.faults``.  Null models normalise to ``None`` —
+    that guarantees ``FaultModel(p_stuck=0)`` takes *exactly* the clean
+    code path (same memo key, same prepared layout, bit-identical
+    results).  The model is deliberately **not** part of the plan-cache
+    key: faults corrupt the stored sources host-side before the jitted
+    prepare, so the executables never retrace across fault epochs.
+    """
+    if faults is None:
+        return None
+    if not hasattr(faults, "is_null") or not hasattr(faults, "corrupt_stored"):
+        raise TypeError(
+            f"faults must be a repro.faults.FaultModel-like object, "
+            f"got {type(faults).__name__}")
+    return None if faults.is_null else faults
 
 
 #: source-gallery mutation for update_rows.  The donating variant
@@ -512,6 +531,65 @@ def extract_range_spec(module: Module) -> Optional[RangeSpec]:
         in_dtypes=tuple(v.type.dtype for v in rs.operands))
 
 
+def module_for_spec(spec, m: Optional[int] = None) -> Module:
+    """Synthesise a ``cim`` module whose extracted spec matches ``spec``.
+
+    Round-trips a plan spec back to IR: a single fused similarity /
+    range-search op with the spec's tile geometry injected as op
+    attributes (``extract_plan_spec`` / ``extract_range_spec`` read
+    ``tile_rows`` / ``dims_per_tile`` off the fused op, so the
+    partition pass need not run).  Module arguments are in canonical
+    order — query, stored operand(s)[, care] — which is also the
+    argument order of every partitioned module in this repo.
+
+    This is what lets the hardening layer compile a *physical* plan
+    (replicated/spare rows — a different ``n``) for an existing
+    logical spec, and the serving layer rebuild an interpreter-
+    executable module for its degraded fallback chain, without keeping
+    the original module object around.
+    """
+    from .cim_dialect import (make_acquire, make_execute, make_range_search,
+                              make_release, make_similarity, make_yield)
+    from .ir import Builder, TensorType
+
+    m = spec.m if m is None else int(m)
+    n, dim = spec.n, spec.dim
+    geom = {"tile_rows": spec.tile_rows, "dims_per_tile": spec.dims_per_tile}
+    is_range = isinstance(spec, RangeSpec)
+    interval = is_range and spec.mode == "interval"
+    n_stored = 3 if (interval or getattr(spec, "care_arg", None) is not None) \
+        else 2
+    arg_types = [TensorType((m, dim))] + \
+        [TensorType((n, dim)) for _ in range(n_stored - 1)]
+    mod = Module("spec_synth", arg_types)
+    b = Builder(mod.body)
+    dev = make_acquire(b)
+    if is_range:
+        out_types = [TensorType((m, n), "i1")]
+    else:
+        out_types = [TensorType((m, spec.k)), TensorType((m, spec.k), "i32")]
+    exe = make_execute(b, dev.result, list(mod.arguments), out_types)
+    blk = exe.region().block()
+    if interval:
+        q_a, lo_a, hi_a = mod.arguments
+        op = make_range_search(blk, q_a, lo=lo_a, hi=hi_a, extra_attrs=geom)
+    elif is_range:
+        q_a, p_a = mod.arguments
+        op = make_range_search(blk, q_a, patterns=p_a, metric=spec.metric,
+                               threshold=spec.threshold, below=spec.below,
+                               extra_attrs=geom)
+    else:
+        q_a, p_a = mod.arguments[0], mod.arguments[1]
+        care_a = mod.arguments[2] if n_stored == 3 else None
+        op = make_similarity(blk, q_a, p_a, metric=spec.metric, k=spec.k,
+                             largest=spec.largest, care=care_a,
+                             extra_attrs=geom)
+    make_yield(blk, op.results)
+    make_release(b, dev.result)
+    b.ret(exe.results)
+    return mod
+
+
 # ---------------------------------------------------------------------------
 # Compiled executables
 # ---------------------------------------------------------------------------
@@ -523,7 +601,7 @@ def _pick_batch(m: int) -> int:
     (say 1000) must still bound the batch, not let the round-up jump
     over it to 1024.
     """
-    cap = max(1, int(os.environ.get("REPRO_ENGINE_MAX_CHUNK", "1024")))
+    cap = env_int("REPRO_ENGINE_MAX_CHUNK", 1024, min_value=1)
     b = 8
     while b < min(max(m, 1), cap):
         b *= 2
@@ -1123,15 +1201,18 @@ def _src_ident(x) -> Tuple:
     return (id(x), tuple(x.shape), str(x.dtype))
 
 
-def _memo_insert(plan, srcs: Tuple[Any, ...], prepared) -> None:
+def _memo_insert(plan, srcs: Tuple[Any, ...], prepared,
+                 faults=None) -> None:
     """Insert a prepared layout into the plan's pattern memo (LRU).
 
     The entry keeps strong references to the sources so their ids
     cannot be recycled while it lives — same contract as the miss path
-    of :func:`_memoised_prepare`.
+    of :func:`_memoised_prepare`.  ``faults`` joins the key: a faulted
+    layout must never shadow the clean one (or another model's).
     """
     with plan._pattern_lock:
-        plan._pattern_cache[tuple(_src_ident(s) for s in srcs)] = \
+        plan._pattern_cache[
+            tuple(_src_ident(s) for s in srcs) + (faults,)] = \
             (srcs, prepared)
         slots = plan._pattern_cache_slots()
         while len(plan._pattern_cache) > slots:
@@ -1140,7 +1221,7 @@ def _memo_insert(plan, srcs: Tuple[Any, ...], prepared) -> None:
 
 
 def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
-                      check: Callable[[], None]):
+                      check: Callable[[], None], faults=None):
     """Per-plan pattern-prep memoisation shared by both plan families.
 
     ``srcs`` are the stored-operand sources the prepared layout derives
@@ -1153,13 +1234,18 @@ def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
     entry keeps strong references to the sources so their ids cannot be
     recycled while it lives.  ``check`` runs only when actually
     preparing (memo hits skip it).
+
+    ``faults`` (a normalised fault model or ``None``) is part of the
+    memo key — the model is frozen/hashable, so repeated dispatches
+    with the same model hit the same corrupted layout while the clean
+    entry (``None``) stays untouched.
     """
     if not all(isinstance(s, jax.Array) for s in srcs):
         with plan._pattern_lock:
             plan.pattern_misses += 1
         check()
         return run()
-    key = tuple(_src_ident(s) for s in srcs)
+    key = tuple(_src_ident(s) for s in srcs) + (faults,)
     with plan._pattern_lock:
         hit = plan._pattern_cache.get(key)
         if hit is not None:
@@ -1170,7 +1256,7 @@ def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
     prepared = run()
     with plan._pattern_lock:
         plan.pattern_misses += 1
-    _memo_insert(plan, srcs, prepared)
+    _memo_insert(plan, srcs, prepared, faults)
     return prepared
 
 
@@ -1220,9 +1306,9 @@ class SearchPlan:
         ``REPRO_ENGINE_PATTERN_SLOTS`` tunes it; evictions are counted
         and surfaced via :func:`plan_cache_stats`.
         """
-        return max(1, int(os.environ.get("REPRO_ENGINE_PATTERN_SLOTS", "4")))
+        return env_int("REPRO_ENGINE_PATTERN_SLOTS", 4, min_value=1)
 
-    def _prepared_patterns(self, p_src, care_src=None):
+    def _prepared_patterns(self, p_src, care_src=None, faults=None):
         """Encode + lay out the stored patterns, memoised per input array.
 
         Only *immutable* inputs (``jax.Array``) are memoised — a numpy
@@ -1232,6 +1318,10 @@ class SearchPlan:
         callers wanting the memo pass the gallery as a jax array.
         Ternary plans key on the (gallery, care-mask) pair — both must
         be jax arrays to memoise.
+
+        ``faults`` (already normalised) corrupts the stored sources
+        host-side *before* the jitted prepare — the executable itself
+        is fault-agnostic, so injecting faults never retraces.
         """
         def check():
             # guarded before (not inside) the jitted prepare, and only
@@ -1241,13 +1331,19 @@ class SearchPlan:
                 _check_binary_cells(p_src, "patterns")
 
         srcs = (p_src,) if care_src is None else (p_src, care_src)
-        return _memoised_prepare(
-            self, srcs,
-            lambda: self._prepare(p_src if isinstance(p_src, jax.Array)
-                                  else jnp.asarray(p_src), care_src),
-            check)
 
-    def dispatch(self, *inputs) -> "PendingSearch":
+        def run():
+            if faults is not None:
+                use = faults.corrupt_stored(
+                    tuple(np.asarray(s) for s in srcs), self.spec)
+                return self._prepare(jnp.asarray(use[0]),
+                                     *(jnp.asarray(u) for u in use[1:]))
+            return self._prepare(p_src if isinstance(p_src, jax.Array)
+                                 else jnp.asarray(p_src), care_src)
+
+        return _memoised_prepare(self, srcs, run, check, faults)
+
+    def dispatch(self, *inputs, faults=None) -> "PendingSearch":
         """Enqueue the plan's chunks without waiting for device results.
 
         Returns a :class:`PendingSearch` whose chunk arrays are
@@ -1259,7 +1355,14 @@ class SearchPlan:
         Thread-safe: the serving layer drives one shared plan from many
         worker threads.  The jitted executables are pure, the pattern
         memo has its own lock, and the stats counters are guarded here.
+
+        ``faults`` injects a device-fault model (see ``repro.faults``):
+        the stored patterns are corrupted host-side before the prepare,
+        the queries and executables stay clean.  A null model is
+        normalised away, so ``faults=FaultModel(p_stuck=0)`` is
+        bit-identical to ``faults=None``.
         """
+        faults = _normalize_faults(faults)
         with self._stats_lock:
             self.executions += 1
         spec = self.spec
@@ -1278,7 +1381,7 @@ class SearchPlan:
         if self.packed and spec.metric == "hamming" and \
                 not isinstance(q_src, jax.Array):
             _check_binary_cells(q_src, "queries")
-        pp = self._prepared_patterns(p_src, care_src)
+        pp = self._prepared_patterns(p_src, care_src, faults)
 
         b = self.batch
         chunks = []
@@ -1320,15 +1423,16 @@ class SearchPlan:
             i = i.reshape(lead + (k,))
         return (v, i)
 
-    def execute(self, *inputs):
+    def execute(self, *inputs, faults=None):
         """Run the plan; accepts exactly the compiled module's arguments.
 
         Always returns jax arrays, regardless of shard count (the
         sharded finalize merges on host; converting back keeps the
         public output type shard-invariant).  Serving loops that want
         the host arrays directly use dispatch/finalize themselves.
+        ``faults`` is forwarded to :meth:`dispatch`.
         """
-        v, i = self.finalize(self.dispatch(*inputs))
+        v, i = self.finalize(self.dispatch(*inputs, faults=faults))
         if self.shards > 1:
             v, i = jnp.asarray(v), jnp.asarray(i)
         return v, i
@@ -1378,7 +1482,11 @@ class SearchPlan:
             with self._stats_lock:
                 self.row_update_fallbacks += 1
             return
-        key = tuple(_src_ident(s) for s in old_srcs)
+        # only the clean (faults=None) entry is rewritten incrementally;
+        # faulted layouts re-prepare in full on the next faulted
+        # dispatch — fault masks are position-keyed, so a row moving
+        # through update_rows must re-draw its cell faults anyway
+        key = tuple(_src_ident(s) for s in old_srcs) + (None,)
         with self._pattern_lock:
             if donate:       # the old layout must not outlive its buffers
                 hit = self._pattern_cache.pop(key, None)
@@ -1447,21 +1555,27 @@ class RangePlan(SearchPlan):
     ``spec`` is a :class:`RangeSpec`.
     """
 
-    def _prepared_patterns(self, *pats):
+    def _prepared_patterns(self, *pats, faults=None):
         def check():
             if self.packed and self.spec.metric == "hamming":
                 _check_binary_cells(pats[0], "patterns")
 
-        return _memoised_prepare(
-            self, tuple(pats),
-            lambda: self._prepare(*(p if isinstance(p, jax.Array)
-                                    else jnp.asarray(p) for p in pats)),
-            check)
+        def run():
+            if faults is not None:
+                use = faults.corrupt_stored(
+                    tuple(np.asarray(p) for p in pats), self.spec)
+                return self._prepare(*(jnp.asarray(u) for u in use))
+            return self._prepare(*(p if isinstance(p, jax.Array)
+                                   else jnp.asarray(p) for p in pats))
 
-    def dispatch(self, *inputs) -> "PendingSearch":
+        return _memoised_prepare(self, tuple(pats), run, check, faults)
+
+    def dispatch(self, *inputs, faults=None) -> "PendingSearch":
         """Enqueue the plan's chunks; ``chunks`` hold ``(match, valid)``
-        pairs of async boolean blocks.  Same thread-safety contract as
-        the search plan (the serving layer drives one shared plan)."""
+        pairs of async boolean blocks.  Same thread-safety contract and
+        ``faults`` semantics as the search plan (the serving layer
+        drives one shared plan)."""
+        faults = _normalize_faults(faults)
         with self._stats_lock:
             self.executions += 1
         spec = self.spec
@@ -1472,7 +1586,7 @@ class RangePlan(SearchPlan):
         if self.packed and spec.metric == "hamming" and \
                 not isinstance(q_src, jax.Array):
             _check_binary_cells(q_src, "queries")
-        pp = self._prepared_patterns(*pats)
+        pp = self._prepared_patterns(*pats, faults=faults)
 
         b = self.batch
         chunks = []
@@ -1510,10 +1624,10 @@ class RangePlan(SearchPlan):
             return match.reshape(spec.out_shape)
         return match.reshape(lead + (spec.n,))
 
-    def execute(self, *inputs):
+    def execute(self, *inputs, faults=None):
         """Run the plan; returns the ``(M, N)`` boolean match matrix (a
         jax array regardless of shard count, like the search plan)."""
-        match = self.finalize(self.dispatch(*inputs))
+        match = self.finalize(self.dispatch(*inputs, faults=faults))
         return jnp.asarray(match) if self.shards > 1 else match
 
     def update_rows(self, stored, indices, new_rows, care=None, *,

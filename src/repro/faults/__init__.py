@@ -1,0 +1,14 @@
+"""Device-fault injection and hardening for CAM plans.
+
+``FaultModel`` (:mod:`repro.faults.model`) is the seeded, deterministic
+fault generator every plan accepts at dispatch time
+(``plan.execute(..., faults=model)``); ``HardenedPlan``
+(:mod:`repro.faults.harden`) wraps a plan with replication,
+checksum-readback self-healing, and aCAM guard bands.  See
+``docs/robustness.md``.
+"""
+
+from .harden import HardenedPlan, HealReport
+from .model import FaultModel
+
+__all__ = ["FaultModel", "HardenedPlan", "HealReport"]

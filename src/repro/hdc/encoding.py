@@ -22,13 +22,13 @@ hypervectors.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.envcfg import env_choice
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 
@@ -75,12 +75,10 @@ def _encode_matmul(q: jax.Array, keys: jax.Array, levels: jax.Array, *,
 
 
 def _kernel_choice() -> str:
-    env = os.environ.get("REPRO_HDC_KERNEL", "auto").lower()
+    env = env_choice("REPRO_HDC_KERNEL", "auto",
+                     ("auto", "matmul", "pallas", "ref"))
     if env == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "matmul"
-    if env not in ("matmul", "pallas", "ref"):
-        raise ValueError(f"REPRO_HDC_KERNEL must be auto/matmul/pallas/ref, "
-                         f"got {env!r}")
     return env
 
 

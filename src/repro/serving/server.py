@@ -60,6 +60,33 @@ incremental :meth:`~repro.core.engine.SearchPlan.update_rows` path
 re-encoded/re-packed), which is what makes online HDC retraining —
 misclassified queries re-bundled into class vectors, then re-served —
 cheap against live traffic (see ``repro.hdc`` and ``docs/hdc.md``).
+
+Resilience (deadlines, retries, circuit breaker, degraded mode)
+---------------------------------------------------------------
+Production serving assumes the backend sometimes fails: a pallas
+kernel hits a driver bug, a device wedges, a gallery transfer throws.
+The failure-domain machinery (see ``docs/robustness.md``):
+
+* **Per-request deadlines** (``deadline_ms`` / ``REPRO_SERVE_DEADLINE_MS``)
+  — an expired request is failed with a ``TimeoutError`` *without*
+  losing its batch slot: the rest of the coalesced batch still
+  dispatches, and results that arrive after the deadline are dropped
+  as misses rather than delivered late.
+* **Bounded retry with exponential backoff** — transient dispatch
+  failures retry up to ``REPRO_SERVE_RETRIES`` times per fallback
+  level, sleeping ``backoff * 2^attempt`` between attempts.
+* **Circuit breaker** — ``REPRO_SERVE_BREAKER_K`` consecutive primary-
+  backend errors trip the breaker open: batches skip straight to the
+  degraded chain until a cooldown elapses, then a half-open probe
+  batch tests the primary and closes the breaker on success.
+* **Degraded fallback chain** — pallas → jnp (same packing) → jnp
+  unpacked → IR interpreter; sharded plans degrade to single-device
+  first.  Every level serves the same gallery (and the same fault
+  model, when one is injected), so a degraded response is a correct
+  response, just slower.
+* **health()** — breaker state, fault-cell counters, deadline-miss
+  rate, degraded/retry telemetry; ``snapshot()`` keeps the
+  throughput/latency counters.
 """
 
 from __future__ import annotations
@@ -76,8 +103,132 @@ import numpy as np
 
 from ..core.compiler import CompiledCamProgram
 from ..core.engine import RangePlan, SearchPlan
+from ..core.envcfg import env_float, env_int
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
+
+
+class _CircuitBreaker:
+    """Closed → open → half-open circuit breaker over the primary backend.
+
+    ``threshold`` consecutive primary failures trip the breaker
+    **open**; while open, batches go straight to the degraded chain.
+    After ``cooldown`` seconds the next batch runs as a **half-open**
+    probe against the primary: success closes the breaker, failure
+    re-opens it (and restarts the cooldown).  ``threshold=0`` disables
+    the breaker entirely (every batch tries the primary).
+    """
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = int(threshold)
+        self.cooldown = float(cooldown_s)
+        self.state = "closed"
+        self.consecutive = 0
+        self.trips = 0
+        self.probes = 0
+        self.recoveries = 0
+        self._opened_at = 0.0
+        self._lock = threading.Lock()
+
+    @property
+    def enabled(self) -> bool:
+        return self.threshold > 0
+
+    def allow_primary(self) -> bool:
+        if not self.enabled:
+            return True
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if time.perf_counter() - self._opened_at >= self.cooldown:
+                self.state = "half-open"
+                self.probes += 1
+                return True
+            return False
+
+    def record_failure(self) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self.consecutive += 1
+            if self.state == "half-open" or \
+                    self.consecutive >= self.threshold:
+                if self.state != "open":
+                    self.trips += 1
+                self.state = "open"
+                self._opened_at = time.perf_counter()
+
+    def record_success(self) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self.consecutive = 0
+            if self.state != "closed":
+                self.state = "closed"
+                self.recoveries += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"state": self.state, "threshold": self.threshold,
+                    "consecutive_failures": self.consecutive,
+                    "trips": self.trips, "probes": self.probes,
+                    "recoveries": self.recoveries,
+                    "cooldown_ms": 1e3 * self.cooldown}
+
+
+class _InterpreterExecutor:
+    """Last-resort fallback level: the IR interpreter.
+
+    Synthesises a fused module for the plan's spec
+    (:func:`~repro.core.engine.module_for_spec`) and executes it with
+    :func:`~repro.core.executor.execute_module`, chunked to the traced
+    query count.  Synchronous (``dispatch`` computes eagerly) and slow,
+    but it has no jit/pallas/device dependency at all — when every
+    compiled level is failing, correctness-over-latency is the only
+    remaining contract.  Fault models corrupt the stored operands here
+    exactly like the compiled levels, so the degraded results match.
+    """
+
+    backend = "interpreter"
+
+    def __init__(self, spec):
+        from ..core.engine import RangeSpec, module_for_spec
+        self.spec = spec
+        self.is_range = isinstance(spec, RangeSpec)
+        self._module = module_for_spec(spec)
+
+    def dispatch(self, *inputs, faults=None):
+        from ..core.executor import execute_module
+        spec = self.spec
+        rows = np.asarray(inputs[spec.query_arg], np.float32)
+        if self.is_range:
+            stored = tuple(np.asarray(inputs[i], np.float32)
+                           for i in spec.pattern_args)
+        else:
+            stored = (np.asarray(inputs[spec.pattern_arg], np.float32),)
+            if spec.care_arg is not None:
+                stored += (np.asarray(inputs[spec.care_arg], np.float32),)
+        if faults is not None and not faults.is_null:
+            stored = tuple(np.asarray(s, np.float32)
+                           for s in faults.corrupt_stored(stored, spec))
+        m = spec.m
+        outs = []
+        for s in range(0, rows.shape[0], m):
+            chunk = rows[s:s + m]
+            valid = chunk.shape[0]
+            if valid < m:        # pad the ragged tail to the traced shape
+                chunk = np.concatenate(
+                    [chunk, np.zeros((m - valid, chunk.shape[1]),
+                                     chunk.dtype)])
+            res = execute_module(self._module, chunk, *stored)
+            outs.append((tuple(np.asarray(r) for r in res), valid))
+        return outs
+
+    def finalize(self, pending):
+        if self.is_range:
+            return np.concatenate([r[0][:v] for r, v in pending], axis=0)
+        return (np.concatenate([r[0][:v] for r, v in pending], axis=0),
+                np.concatenate([r[1][:v] for r, v in pending], axis=0))
 
 
 class _WriterPriorityLock:
@@ -147,11 +298,18 @@ class SearchResult:
 
 @dataclass
 class SearchRequest:
-    """One in-flight query block (``queries``: ``(rows, dim)``)."""
+    """One in-flight query block (``queries``: ``(rows, dim)``).
+
+    ``deadline`` (absolute ``time.perf_counter()`` seconds, or ``None``)
+    is the server-side budget: an expired request is failed with a
+    ``TimeoutError`` instead of dispatched (or instead of delivered, if
+    the result arrives late) — its batch never waits for it.
+    """
 
     rid: int
     queries: np.ndarray
     result: SearchResult
+    deadline: Optional[float] = None
     _done: threading.Event = field(default_factory=threading.Event)
 
     def wait(self, timeout: Optional[float] = None) -> SearchResult:
@@ -194,12 +352,43 @@ class CamSearchServer:
     max_inflight:
         Bound on dispatched-but-unsynced batches (the completion
         queue); backpressure against clients outrunning the device.
+    fault_model:
+        Optional :class:`repro.faults.FaultModel` injected into every
+        dispatch (all fallback levels included) — the served gallery
+        executes with the model's device faults while clients see the
+        plan's normal output contract.
+    deadline_ms:
+        Default per-request deadline (0/None = none;
+        ``REPRO_SERVE_DEADLINE_MS`` sets the process default).
+        ``submit(..., deadline_ms=...)`` overrides per request.
+    max_retries / retry_backoff_ms:
+        Bounded retry for transient dispatch failures: each fallback
+        level gets ``max_retries`` extra attempts with exponential
+        backoff (``REPRO_SERVE_RETRIES`` / ``REPRO_SERVE_BACKOFF_MS``).
+    breaker_threshold / breaker_cooldown_ms:
+        Circuit breaker: after ``breaker_threshold`` consecutive
+        primary-backend errors the breaker opens and batches go
+        straight to the degraded chain until a cooldown-elapsed probe
+        succeeds.  0 disables (``REPRO_SERVE_BREAKER_K`` /
+        ``REPRO_SERVE_BREAKER_COOLDOWN_MS``).
+    fault_injector:
+        Test/chaos hook: called as ``fault_injector(level_name)``
+        immediately before every dispatch attempt; raising simulates a
+        backend failure at that level and exercises the retry /
+        breaker / degraded machinery.
     """
 
     def __init__(self, program: Any, gallery: np.ndarray, *,
                  care_mask: Optional[np.ndarray] = None,
                  max_wait_ms: float = 2.0, max_batch: Optional[int] = None,
-                 max_inflight: int = 4):
+                 max_inflight: int = 4,
+                 fault_model: Any = None,
+                 deadline_ms: Optional[float] = None,
+                 max_retries: Optional[int] = None,
+                 retry_backoff_ms: Optional[float] = None,
+                 breaker_threshold: Optional[int] = None,
+                 breaker_cooldown_ms: Optional[float] = None,
+                 fault_injector: Any = None):
         if isinstance(program, CompiledCamProgram):
             plan = program.engine_plan
             if plan is None:
@@ -255,6 +444,29 @@ class CamSearchServer:
                 self.care = None
         self.max_wait = max_wait_ms / 1e3
         self.max_batch = int(max_batch or plan.batch)
+        if fault_model is not None and not hasattr(fault_model, "is_null"):
+            raise TypeError("fault_model must be a repro.faults.FaultModel")
+        self._faults = None if fault_model is None or fault_model.is_null \
+            else fault_model
+        self._deadline_s = (env_float("REPRO_SERVE_DEADLINE_MS", 0.0,
+                                      min_value=0.0)
+                            if deadline_ms is None else float(deadline_ms)
+                            ) / 1e3
+        self._max_retries = env_int("REPRO_SERVE_RETRIES", 2, min_value=0) \
+            if max_retries is None else int(max_retries)
+        self._backoff_s = (env_float("REPRO_SERVE_BACKOFF_MS", 2.0,
+                                     min_value=0.0)
+                           if retry_backoff_ms is None
+                           else float(retry_backoff_ms)) / 1e3
+        self._breaker = _CircuitBreaker(
+            env_int("REPRO_SERVE_BREAKER_K", 3, min_value=0)
+            if breaker_threshold is None else int(breaker_threshold),
+            (env_float("REPRO_SERVE_BREAKER_COOLDOWN_MS", 100.0,
+                       min_value=0.0)
+             if breaker_cooldown_ms is None
+             else float(breaker_cooldown_ms)) / 1e3)
+        self._fault_injector = fault_injector
+        self._fallbacks: Optional[List[Tuple[str, Any]]] = None
         self._init_state(max_inflight)
 
     def _init_state(self, max_inflight: int) -> None:
@@ -271,10 +483,13 @@ class CamSearchServer:
         self._gallery_lock = _WriterPriorityLock()
         # bounded: a long-lived server must not grow per-request state
         self._latencies: "deque[float]" = deque(maxlen=4096)
+        self._completer_alive = False
         self.stats: Dict[str, Any] = {
             "requests": 0, "queries": 0, "batches": 0,
             "batched_rows": 0, "errors": 0,
             "gallery_updates": 0, "rows_updated": 0,
+            "deadline_misses": 0, "backend_errors": 0, "retries": 0,
+            "degraded_batches": 0, "breaker_skips": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -306,9 +521,33 @@ class CamSearchServer:
         self._queue.put(None)               # wake the batcher
         self._thread.join()
         self._thread = None
-        self._completions.put(None)         # batcher done: flush completer
+        # batcher done: flush the completer.  The sentinel put must not
+        # hang when the completion queue is full and the completer is
+        # already dead (e.g. it crashed mid-run) — poll instead of block.
+        while True:
+            try:
+                self._completions.put(None, timeout=0.05)
+                break
+            except queue.Full:
+                if not self._completer_alive:
+                    break
         self._completer.join()
         self._completer = None
+        # a crashed completer strands undelivered batches in the queue;
+        # fail them so no waiter blocks forever on a stopped server
+        self._drain_completions()
+
+    def _drain_completions(self) -> None:
+        while True:
+            try:
+                item = self._completions.get_nowait()
+            except queue.Empty:
+                return
+            if item is None:
+                continue
+            for r in item[0]:
+                self._fail(r, RuntimeError(
+                    "server stopped before completion"))
 
     def __enter__(self) -> "CamSearchServer":
         return self.start()
@@ -318,12 +557,14 @@ class CamSearchServer:
 
     # -- client API --------------------------------------------------------
 
-    def submit(self, queries: np.ndarray) -> SearchRequest:
+    def submit(self, queries: np.ndarray, *,
+               deadline_ms: Optional[float] = None) -> SearchRequest:
         """Enqueue a query block; returns a waitable request handle.
 
         Malformed blocks are rejected here, synchronously — one bad
         request must never poison the innocent requests it would have
-        been coalesced with.
+        been coalesced with.  ``deadline_ms`` overrides the server's
+        default per-request deadline (0 = none for this request).
         """
         q = np.asarray(queries)
         if q.ndim == 1:
@@ -337,9 +578,12 @@ class CamSearchServer:
             raise ValueError(
                 f"query feature dimension {q.shape[1]} != plan dim {dim}")
         rid = next(self._rid)
+        now = time.perf_counter()
+        budget = self._deadline_s if deadline_ms is None \
+            else float(deadline_ms) / 1e3
         req = SearchRequest(rid=rid, queries=q,
-                            result=SearchResult(rid=rid,
-                                                submitted_at=time.perf_counter()))
+                            deadline=now + budget if budget > 0 else None,
+                            result=SearchResult(rid=rid, submitted_at=now))
         with self._lock:
             if not self._accepting:
                 raise RuntimeError("server not started")
@@ -462,33 +706,129 @@ class CamSearchServer:
             if req is not None:
                 self._fail(req, RuntimeError("server stopped"))
 
+    def _inputs_for(self, spec, rows: np.ndarray) -> List[Any]:
+        """Module-argument list for one executor's spec (fallback levels
+        may order arguments differently from the primary plan)."""
+        if self.is_range:
+            n_args = max(spec.query_arg, *spec.pattern_args) + 1
+            inputs: List[Any] = [None] * n_args
+            inputs[spec.query_arg] = rows
+            for pos, g in zip(spec.pattern_args, self.gallery):
+                inputs[pos] = g
+        else:
+            n_args = max(spec.query_arg, spec.pattern_arg,
+                         -1 if spec.care_arg is None
+                         else spec.care_arg) + 1
+            inputs = [None] * n_args
+            inputs[spec.query_arg] = rows
+            inputs[spec.pattern_arg] = self.gallery
+            if spec.care_arg is not None:
+                inputs[spec.care_arg] = self.care
+        return inputs
+
+    def _build_fallbacks(self) -> List[Tuple[str, Any]]:
+        """Degraded chain below the primary plan, most- to least-capable:
+        single-device (for sharded primaries) → jnp (for pallas) → jnp
+        unpacked (for packed) → IR interpreter.  Every level is an
+        ordinary plan-cache citizen compiled for the same spec/batch."""
+        from ..core.engine import get_plan, module_for_spec
+        spec = self.plan.spec
+        mod = module_for_spec(spec)
+        chain: List[Tuple[str, Any]] = []
+
+        def add(name: str, **kw) -> None:
+            try:
+                p = get_plan(mod, batch=self.plan.batch, **kw)
+            except Exception:       # level not buildable here: skip it
+                return
+            if p is not None and p is not self.plan and \
+                    all(p is not e for _, e in chain):
+                chain.append((name, p))
+
+        if self.plan.shards > 1:
+            add("jnp-single", backend="jnp", pack=self.plan.packed)
+        if self.plan.backend == "pallas":
+            add("jnp", backend="jnp", pack=self.plan.packed)
+        if self.plan.packed:
+            add("jnp-unpacked", backend="jnp", pack=False)
+        chain.append(("interpreter", _InterpreterExecutor(spec)))
+        return chain
+
+    def _levels(self) -> List[Tuple[str, Any]]:
+        with self._lock:
+            if self._fallbacks is None:
+                self._fallbacks = self._build_fallbacks()
+            fallbacks = self._fallbacks
+        return [("primary", self.plan)] + fallbacks
+
+    def _dispatch_resilient(self, rows: np.ndarray) -> Tuple[Any, Any]:
+        """Dispatch with retry, breaker, and degraded fallback.
+
+        Walks the level chain (skipping the primary while the breaker
+        is open), giving each level ``max_retries`` extra attempts with
+        exponential backoff.  Returns ``(executor, pending)`` from the
+        first level that accepts the dispatch; raises the last error
+        only when *every* level (including the interpreter) failed.
+        """
+        levels = self._levels()
+        start = 0
+        if not self._breaker.allow_primary():
+            start = 1
+            with self._lock:
+                self.stats["breaker_skips"] += 1
+        last: Optional[BaseException] = None
+        for li in range(start, len(levels)):
+            name, ex = levels[li]
+            primary = li == 0
+            for attempt in range(self._max_retries + 1):
+                try:
+                    if self._fault_injector is not None:
+                        self._fault_injector(name)
+                    pending = ex.dispatch(*self._inputs_for(ex.spec, rows),
+                                          faults=self._faults)
+                except BaseException as e:      # noqa: BLE001 — retried
+                    last = e
+                    if primary:
+                        self._breaker.record_failure()
+                    with self._lock:
+                        self.stats["backend_errors"] += 1
+                    if attempt < self._max_retries:
+                        with self._lock:
+                            self.stats["retries"] += 1
+                        if self._backoff_s:
+                            time.sleep(self._backoff_s * (2 ** attempt))
+                    continue
+                if primary:
+                    self._breaker.record_success()
+                else:
+                    with self._lock:
+                        self.stats["degraded_batches"] += 1
+                return ex, pending
+        raise last if last is not None else RuntimeError("no dispatch level")
+
     def _execute_batch(self, batch: Sequence[SearchRequest]) -> None:
         """Dispatch one coalesced batch; the device result (async jax
         arrays) goes to the completion thread, so the batcher is free to
         coalesce and dispatch the next batch immediately."""
+        # expire dead-on-arrival requests first: a missed deadline costs
+        # a TimeoutError, never the rest of the batch's slot
+        now = time.perf_counter()
+        live = []
+        for r in batch:
+            if r.deadline is not None and now > r.deadline:
+                self._fail_timeout(r)
+            else:
+                live.append(r)
+        if not live:
+            return
+        batch = live
         # reader side of the gallery lock: the whole read-gallery +
         # dispatch sequence sees exactly one gallery version, and a
         # waiting update_gallery writer gets in before the *next* batch
         self._gallery_lock.acquire_read()
         try:
             rows = np.concatenate([r.queries for r in batch], axis=0)
-            spec = self.plan.spec
-            if self.is_range:
-                n_args = max(spec.query_arg, *spec.pattern_args) + 1
-                inputs: List[Any] = [None] * n_args
-                inputs[spec.query_arg] = rows
-                for pos, g in zip(spec.pattern_args, self.gallery):
-                    inputs[pos] = g
-            else:
-                n_args = max(spec.query_arg, spec.pattern_arg,
-                             -1 if spec.care_arg is None
-                             else spec.care_arg) + 1
-                inputs = [None] * n_args
-                inputs[spec.query_arg] = rows
-                inputs[spec.pattern_arg] = self.gallery
-                if spec.care_arg is not None:
-                    inputs[spec.care_arg] = self.care
-            pending = self.plan.dispatch(*inputs)
+            executor, pending = self._dispatch_resilient(rows)
         except BaseException as e:          # noqa: BLE001 — fanned out
             for r in batch:
                 self._fail(r, e)
@@ -498,53 +838,126 @@ class CamSearchServer:
         with self._lock:
             self.stats["batches"] += 1
             self.stats["batched_rows"] += rows.shape[0]
-        self._completions.put((batch, pending, rows.shape[0]))  # backpressured
+        self._put_completion((batch, executor, pending, rows))
+
+    def _put_completion(self, item: Tuple[Any, ...]) -> None:
+        """Backpressured hand-off that cannot hang shutdown: the put
+        polls so a dead completion thread fails the batch instead of
+        blocking the batcher (and therefore ``stop()``) forever."""
+        while True:
+            try:
+                self._completions.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                if not self._completer_alive:
+                    for r in item[0]:
+                        self._fail(r, RuntimeError(
+                            "completion thread is not running"))
+                    return
+
+    def _rescue(self, batch: Sequence[SearchRequest], rows: np.ndarray,
+                failed: Any):
+        """Synchronous finalize-failure recovery in the completion
+        thread: re-run the batch through the levels below the one that
+        failed (under the gallery read lock, so the retry still sees
+        one gallery version)."""
+        levels = self._levels()
+        idx = next((i for i, (_, ex) in enumerate(levels)
+                    if ex is failed), -1)
+        self._gallery_lock.acquire_read()
+        try:
+            for name, ex in levels[idx + 1:]:
+                try:
+                    if self._fault_injector is not None:
+                        self._fault_injector(name)
+                    pending = ex.dispatch(
+                        *self._inputs_for(ex.spec, rows),
+                        faults=self._faults)
+                    out = ex.finalize(pending)
+                except BaseException:       # noqa: BLE001 — next level
+                    with self._lock:
+                        self.stats["backend_errors"] += 1
+                    continue
+                with self._lock:
+                    self.stats["degraded_batches"] += 1
+                return out
+        finally:
+            self._gallery_lock.release_read()
+        return None
 
     def _completion_loop(self) -> None:
-        while True:
-            item = self._completions.get()
-            if item is None:
-                break
-            batch, pending, rows = item
-            try:
-                if self.is_range:
-                    matches = np.asarray(self.plan.finalize(pending))
-                    matches = matches.reshape(rows, -1)
-                    values = indices = None
-                else:
-                    values, indices = self.plan.finalize(pending)
-                    # finalize shapes outputs for the *compiled module*
-                    # (which may have been traced with 1-D or stacked
-                    # queries); the scatter below is strictly row-major
-                    values = np.asarray(values).reshape(rows, -1)
-                    indices = np.asarray(indices).reshape(rows, -1)
-            except BaseException as e:          # noqa: BLE001 — fanned out
+        self._completer_alive = True
+        try:
+            while True:
+                item = self._completions.get()
+                if item is None:
+                    break
+                self._complete_one(item)
+        finally:
+            self._completer_alive = False
+
+    def _complete_one(self, item: Tuple[Any, ...]) -> None:
+        batch, executor, pending, rows_arr = item
+        rows = rows_arr.shape[0]
+        try:
+            out = executor.finalize(pending)
+        except BaseException as e:          # noqa: BLE001 — rescued
+            if executor is self.plan:
+                self._breaker.record_failure()
+            with self._lock:
+                self.stats["backend_errors"] += 1
+            out = self._rescue(batch, rows_arr, executor)
+            if out is None:
                 for r in batch:
                     self._fail(r, e)
-                continue
-            now = time.perf_counter()
-            off = 0
-            with self._lock:
-                self.stats["requests"] += len(batch)
-                self.stats["queries"] += rows
-            for r in batch:
-                m = r.queries.shape[0]
-                if self.is_range:
-                    r.result.matches = matches[off:off + m]
-                else:
-                    r.result.values = values[off:off + m]
-                    r.result.indices = indices[off:off + m]
-                r.result.completed_at = now
+                return
+        if self.is_range:
+            matches = np.asarray(out).reshape(rows, -1)
+            values = indices = None
+        else:
+            values, indices = out
+            # finalize shapes outputs for the *compiled module* (which
+            # may have been traced with 1-D or stacked queries); the
+            # scatter below is strictly row-major
+            values = np.asarray(values).reshape(rows, -1)
+            indices = np.asarray(indices).reshape(rows, -1)
+        now = time.perf_counter()
+        off = 0
+        with self._lock:
+            self.stats["requests"] += len(batch)
+            self.stats["queries"] += rows
+        for r in batch:
+            m = r.queries.shape[0]
+            if r.deadline is not None and now > r.deadline:
+                # result arrived, but past the budget: a miss, not a
+                # late delivery the client already gave up on
                 off += m
-                with self._lock:
-                    self._latencies.append(r.result.latency_s)
-                r._done.set()
+                self._fail_timeout(r)
+                continue
+            if self.is_range:
+                r.result.matches = matches[off:off + m]
+            else:
+                r.result.values = values[off:off + m]
+                r.result.indices = indices[off:off + m]
+            r.result.completed_at = now
+            off += m
+            with self._lock:
+                self._latencies.append(r.result.latency_s)
+            r._done.set()
 
     def _fail(self, req: SearchRequest, err: BaseException) -> None:
         req.result.error = err
         req.result.completed_at = time.perf_counter()
         with self._lock:
             self.stats["errors"] += 1
+        req._done.set()
+
+    def _fail_timeout(self, req: SearchRequest) -> None:
+        req.result.error = TimeoutError(
+            f"request {req.rid} missed its deadline")
+        req.result.completed_at = time.perf_counter()
+        with self._lock:
+            self.stats["deadline_misses"] += 1
         req._done.set()
 
     # -- telemetry ---------------------------------------------------------
@@ -578,4 +991,46 @@ class CamSearchServer:
             out["plan"]["mode"] = spec.mode
         else:
             out["plan"]["k"] = spec.k
+        return out
+
+    def health(self) -> Dict[str, Any]:
+        """Liveness/degradation endpoint: breaker state, fault-model
+        telemetry, deadline-miss rate, and the degraded chain.
+
+        ``status`` is ``"ok"`` while the primary backend serves,
+        ``"degraded"`` once the breaker is open or any batch has been
+        served by a fallback level.
+        """
+        with self._lock:
+            st = dict(self.stats)
+            fallbacks = self._fallbacks
+        br = self._breaker.snapshot()
+        misses = st["deadline_misses"]
+        degraded = br["state"] != "closed" or st["degraded_batches"] > 0
+        out: Dict[str, Any] = {
+            "status": "degraded" if degraded else "ok",
+            "running": self._running,
+            "breaker": br,
+            "deadline_miss_rate":
+                misses / max(1, misses + st["requests"]),
+            "deadline_misses": misses,
+            "backend_errors": st["backend_errors"],
+            "retries": st["retries"],
+            "degraded_batches": st["degraded_batches"],
+            "breaker_skips": st["breaker_skips"],
+            "fallback_levels":
+                None if fallbacks is None else [n for n, _ in fallbacks],
+        }
+        if self._faults is not None:
+            spec = self.plan.spec
+            out["fault_model"] = {
+                "seed": self._faults.seed,
+                "p_stuck": self._faults.p_stuck,
+                "p_flip": self._faults.p_flip,
+                "sigma": self._faults.sigma,
+                "drift": self._faults.drift, "t": self._faults.t,
+                "epoch": self._faults.epoch,
+                "cells": self._faults.cell_fault_counts(
+                    (spec.n, spec.dim)),
+            }
         return out

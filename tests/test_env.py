@@ -1,0 +1,158 @@
+"""Strict ``REPRO_*`` environment parsing (``repro.core.envcfg``).
+
+The contract pinned here: garbage in any recognised variable raises a
+``ValueError`` that names the variable, the offending value, and what
+would have been accepted — it never silently becomes a default (the
+historical failure mode: ``REPRO_ENGINE_PACK=offf`` meant *on*).
+"""
+
+import math
+
+import pytest
+
+from repro.core.envcfg import (env_choice, env_flag, env_float, env_gate,
+                               env_int)
+
+
+class TestEnvFlag:
+    def test_unset_means_default(self, monkeypatch):
+        monkeypatch.delenv("X_FLAG", raising=False)
+        assert env_flag("X_FLAG", True) is True
+        assert env_flag("X_FLAG", False) is False
+
+    @pytest.mark.parametrize("raw,want", [
+        ("1", True), ("true", True), ("ON", True), ("yes", True),
+        ("0", False), ("False", False), ("off", False), ("NO", False),
+    ])
+    def test_spellings(self, monkeypatch, raw, want):
+        monkeypatch.setenv("X_FLAG", raw)
+        assert env_flag("X_FLAG", not want) is want
+
+    def test_auto_means_default(self, monkeypatch):
+        monkeypatch.setenv("X_FLAG", "auto")
+        assert env_flag("X_FLAG", True) is True
+        assert env_flag("X_FLAG", False) is False
+
+    def test_garbage_raises_naming_the_variable(self, monkeypatch):
+        monkeypatch.setenv("X_FLAG", "offf")
+        with pytest.raises(ValueError, match="X_FLAG.*offf"):
+            env_flag("X_FLAG", True)
+
+    def test_auto_rejected_when_disallowed(self, monkeypatch):
+        monkeypatch.setenv("X_FLAG", "auto")
+        with pytest.raises(ValueError, match="X_FLAG"):
+            env_flag("X_FLAG", True, auto_means_default=False)
+
+
+class TestEnvInt:
+    def test_parse_and_bounds(self, monkeypatch):
+        monkeypatch.setenv("X_INT", " 42 ")
+        assert env_int("X_INT", 7) == 42
+        monkeypatch.delenv("X_INT")
+        assert env_int("X_INT", 7) == 7
+
+    @pytest.mark.parametrize("raw", ["1k", "3.5", "", "NaN"])
+    def test_garbage_raises(self, monkeypatch, raw):
+        monkeypatch.setenv("X_INT", raw)
+        with pytest.raises(ValueError, match="X_INT"):
+            env_int("X_INT", 7)
+
+    def test_min_max_enforced(self, monkeypatch):
+        monkeypatch.setenv("X_INT", "0")
+        with pytest.raises(ValueError, match="X_INT.*>= 1"):
+            env_int("X_INT", 7, min_value=1)
+        monkeypatch.setenv("X_INT", "9")
+        with pytest.raises(ValueError, match="X_INT.*<= 8"):
+            env_int("X_INT", 7, max_value=8)
+
+
+class TestEnvFloat:
+    def test_parse(self, monkeypatch):
+        monkeypatch.setenv("X_F", "2.5")
+        assert env_float("X_F", 1.0) == 2.5
+
+    def test_nan_rejected(self, monkeypatch):
+        monkeypatch.setenv("X_F", "nan")
+        with pytest.raises(ValueError, match="X_F"):
+            env_float("X_F", 1.0)
+
+    def test_min_enforced(self, monkeypatch):
+        monkeypatch.setenv("X_F", "-1")
+        with pytest.raises(ValueError, match="X_F.*>= 0"):
+            env_float("X_F", 1.0, min_value=0.0)
+
+
+class TestEnvChoice:
+    def test_choice(self, monkeypatch):
+        monkeypatch.setenv("X_C", "Ref")
+        assert env_choice("X_C", "auto", ("auto", "ref")) == "ref"
+        monkeypatch.setenv("X_C", "nope")
+        with pytest.raises(ValueError, match="X_C.*auto/ref"):
+            env_choice("X_C", "auto", ("auto", "ref"))
+
+
+class TestEnvGate:
+    def test_auto_off_and_value(self, monkeypatch):
+        monkeypatch.delenv("X_G", raising=False)
+        assert env_gate("X_G", 3.0) == 3.0
+        monkeypatch.setenv("X_G", "auto")
+        assert env_gate("X_G", 3.0) == 3.0
+        monkeypatch.setenv("X_G", "off")
+        assert env_gate("X_G", 3.0) == 0.0
+        monkeypatch.setenv("X_G", "1.5")
+        assert env_gate("X_G", 3.0) == 1.5
+        monkeypatch.setenv("X_G", "fast")
+        with pytest.raises(ValueError, match="X_G"):
+            env_gate("X_G", 3.0)
+        assert not math.isnan(env_gate("X_G2", 2.0))
+
+
+class TestEngineKnobsAreStrict:
+    """The engine's own knobs go through the strict parsers."""
+
+    def test_max_chunk_garbage_raises(self, monkeypatch):
+        from repro.core.engine import _pick_batch
+        monkeypatch.setenv("REPRO_ENGINE_MAX_CHUNK", "1k")
+        with pytest.raises(ValueError, match="REPRO_ENGINE_MAX_CHUNK"):
+            _pick_batch(64)
+
+    def test_pack_typo_raises_not_silently_on(self, monkeypatch):
+        from types import SimpleNamespace
+
+        from repro.core.engine import _resolve_pack
+        monkeypatch.setenv("REPRO_ENGINE_PACK", "offf")
+        with pytest.raises(ValueError, match="REPRO_ENGINE_PACK"):
+            _resolve_pack(SimpleNamespace(metric="hamming"), None)
+
+    def test_update_flag_garbage_raises(self, monkeypatch):
+        from repro.core.engine import _update_enabled
+        monkeypatch.setenv("REPRO_ENGINE_UPDATE", "2")
+        with pytest.raises(ValueError, match="REPRO_ENGINE_UPDATE"):
+            _update_enabled()
+
+    def test_pattern_slots_must_be_positive(self, monkeypatch):
+        from repro.core.engine import SearchPlan
+        monkeypatch.setenv("REPRO_ENGINE_PATTERN_SLOTS", "0")
+        with pytest.raises(ValueError,
+                           match="REPRO_ENGINE_PATTERN_SLOTS"):
+            SearchPlan._pattern_cache_slots()
+
+    def test_hdc_kernel_garbage_raises(self, monkeypatch):
+        from repro.hdc.encoding import _kernel_choice
+        monkeypatch.setenv("REPRO_HDC_KERNEL", "fastest")
+        with pytest.raises(ValueError, match="REPRO_HDC_KERNEL"):
+            _kernel_choice()
+
+    def test_serve_deadline_garbage_fails_at_construction(
+            self, monkeypatch, rng):
+        from repro.core import ArchSpec, get_plan
+        from repro.serving import CamSearchServer
+        from test_engine import _data, _sim_module
+
+        mod = _sim_module("dot", 2, True, 4, 16, 16,
+                          ArchSpec(rows=8, cols=16))
+        plan = get_plan(mod)
+        _, p = _data(rng, "dot", 4, 16, 16)
+        monkeypatch.setenv("REPRO_SERVE_DEADLINE_MS", "soon")
+        with pytest.raises(ValueError, match="REPRO_SERVE_DEADLINE_MS"):
+            CamSearchServer(plan, p)

@@ -1,0 +1,230 @@
+"""Device-fault injection (`repro.faults`): model determinism, engine
+dispatch-time corruption, and HardenedPlan replication / healing."""
+
+import numpy as np
+import pytest
+
+from repro.core import ArchSpec, get_plan
+from repro.faults import FaultModel, HardenedPlan
+from test_engine import _data, _sim_module
+from test_range import _interval_data, _range_module
+
+ARCH = ArchSpec(rows=16, cols=32)
+
+
+def _search_plan(rng, metric="dot", m=6, n=48, dim=32, k=3, **kw):
+    mod = _sim_module(metric, k, metric != "eucl", m, n, dim, ARCH)
+    return get_plan(mod, **kw), _data(rng, metric, m, n, dim)
+
+
+# -- model ----------------------------------------------------------------
+
+
+def test_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(p_stuck=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(p_flip=-0.1)
+    with pytest.raises(ValueError):
+        FaultModel(sigma=-1.0)
+    with pytest.raises(ValueError):
+        FaultModel(seed=-1)
+
+
+def test_null_model_detection():
+    assert FaultModel().is_null
+    assert FaultModel(drift=0.5, t=0).is_null          # no elapsed time
+    assert not FaultModel(p_flip=0.01).is_null
+    assert not FaultModel(drift=0.5, t=3).is_null
+
+
+def test_stuck_cells_are_permanent_flips_are_transient():
+    fm = FaultModel(seed=3, p_stuck=0.05, p_flip=0.05)
+    s0a, s1a = fm.stuck_masks((40, 16))
+    s0b, s1b = fm.rewritten().stuck_masks((40, 16))
+    np.testing.assert_array_equal(s0a, s0b)            # permanent
+    np.testing.assert_array_equal(s1a, s1b)
+    assert not (s0a & s1a).any()                       # disjoint
+    fa = fm.flip_mask((40, 16))
+    fb = fm.rewritten().flip_mask((40, 16))
+    assert (fa != fb).any()                            # redrawn per epoch
+    np.testing.assert_array_equal(fa, fm.flip_mask((40, 16)))
+
+
+def test_drift_accumulates_in_fixed_direction():
+    fm = FaultModel(seed=1, drift=0.1, t=2)
+    d2 = fm.drift_shift((8, 8))
+    d5 = fm.aged(3).drift_shift((8, 8))
+    np.testing.assert_array_equal(np.sign(d2), np.sign(d5))
+    np.testing.assert_allclose(np.abs(d5), 2.5 * np.abs(d2))
+    assert fm.aged(3).suggest_guard(z=0.0) == pytest.approx(0.5)
+    assert fm.rewritten().t == 0 and fm.rewritten().epoch == fm.epoch + 1
+
+
+def test_corrupt_interval_stuck_semantics():
+    lo = np.zeros((4, 4), np.float32)
+    hi = np.ones((4, 4), np.float32)
+    fm = FaultModel(seed=0, p_stuck=1.0)               # every cell stuck
+    lo2, hi2 = fm.corrupt_interval(lo, hi)
+    wild = (lo2 == -np.inf) & (hi2 == np.inf)          # stuck-at-1
+    empty = (lo2 == np.inf) & (hi2 == -np.inf)         # stuck-at-0
+    assert (wild | empty).all() and wild.any() and empty.any()
+
+
+# -- engine dispatch-time injection ---------------------------------------
+
+
+def test_null_model_bit_identical_to_clean(rng):
+    (plan, (q, p)) = _search_plan(rng)
+    v0, i0 = plan.execute(q, p)
+    v1, i1 = plan.execute(q, p, faults=FaultModel())
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_faults_reject_garbage_object(rng):
+    (plan, (q, p)) = _search_plan(rng)
+    with pytest.raises(TypeError):
+        plan.execute(q, p, faults="p=0.1")
+
+
+def test_seeded_injection_reproducible_and_seed_sensitive(rng):
+    (plan, (q, p)) = _search_plan(rng)
+    fm = FaultModel(seed=5, p_stuck=0.02, p_flip=0.01)
+    va, ia = plan.execute(q, p, faults=fm)
+    vb, ib = plan.execute(q, p, faults=FaultModel(seed=5, p_stuck=0.02,
+                                                  p_flip=0.01))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+    vc, ic = plan.execute(q, p, faults=FaultModel(seed=6, p_stuck=0.02,
+                                                  p_flip=0.01))
+    assert not np.array_equal(np.asarray(ia), np.asarray(ic))
+
+
+def test_packed_and_unpacked_see_identical_faults(rng):
+    """Corruption happens in the source metric domain, so the uint32
+    lanes and the float slab encode the same faulted cells."""
+    m, n, dim, k = 6, 64, 64, 4
+    mod = _sim_module("hamming", k, False, m, n, dim, ARCH)
+    q, p = _data(rng, "hamming", m, n, dim)
+    fm = FaultModel(seed=2, p_stuck=0.03, p_flip=0.01)
+    vp, ip = get_plan(mod, pack=True).execute(q, p, faults=fm)
+    vu, iu = get_plan(mod, pack=False).execute(q, p, faults=fm)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(iu))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(vu))
+
+
+def test_engine_faults_match_oracle_on_corrupted_sources(rng):
+    """Engine-with-faults == clean engine on a pre-corrupted gallery:
+    injection is exactly a transformation of the stored operands."""
+    (plan, (q, p)) = _search_plan(rng, metric="eucl")
+    fm = FaultModel(seed=7, p_stuck=0.01, sigma=0.05, drift=0.01, t=2)
+    corrupted, = fm.corrupt_stored((np.asarray(p),), plan.spec)
+    v_want, i_want = plan.execute(q, corrupted)
+    v_got, i_got = plan.execute(q, p, faults=fm)
+    np.testing.assert_array_equal(np.asarray(i_want), np.asarray(i_got))
+    np.testing.assert_array_equal(np.asarray(v_want), np.asarray(v_got))
+
+
+def test_range_interval_fault_injection(rng):
+    m, n, dim = 5, 40, 16
+    mod = _range_module(m, n, dim, ArchSpec(rows=8, cols=16), interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    fm = FaultModel(seed=4, p_stuck=0.05, sigma=0.01)
+    want = np.asarray(plan.execute(
+        q, *fm.corrupt_interval(np.asarray(lo), np.asarray(hi))))
+    got = np.asarray(plan.execute(q, lo, hi, faults=fm))
+    np.testing.assert_array_equal(want, got)
+    clean = np.asarray(plan.execute(q, lo, hi))
+    assert (clean != got).any()          # faults actually bit
+
+
+# -- HardenedPlan ---------------------------------------------------------
+
+
+def test_hardened_r1_is_bit_identical_search(rng):
+    (plan, (q, p)) = _search_plan(rng, metric="eucl")
+    hp = HardenedPlan(plan, replicas=1, spares=0)
+    hp.prepare(p)
+    v0, i0 = plan.execute(q, p)
+    v1, i1 = hp.execute(q)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+def test_hardened_r1_is_bit_identical_range(rng):
+    m, n, dim = 5, 40, 16
+    mod = _range_module(m, n, dim, ArchSpec(rows=8, cols=16), interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    hp = HardenedPlan(plan, replicas=1, spares=0)
+    hp.prepare(lo, hi)
+    np.testing.assert_array_equal(np.asarray(plan.execute(q, lo, hi)),
+                                  np.asarray(hp.execute(q)))
+
+
+def test_replication_improves_topk_agreement(rng):
+    """3x replication + median de-dup recovers top-k overlap with the
+    clean result.  Averaged over fault seeds (everything is seeded, so
+    this is deterministic): any single fault draw can go either way,
+    the expectation must not."""
+    (plan, (q, p)) = _search_plan(rng, metric="dot", m=16, n=96, dim=64)
+    clean_k = plan.spec.k
+    clean = np.asarray(plan.execute(q, p)[1])
+    hp = HardenedPlan(plan, replicas=3, spares=0)
+    hp.prepare(p)
+
+    def agree(a):
+        return np.mean([len(set(a[r]) & set(clean[r])) / clean_k
+                        for r in range(clean.shape[0])])
+
+    raw_scores, rep_scores = [], []
+    for seed in range(8):
+        fm = FaultModel(seed=seed, p_stuck=0.02, p_flip=0.01)
+        raw_scores.append(agree(np.asarray(
+            plan.execute(q, p, faults=fm)[1])))
+        rep_scores.append(agree(np.asarray(hp.execute(q, faults=fm)[1])))
+    assert np.mean(rep_scores) > np.mean(raw_scores)
+
+
+def test_heal_remaps_faulty_rows_to_spares(rng):
+    m, n, dim = 5, 40, 16
+    mod = _range_module(m, n, dim, ArchSpec(rows=8, cols=16), interval=True)
+    plan = get_plan(mod)
+    q, lo, hi = _interval_data(rng, m, n, dim)
+    fm = FaultModel(seed=11, p_stuck=0.02, p_flip=0.01)
+    hp = HardenedPlan(plan, replicas=2, spares=64)
+    hp.prepare(lo, hi)
+    report = hp.heal(fm)
+    assert report.detected > 0
+    assert report.remapped > 0
+    assert report.remapped <= report.detected
+    snap = hp.snapshot()
+    assert snap["spares_free"] == 64 - report.remapped
+    if report.unrepairable == 0:
+        # fully healed: the faulted physical gallery reads back clean,
+        # so execution under the model matches the clean logical result
+        want = np.asarray(plan.execute(q, lo, hi))
+        got = np.asarray(hp.execute(q, faults=fm))
+        np.testing.assert_array_equal(want, got)
+
+
+def test_heal_is_idempotent_when_clean(rng):
+    (plan, (q, p)) = _search_plan(rng, metric="eucl")
+    hp = HardenedPlan(plan, replicas=1, spares=4)
+    hp.prepare(p)
+    report = hp.heal(FaultModel())          # null model: nothing to find
+    assert report.detected == 0 and report.remapped == 0
+    assert report.passes == 0               # short-circuits, no readback
+
+
+def test_hardened_validates_inputs(rng):
+    (plan, (_, p)) = _search_plan(rng)
+    with pytest.raises(ValueError):
+        HardenedPlan(plan, replicas=0)
+    with pytest.raises(ValueError):
+        HardenedPlan(plan, replicas=1, spares=-1)
+    hp = HardenedPlan(plan, replicas=1, spares=0)
+    with pytest.raises(RuntimeError):
+        hp.execute(p)                       # prepare() not called yet

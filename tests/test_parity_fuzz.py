@@ -8,6 +8,13 @@ engine plan, the IR interpreter, and the tiled reference oracles agree:
 indices and boolean matches bit-exactly everywhere, values bit-exactly
 for the integer metrics and to float tolerance for the analog ones.
 
+A third axis rides on every case: a **fault model** (absent / null /
+real).  A null model (all probabilities zero) must be bit-identical to
+running with no model at all on every backend and layout; a real model
+must equal the clean plan run on pre-corrupted stored operands (faults
+are a pure source transformation), reproduce bit-exactly across calls,
+and agree between the packed and unpacked encodings.
+
 Two drivers share one case generator:
 
 * a deterministic numpy-seeded sweep (``REPRO_FUZZ_CASES``, default
@@ -29,6 +36,7 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 from repro.core import ArchSpec, clear_plan_cache, get_plan
 from repro.core.executor import execute_module
+from repro.faults import FaultModel
 from repro.kernels import ref as kref
 
 from test_engine import _sim_module
@@ -69,8 +77,23 @@ def _draw_sim_case(rng: np.random.Generator) -> dict:
         # None = auto-pack (packs hamming/dot/cos); False = float path
         "pack": None if rng.integers(2) else False,
         "care": bool(metric == "hamming" and rng.integers(10) < 3),
+        "faults": _draw_faults(rng, analog=metric == "eucl"),
     }
     return case
+
+
+def _draw_faults(rng: np.random.Generator, *, analog: bool):
+    """Fault axis: absent / null (p=0, must be bit-identical to clean) /
+    real (stuck + flips, plus sigma noise on analog cells)."""
+    r = int(rng.integers(3))
+    if r == 0:
+        return None
+    if r == 1:
+        return {"seed": int(rng.integers(1 << 16))}        # null model
+    return {"seed": int(rng.integers(1 << 16)),
+            "p_stuck": float(rng.uniform(0.01, 0.05)),
+            "p_flip": float(rng.uniform(0.0, 0.02)),
+            "sigma": float(rng.uniform(0.0, 0.05)) if analog else 0.0}
 
 
 def _draw_range_case(rng: np.random.Generator) -> dict:
@@ -88,6 +111,7 @@ def _draw_range_case(rng: np.random.Generator) -> dict:
         "rows": int(_ROWS[rng.integers(len(_ROWS))]),
         "cols": int(_COLS[rng.integers(len(_COLS))]),
         "pack": None if rng.integers(2) else False,
+        "faults": _draw_faults(rng, analog=interval or metric == "eucl"),
     }
 
 
@@ -159,6 +183,70 @@ def _run_sim_case(case: dict, rng: np.random.Generator) -> None:
         np.testing.assert_array_equal(ev, rv,
                                       err_msg=f"engine!=oracle {case}")
 
+    _check_sim_faults(case, plan, mod, inputs, ev, ei)
+
+
+def _check_sim_faults(case, plan, mod, inputs, ev, ei):
+    """Fault axis for a similarity case (see module docstring)."""
+    if case["faults"] is None:
+        return
+    fm = FaultModel(**case["faults"])
+    fv, fi = (np.asarray(x) for x in plan.execute(*inputs, faults=fm))
+    if fm.is_null:
+        np.testing.assert_array_equal(fi, ei,
+                                      err_msg=f"null-faults!=clean {case}")
+        np.testing.assert_array_equal(fv, ev,
+                                      err_msg=f"null-faults!=clean {case}")
+        return
+    # faults == a pure transformation of the stored operands
+    corr = fm.corrupt_stored(tuple(np.asarray(s) for s in inputs[1:]),
+                             plan.spec)
+    wv, wi = (np.asarray(x) for x in plan.execute(inputs[0], *corr))
+    np.testing.assert_array_equal(fi, wi,
+                                  err_msg=f"faults!=corrupted-src {case}")
+    np.testing.assert_array_equal(fv, wv,
+                                  err_msg=f"faults!=corrupted-src {case}")
+    # seeded injection reproduces bit-exactly across calls
+    fv2, fi2 = (np.asarray(x) for x in plan.execute(
+        *inputs, faults=FaultModel(**case["faults"])))
+    np.testing.assert_array_equal(fi, fi2,
+                                  err_msg=f"faults not reproducible {case}")
+    np.testing.assert_array_equal(fv, fv2,
+                                  err_msg=f"faults not reproducible {case}")
+    # ... and across the packed / unpacked encodings
+    if plan.packed:
+        uv, ui = (np.asarray(x) for x in get_plan(mod, pack=False)
+                  .execute(*inputs, faults=fm))
+        np.testing.assert_array_equal(fi, ui,
+                                      err_msg=f"packed!=unpacked {case}")
+        if case["metric"] in ("hamming", "dot"):
+            np.testing.assert_array_equal(
+                fv, uv, err_msg=f"packed!=unpacked {case}")
+        else:
+            np.testing.assert_allclose(
+                fv, uv, atol=1e-4, err_msg=f"packed!=unpacked {case}")
+
+
+def _check_range_faults(case, plan, inputs, em):
+    """Fault axis for a range case."""
+    if case["faults"] is None:
+        return
+    fm = FaultModel(**case["faults"])
+    f = np.asarray(plan.execute(*inputs, faults=fm))
+    if fm.is_null:
+        np.testing.assert_array_equal(f, em,
+                                      err_msg=f"null-faults!=clean {case}")
+        return
+    corr = fm.corrupt_stored(tuple(np.asarray(s) for s in inputs[1:]),
+                             plan.spec)
+    w = np.asarray(plan.execute(inputs[0], *corr))
+    np.testing.assert_array_equal(f, w,
+                                  err_msg=f"faults!=corrupted-src {case}")
+    f2 = np.asarray(plan.execute(
+        *inputs, faults=FaultModel(**case["faults"])))
+    np.testing.assert_array_equal(f, f2,
+                                  err_msg=f"faults not reproducible {case}")
+
 
 def _run_range_case(case: dict, rng: np.random.Generator) -> None:
     m, n, dim = case["m"], case["n"], case["dim"]
@@ -181,6 +269,7 @@ def _run_range_case(case: dict, rng: np.random.Generator) -> None:
                                       err_msg=f"engine!=interp {case}")
         np.testing.assert_array_equal(em, rm,
                                       err_msg=f"engine!=oracle {case}")
+        _check_range_faults(case, plan, (q, lo, hi), em)
         return
 
     metric = case["metric"]
@@ -201,6 +290,7 @@ def _run_range_case(case: dict, rng: np.random.Generator) -> None:
     rm = (d <= tau) if case["below"] else (d >= tau)
     np.testing.assert_array_equal(em, im, err_msg=f"engine!=interp {case}")
     np.testing.assert_array_equal(em, rm, err_msg=f"engine!=oracle {case}")
+    _check_range_faults(case, plan, (q, p), em)
 
 
 def _ternary_module(m, n, dim, k, arch):

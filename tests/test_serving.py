@@ -349,3 +349,187 @@ def test_update_gallery_interval_range_server(rng):
     assert (after[:, [0, n - 1]] >= before[:, [0, n - 1]]).all()
     untouched = [c for c in range(n) if c not in (0, n - 1)]
     np.testing.assert_array_equal(after[:, untouched], before[:, untouched])
+
+
+# ---------------------------------------------------------------------------
+# resilience: deadlines, retries, circuit breaker, degraded mode,
+# fault models, and shutdown with a wedged completion pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_miss_is_timeout_not_batch_failure(compiled, rng):
+    """An expired deadline costs that request a TimeoutError; requests
+    coalesced alongside it still complete."""
+    prog, gallery = compiled
+    with CamSearchServer(prog, gallery, max_wait_ms=20.0) as srv:
+        dead = srv.submit(rng.standard_normal((2, 64)).astype(np.float32),
+                          deadline_ms=0.001)
+        live = srv.submit(rng.standard_normal((2, 64)).astype(np.float32))
+        res_d = dead.wait(timeout=60)
+        res_l = live.wait(timeout=60)
+        snap = srv.health()
+    assert isinstance(res_d.error, TimeoutError)
+    assert res_l.error is None and res_l.values.shape == (2, 4)
+    assert snap["deadline_misses"] >= 1
+    assert snap["deadline_miss_rate"] > 0
+
+
+def test_retry_heals_transient_backend_fault(compiled, rng):
+    """A transient dispatch failure is retried on the same level with
+    backoff — no degradation, no client-visible error."""
+    prog, gallery = compiled
+    fails = {"primary": 1}
+
+    def injector(level):
+        if fails.get(level, 0) > 0:
+            fails[level] -= 1
+            raise RuntimeError("transient")
+
+    with CamSearchServer(prog, gallery, max_retries=2,
+                         retry_backoff_ms=1.0,
+                         fault_injector=injector) as srv:
+        v, i = srv.search(rng.standard_normal((2, 64)).astype(np.float32),
+                          timeout=60)
+        h = srv.health()
+    assert v.shape == (2, 4)
+    assert h["retries"] >= 1
+    assert h["degraded_batches"] == 0
+    assert h["status"] == "ok"
+
+
+def test_breaker_trips_degrades_and_recovers(compiled, rng):
+    """K consecutive primary failures open the breaker (requests served
+    degraded, primary skipped); after the cooldown a probe closes it."""
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    want_v, want_i = (np.asarray(x) for x in plan.execute(q, gallery))
+    fails = {"primary": 2}
+
+    def injector(level):
+        if fails.get(level, 0) > 0:
+            fails[level] -= 1
+            raise RuntimeError("injected outage")
+
+    with CamSearchServer(prog, gallery, max_retries=0,
+                         breaker_threshold=2, breaker_cooldown_ms=50.0,
+                         fault_injector=injector) as srv:
+        outs = [srv.search(q, timeout=60) for _ in range(3)]
+        mid = srv.health()
+        time.sleep(0.12)                   # past the cooldown: probe
+        outs.append(srv.search(q, timeout=60))
+        after = srv.health()
+    for v, i in outs:                      # degraded results stay exact
+        np.testing.assert_array_equal(i, want_i)
+        np.testing.assert_array_equal(v, want_v)
+    assert mid["breaker"]["trips"] >= 1
+    assert mid["status"] == "degraded"
+    assert mid["degraded_batches"] >= 1
+    assert after["breaker"]["state"] == "closed"
+    assert after["breaker"]["recoveries"] >= 1
+
+
+def test_interpreter_fallback_serves_when_all_backends_fail(compiled, rng):
+    """With every compiled level permanently failing, the IR
+    interpreter still serves exact results (last-resort degraded mode)."""
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    q = rng.standard_normal((3, 64)).astype(np.float32)
+    want_v, want_i = (np.asarray(x) for x in plan.execute(q, gallery))
+
+    def injector(level):
+        if level != "interpreter":
+            raise RuntimeError(f"dead backend {level}")
+
+    with CamSearchServer(prog, gallery, max_retries=0, breaker_threshold=1,
+                         fault_injector=injector) as srv:
+        v, i = srv.search(q, timeout=120)
+        h = srv.health()
+    np.testing.assert_array_equal(i, want_i)
+    np.testing.assert_allclose(v, want_v, atol=1e-4)
+    assert h["status"] == "degraded"
+    assert h["fallback_levels"][-1] == "interpreter"
+
+
+def test_server_fault_model_matches_plan_execute(compiled, rng):
+    """A server-level fault model corrupts exactly like plan.execute
+    with the same model, and health() surfaces the realised counts."""
+    from repro.faults import FaultModel
+
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    fm = FaultModel(seed=5, p_stuck=0.01, sigma=0.02)
+    with CamSearchServer(prog, gallery, fault_model=fm) as srv:
+        v, i = srv.search(q, timeout=60)
+        h = srv.health()
+    want_v, want_i = plan.execute(q, gallery, faults=fm)
+    np.testing.assert_array_equal(i, np.asarray(want_i))
+    np.testing.assert_array_equal(v, np.asarray(want_v))
+    counts = h["fault_model"]["cells"]
+    assert counts["stuck0"] + counts["stuck1"] > 0
+
+
+def test_server_rejects_garbage_fault_model(compiled):
+    prog, gallery = compiled
+    with pytest.raises(TypeError):
+        CamSearchServer(prog, gallery, fault_model="p=0.1")
+
+
+def test_null_fault_model_is_clean(compiled, rng):
+    from repro.faults import FaultModel
+
+    prog, gallery = compiled
+    plan = prog.engine_plan
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    with CamSearchServer(prog, gallery, fault_model=FaultModel()) as srv:
+        v, i = srv.search(q, timeout=60)
+        h = srv.health()
+    want_v, want_i = plan.execute(q, gallery)
+    np.testing.assert_array_equal(i, np.asarray(want_i))
+    np.testing.assert_array_equal(v, np.asarray(want_v))
+    assert "fault_model" not in h          # normalised away
+
+
+def test_stop_does_not_hang_with_dead_completer_and_full_queue(
+        compiled, rng):
+    """Shutdown regression: completer dead, completion queue full
+    (bounded, max_inflight=1), batcher wedged mid-hand-off, and an
+    update_gallery writer pending — stop() must return promptly and
+    every outstanding future must resolve with an error."""
+    prog, gallery = compiled
+    n, dim = gallery.shape
+    srv = CamSearchServer(prog, gallery, max_inflight=1,
+                          max_wait_ms=1.0).start()
+    # kill the completion thread out from under the server
+    srv._completions.put(None)
+    deadline = time.perf_counter() + 10
+    while srv._completer_alive and time.perf_counter() < deadline:
+        time.sleep(0.001)
+    assert not srv._completer_alive
+
+    q = rng.standard_normal((2, dim)).astype(np.float32)
+    reqs = [srv.submit(q) for _ in range(4)]   # wedge the hand-off
+
+    upd_err = []
+
+    def writer():                              # pending gallery update
+        try:
+            srv.update_gallery([0], rng.standard_normal(
+                (1, dim)).astype(np.float32))
+        except Exception as e:                 # noqa: BLE001
+            upd_err.append(e)
+
+    w = threading.Thread(target=writer)
+    w.start()
+    time.sleep(0.2)                            # let everything wedge
+
+    t0 = time.perf_counter()
+    srv.stop()
+    assert time.perf_counter() - t0 < 10, "stop() hung"
+    w.join(timeout=10)
+    assert not w.is_alive(), "update_gallery writer deadlocked"
+    for r in reqs:
+        res = r.wait(timeout=10)
+        assert res.error is not None           # failed, never stranded
+    assert srv._thread is None and srv._completer is None
