@@ -20,12 +20,12 @@ disables.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
 
 from repro.core import clear_plan_cache
+from repro.core.envcfg import env_gate
 from repro.core.arch import ArchSpec, CamType
 from repro.core.executor import execute_module
 from repro.forest import CamForestClassifier, random_forest, vote
@@ -49,12 +49,7 @@ def _time(fn) -> float:
 
 
 def _gate() -> float:
-    raw = os.environ.get("REPRO_FOREST_GATE", "auto").lower()
-    if raw in ("0", "off", "false"):
-        return 0.0
-    if raw == "auto":
-        return 2.0
-    return float(raw)
+    return env_gate("REPRO_FOREST_GATE", 2.0)
 
 
 def run():
@@ -123,6 +118,16 @@ def run():
         assert gated["speedup"] >= gate, (
             f"forest RangePlan only {gated['speedup']:.2f}x over the "
             f"interpreter oracle (gate: >= {gate}x); see BENCH_forest.json")
+        # the small point regressed below 1.0x before the tiny-plan
+        # dense fast path (per-tile lax.scan stepping dominated the
+        # arithmetic at a few hundred rows); pin it at parity-or-better
+        # so the fast path cannot rot silently
+        small = POINTS[-1]
+        small_speedup = results[f"t{small[0]}_d{small[1]}"]["speedup"]
+        assert small_speedup >= 1.0, (
+            f"small-program point t{small[0]}_d{small[1]} fell back below "
+            f"the interpreter ({small_speedup:.2f}x < 1.0x): the tiny-plan "
+            f"fast path regressed; see BENCH_forest.json")
     return payload
 
 

@@ -25,13 +25,13 @@ retrained accuracy on the synthetic MNIST stand-in) rides along.
 
 from __future__ import annotations
 
-import os
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ArchSpec, clear_plan_cache, get_plan
+from repro.core.envcfg import env_gate
 from repro.core.cim_dialect import (make_acquire, make_execute, make_release,
                                     make_similarity, make_yield)
 from repro.core.ir import Builder, Module, PassManager, TensorType
@@ -46,12 +46,7 @@ REPEATS = 9
 
 
 def _gate() -> float:
-    raw = os.environ.get("REPRO_HDC_GATE", "auto").lower()
-    if raw in ("0", "off", "false"):
-        return 0.0
-    if raw == "auto":
-        return 3.0
-    return float(raw)
+    return env_gate("REPRO_HDC_GATE", 3.0)
 
 
 def _sim_module(m, n, dim, arch):

@@ -20,7 +20,6 @@ disables.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -30,6 +29,7 @@ from repro.core import (ArchSpec, Builder, Module, PassManager, TensorType,
                         clear_plan_cache, get_plan)
 from repro.core.cim_dialect import (make_acquire, make_execute, make_release,
                                     make_similarity, make_yield)
+from repro.core.envcfg import env_gate
 from repro.core.passes import CompulsoryPartition
 
 from .common import banner, save_bench_json, table
@@ -78,12 +78,7 @@ def _time_plan(plan, *inputs) -> float:
 
 
 def _gate() -> float:
-    raw = os.environ.get("REPRO_PACKED_GATE", "auto").lower()
-    if raw in ("0", "off", "false"):
-        return 0.0
-    if raw == "auto":
-        return 4.0
-    return float(raw)
+    return env_gate("REPRO_PACKED_GATE", 4.0)
 
 
 def run():

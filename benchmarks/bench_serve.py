@@ -183,10 +183,11 @@ def run(devices: int = 8, rounds: int = 2) -> dict:
     # single-device run already uses), so a 2-core CI box tops out below
     # 2x no matter how well the sharded path runs — record that honestly
     # instead of failing on hardware the benchmark cannot control.
+    from repro.core.envcfg import env_gate
+
     host_cores = os.cpu_count() or 1
-    gate_env = os.environ.get("REPRO_SERVE_GATE", "auto")
-    gate = (2.0 if host_cores >= 4 else 1.4) if gate_env == "auto" \
-        else float(gate_env)
+    gate = env_gate("REPRO_SERVE_GATE",
+                    2.0 if host_cores >= 4 else 1.4)
 
     payload = {
         "workload": {"n_gallery": N_GALLERY, "dim": DIM, "k": K,

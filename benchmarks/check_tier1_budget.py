@@ -36,27 +36,20 @@ def main(argv=None) -> int:
                     help="measured tier-1 wall-clock seconds")
     args = ap.parse_args(argv)
 
-    env = os.environ.get("REPRO_TIER1_BUDGET", "").lower()
-    if env in ("0", "off", "false"):
-        print(f"tier-1 budget gate disabled; measured {args.wall:.0f}s")
-        return 0
+    from repro.core.envcfg import env_gate
 
     with open(BASELINE_PATH) as f:
         baseline = json.load(f)
     factor = float(baseline.get("factor", 1.5))
-    override = None
-    if env and env not in ("auto",):
-        try:
-            override = float(env)
-        except ValueError:
-            print(f"ignoring non-numeric REPRO_TIER1_BUDGET={env!r}; "
-                  f"using the recorded baseline")
-    if override is not None:
-        budget = override
+    default_budget = float(baseline["wall_s"]) * factor
+    budget = env_gate("REPRO_TIER1_BUDGET", default_budget)
+    if not budget:
+        print(f"tier-1 budget gate disabled; measured {args.wall:.0f}s")
+        return 0
+    if budget != default_budget:
         print(f"tier-1 wall clock: {args.wall:.0f}s "
               f"(REPRO_TIER1_BUDGET override -> budget {budget:.0f}s)")
     else:
-        budget = float(baseline["wall_s"]) * factor
         print(f"tier-1 wall clock: {args.wall:.0f}s "
               f"(baseline {baseline['wall_s']}s x {factor} -> "
               f"budget {budget:.0f}s)")

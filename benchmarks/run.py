@@ -17,8 +17,8 @@ import traceback
 from repro.core import plan_cache_stats
 
 from . import (bench_engine, bench_faults, bench_forest, bench_hdc,
-               bench_packed, bench_serve, fig7_validation, fig8_dse,
-               fig9_isocapacity, gpu_comparison, roofline_table,
+               bench_hier, bench_packed, bench_serve, fig7_validation,
+               fig8_dse, fig9_isocapacity, gpu_comparison, roofline_table,
                table1_density, table2_knn)
 from .common import banner, save_bench_json
 
@@ -49,6 +49,10 @@ SUITES = [
     # + resilient serving through transient outages; detailed record in
     # BENCH_faults.json (gate REPRO_FAULTS_GATE, auto = 0.9x clean)
     ("faults_smoke", bench_faults.run),
+    # hierarchical coarse->fine probing vs the flat oracle at a 131k-row
+    # packed gallery; detailed record in BENCH_hier.json (gate
+    # REPRO_HIER_GATE, auto = 3x at the tuned recall>=0.95 nprobe)
+    ("hier_smoke", bench_hier.run),
 ]
 
 

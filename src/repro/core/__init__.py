@@ -14,8 +14,10 @@ Public API::
 from .arch import (AccessMode, ArchSpec, CamType, Metric, OptimizationTarget,
                    PAPER_BASE_ARCH, SearchType, kazemi_arch)
 from .compiler import C4CAMCompiler, CompiledCamProgram, compile_fn, compile_module
-from .engine import (PendingSearch, RangePlan, RangeSpec, SearchPlan,
-                     SimilaritySpec, clear_plan_cache, get_plan,
+from .engine import (CompositePlan, HierarchicalPlan, HierarchicalSpec,
+                     PendingSearch, PlanBase, RangePlan, RangeSpec,
+                     SearchPlan, SimilaritySpec, clear_plan_cache,
+                     get_hierarchical_plan, get_plan,
                      merge_shard_candidates, plan_cache_stats)
 from .ir import Block, Builder, IRError, Module, Operation, Pass, PassManager, TensorType, Value, verify
 from .torch_dialect import TracedTensor, trace
@@ -24,9 +26,11 @@ __all__ = [
     "AccessMode", "ArchSpec", "CamType", "Metric", "OptimizationTarget",
     "PAPER_BASE_ARCH", "SearchType", "kazemi_arch",
     "C4CAMCompiler", "CompiledCamProgram", "compile_fn", "compile_module",
-    "PendingSearch", "RangePlan", "RangeSpec", "SearchPlan",
+    "CompositePlan", "HierarchicalPlan", "HierarchicalSpec",
+    "PendingSearch", "PlanBase", "RangePlan", "RangeSpec", "SearchPlan",
     "SimilaritySpec", "clear_plan_cache",
-    "get_plan", "merge_shard_candidates", "plan_cache_stats",
+    "get_hierarchical_plan", "get_plan",
+    "merge_shard_candidates", "plan_cache_stats",
     "Block", "Builder", "IRError", "Module", "Operation", "Pass",
     "PassManager", "TensorType", "Value", "verify",
     "TracedTensor", "trace",

@@ -56,7 +56,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .arch import ArchSpec, CamType, OptimizationTarget
-from .engine import SearchPlan, get_plan
+from .engine import PlanBase, get_plan
 from .executor import execute_module
 from .ir import Module, PassManager
 from .passes import (CamMap, CimToCam, CompulsoryPartition, FuseExecuteBlocks,
@@ -78,7 +78,7 @@ class CompiledCamProgram:
     plans: List[MappingPlan]
     matched_patterns: List[str]
     backend: str = "jnp"
-    engine_plan: Optional[SearchPlan] = None
+    engine_plan: Optional[PlanBase] = None
     shards: int = 1
 
     def __call__(self, *inputs):

@@ -1,0 +1,56 @@
+"""Search-plan execution engine: compiled, cached execution of ``cim`` IR.
+
+The functional executor (:mod:`repro.core.executor`) interprets the
+partitioned ``cim`` IR op-by-op — fine for pinning semantics, but DSE
+sweeps (Fig. 8, Table II) and serving workloads pay Python-loop and
+retrace costs at every call.  This package compiles a partitioned
+program **once** into a *plan* and caches it process-wide.
+
+The package follows the paper's layering (a hierarchy of abstractions,
+each transformation at the level where it fits best):
+
+* :mod:`.spec` — frozen plan specs (:class:`SimilaritySpec`,
+  :class:`RangeSpec`) and the structural IR analysis
+  (:func:`extract_plan_spec` / :func:`extract_range_spec` /
+  :func:`module_for_spec`).
+* :mod:`.base` — :class:`PlanBase`: the lifecycle every plan family
+  shares (micro-batched dispatch, pattern-prep memoisation, fault
+  hooks, the ``update_rows`` relay machinery).
+* :mod:`.executables` — the jitted backend triples (jnp reference-tiled
+  scan, sharded ``shard_map``, fused Pallas kernels, dense tiny-plan
+  fast path) and :func:`merge_shard_candidates`.
+* :mod:`.plans` — the leaf families :class:`SearchPlan` (top-k) and
+  :class:`RangePlan` (boolean match).
+* :mod:`.cache` — the process-wide plan cache behind :func:`get_plan` /
+  :func:`plan_cache_stats` / :func:`clear_plan_cache`.
+* :mod:`.composite` — the plan-graph layer: :class:`CompositePlan`
+  (plans built from other plans) and :class:`HierarchicalSpec`.
+* :mod:`.hier` — :class:`HierarchicalPlan`: IVF-style two-stage search
+  (coarse centroid ``SearchPlan`` -> fine probing of the selected
+  cluster tiles), built via :func:`get_hierarchical_plan`.
+
+Semantics, numerical contracts (bit-identical integer metrics, packed
+popcount path, sharded tournament merges) and the gallery-mutation
+story are documented on the submodules and in ``docs/engine.md``.
+"""
+
+from .base import (PendingSearch, PlanBase, _as_2d, _normalize_faults,
+                   _pick_batch, _scatter_rows, _scatter_rows_donated,
+                   _update_enabled)
+from .cache import (_MAX_PLANS, clear_plan_cache, get_plan, plan_cache_stats)
+from .composite import CompositePlan, HierarchicalSpec
+from .executables import merge_shard_candidates
+from .hier import HierarchicalPlan, get_hierarchical_plan
+from .plans import RangePlan, SearchPlan
+from .spec import (RangeSpec, SimilaritySpec, _bits, _check_binary_cells,
+                   _encode, _metric_values, _resolve_pack, extract_plan_spec,
+                   extract_range_spec, module_for_spec)
+
+__all__ = [
+    "SimilaritySpec", "RangeSpec", "HierarchicalSpec",
+    "PlanBase", "SearchPlan", "RangePlan", "CompositePlan",
+    "HierarchicalPlan", "PendingSearch",
+    "extract_plan_spec", "extract_range_spec",
+    "get_plan", "get_hierarchical_plan", "merge_shard_candidates",
+    "module_for_spec", "plan_cache_stats", "clear_plan_cache",
+]

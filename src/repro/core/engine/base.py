@@ -1,0 +1,464 @@
+"""``PlanBase``: the machinery shared by every plan family.
+
+A *plan* is a compiled, cached, reusable executable for one program
+shape.  Whatever the family — top-k search, boolean range match, or a
+composite built from other plans — the lifecycle is identical:
+
+``prepare`` (encode/pack/lay out the stored operands, memoised per
+source array) → ``dispatch`` (micro-batched async chunk execution) →
+``finalize`` (shard merge / ragged slicing / output shaping) →
+``update_rows`` (row-granular incremental re-layout).
+
+:class:`PlanBase` owns that lifecycle: the dataclass fields (spec,
+backend, batch, shards, packing, telemetry counters, the pattern-memo
+LRU and its locks), the dispatch skeleton, the fault hooks
+(``_normalize_faults`` + host-side corruption before the jitted
+prepare), and the ``update_rows`` relay machinery
+(``_seed_updated_memo``).  Leaf families (:class:`~.plans.SearchPlan`,
+:class:`~.plans.RangePlan`) and composites
+(:class:`~.composite.CompositePlan`) override only the points where
+their result *structure* differs: how a chunk result is recorded, how
+chunks finalize, and how stored operands are wired from the module
+arguments.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..envcfg import env_flag, env_int
+from .spec import _check_binary_cells
+
+__all__ = ["PlanBase", "PendingSearch"]
+
+
+def _pick_batch(m: int) -> int:
+    """Micro-batch size: next power of two, clamped to the chunk cap.
+
+    The clamp is applied *after* rounding up — a non-power-of-two cap
+    (say 1000) must still bound the batch, not let the round-up jump
+    over it to 1024.
+    """
+    cap = env_int("REPRO_ENGINE_MAX_CHUNK", 1024, min_value=1)
+    b = 8
+    while b < min(max(m, 1), cap):
+        b *= 2
+    return min(b, cap)
+
+
+def _update_enabled() -> bool:
+    """``REPRO_ENGINE_UPDATE`` kill switch for the incremental update
+    path: ``off``/``0`` makes ``update_rows`` still apply the mutation
+    but skip the memo rewrite — the next dispatch re-prepares in full
+    (the pre-update behaviour, kept reachable for triage)."""
+    return env_flag("REPRO_ENGINE_UPDATE", True)
+
+
+def _normalize_faults(faults):
+    """Validate/normalise a dispatch-time fault model.
+
+    The engine duck-types the model (``is_null`` /
+    ``corrupt_stored(srcs, spec)``, hashable) so ``repro.core`` never
+    imports ``repro.faults``.  Null models normalise to ``None`` —
+    that guarantees ``FaultModel(p_stuck=0)`` takes *exactly* the clean
+    code path (same memo key, same prepared layout, bit-identical
+    results).  The model is deliberately **not** part of the plan-cache
+    key: faults corrupt the stored sources host-side before the jitted
+    prepare, so the executables never retrace across fault epochs.
+    """
+    if faults is None:
+        return None
+    if not hasattr(faults, "is_null") or not hasattr(faults, "corrupt_stored"):
+        raise TypeError(
+            f"faults must be a repro.faults.FaultModel-like object, "
+            f"got {type(faults).__name__}")
+    return None if faults.is_null else faults
+
+
+#: source-gallery mutation for update_rows.  The donating variant
+#: reuses the old gallery's buffer (an in-place scatter — the 80 MB
+#: copy of a large float gallery is otherwise the dominant update
+#: cost); callers opt in only when nothing else references the array.
+_scatter_rows = jax.jit(lambda g, i, r: g.at[i].set(r))
+_scatter_rows_donated = jax.jit(lambda g, i, r: g.at[i].set(r),
+                                donate_argnums=0)
+
+
+def _as_2d(q: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    if q.ndim == 1:
+        return q[None, :], ()
+    if q.ndim == 2:
+        return q, (q.shape[0],)
+    lead = q.shape[:-1]
+    return q.reshape((-1, q.shape[-1])), lead
+
+
+def _size(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+@dataclass
+class PendingSearch:
+    """An async-dispatched search: chunk results not yet materialised.
+
+    ``chunks`` holds per-micro-batch entries — ``(values, indices,
+    valid_rows)`` for a search plan, ``(match, valid_rows)`` for a
+    range plan — whose arrays are jax values still computing on-device.
+    :meth:`PlanBase.finalize` turns a pending search into final host
+    results.
+    """
+
+    plan: "PlanBase"
+    m: int
+    lead: Tuple[int, ...]
+    chunks: list
+
+
+def _src_ident(x) -> Tuple:
+    """Memo identity of one stored-operand source array."""
+    return (id(x), tuple(x.shape), str(x.dtype))
+
+
+def _memo_insert(plan, srcs: Tuple[Any, ...], prepared,
+                 faults=None) -> None:
+    """Insert a prepared layout into the plan's pattern memo (LRU).
+
+    The entry keeps strong references to the sources so their ids
+    cannot be recycled while it lives — same contract as the miss path
+    of :func:`_memoised_prepare`.  ``faults`` joins the key: a faulted
+    layout must never shadow the clean one (or another model's).
+    """
+    with plan._pattern_lock:
+        plan._pattern_cache[
+            tuple(_src_ident(s) for s in srcs) + (faults,)] = \
+            (srcs, prepared)
+        slots = plan._pattern_cache_slots()
+        while len(plan._pattern_cache) > slots:
+            plan._pattern_cache.popitem(last=False)
+            plan.pattern_evictions += 1
+
+
+def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
+                      check: Callable[[], None], faults=None):
+    """Per-plan pattern-prep memoisation shared by every plan family.
+
+    ``srcs`` are the stored-operand sources the prepared layout derives
+    from — ``(gallery,)``, ``(gallery, care)`` or ``(lo, hi)``; all must
+    be immutable ``jax.Array`` values to be memoised (a numpy array can
+    be mutated in place under an unchanged id/shape/dtype).  Mutable
+    inputs re-prepare on every call and still count as telemetry misses
+    — a numpy-gallery workload reading hits=0/misses=0 would look fully
+    cached while re-packing the gallery on every search.  The cache
+    entry keeps strong references to the sources so their ids cannot be
+    recycled while it lives.  ``check`` runs only when actually
+    preparing (memo hits skip it).
+
+    ``faults`` (a normalised fault model or ``None``) is part of the
+    memo key — the model is frozen/hashable, so repeated dispatches
+    with the same model hit the same corrupted layout while the clean
+    entry (``None``) stays untouched.
+    """
+    if not all(isinstance(s, jax.Array) for s in srcs):
+        with plan._pattern_lock:
+            plan.pattern_misses += 1
+        check()
+        return run()
+    key = tuple(_src_ident(s) for s in srcs) + (faults,)
+    with plan._pattern_lock:
+        hit = plan._pattern_cache.get(key)
+        if hit is not None:
+            plan.pattern_hits += 1
+            plan._pattern_cache.move_to_end(key)
+            return hit[-1]
+    check()
+    prepared = run()
+    with plan._pattern_lock:
+        plan.pattern_misses += 1
+    _memo_insert(plan, srcs, prepared, faults)
+    return prepared
+
+
+@dataclass
+class PlanBase:
+    """Shared base of every compiled plan (search / range / composite).
+
+    Holds the tile-geometry spec, micro-batching, the pattern-prep memo,
+    plan-cache participation (frozen-spec key, telemetry counters), the
+    fault hooks and the ``update_rows`` relay machinery.  Subclasses
+    define the family-specific structure: :meth:`_stored_sources`
+    (which module arguments are stored operands), :meth:`_chunk_entry`
+    (chunk result shape) and :meth:`finalize`.
+    """
+
+    spec: Any
+    backend: str
+    batch: int
+    _prepare: Callable = field(repr=False)
+    _chunk_fn: Callable = field(repr=False)
+    shards: int = 1
+    #: bit-packed execution (uint32 lanes, XOR+popcount physical search)
+    packed: bool = False
+    #: dense one-tile executable (small single-column-tile programs):
+    #: dispatch may skip the micro-batch machinery entirely — the
+    #: executables are shape-polymorphic in the query count
+    tiny: bool = False
+    #: backend-specific incremental row-update closure (see update_rows)
+    _row_update: Optional[Callable] = field(default=None, repr=False)
+    executions: int = 0
+    chunks_run: int = 0
+    pattern_hits: int = 0
+    pattern_misses: int = 0
+    pattern_evictions: int = 0
+    #: update_rows telemetry: calls, total rows rewritten, and calls
+    #: that could not take the incremental path (memo miss / kill
+    #: switch / mutable sources) and fell back to full re-prepare
+    row_updates: int = 0
+    rows_updated: int = 0
+    row_update_fallbacks: int = 0
+    _pattern_cache: "OrderedDict[Tuple, Tuple[Any, ...]]" = \
+        field(default_factory=OrderedDict, repr=False)
+    # plans are shared process-wide (the plan cache hands the same object
+    # to every caller), so the memo needs its own lock
+    _pattern_lock: threading.Lock = field(default_factory=threading.Lock,
+                                          repr=False)
+    # executions / chunks_run are bumped from every serving worker thread
+    # driving the shared plan; unguarded += would drop counts
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False)
+
+    #: plan-family tag ("search" / "range" / "hierarchical"), for
+    #: telemetry and serving snapshots
+    family: str = field(default="search", repr=False)
+
+    @staticmethod
+    def _pattern_cache_slots() -> int:
+        """LRU bound on memoised prepared galleries (per plan).
+
+        Small on purpose: a prepared gallery is the dominant resident
+        cost of a plan (float galleries especially), and a serving
+        process typically cycles between a handful of live galleries.
+        ``REPRO_ENGINE_PATTERN_SLOTS`` tunes it; evictions are counted
+        and surfaced via :func:`plan_cache_stats`.
+        """
+        return env_int("REPRO_ENGINE_PATTERN_SLOTS", 4, min_value=1)
+
+    # -- family-specific wiring (leaf overrides) ---------------------------
+
+    def _stored_sources(self, inputs) -> Tuple[Any, ...]:
+        """The stored-operand sources among the module arguments."""
+        raise NotImplementedError
+
+    def _chunk_entry(self, out, valid: int):
+        """Record one micro-batch's executable output in ``chunks``."""
+        raise NotImplementedError
+
+    def finalize(self, pending: "PendingSearch"):
+        raise NotImplementedError
+
+    # -- prepare -----------------------------------------------------------
+
+    def _prepared_patterns(self, *srcs, faults=None):
+        """Encode + lay out the stored operands, memoised per input array.
+
+        Only *immutable* inputs (``jax.Array``) are memoised — a numpy
+        gallery can be mutated in place under an unchanged
+        id/shape/dtype, which would silently serve stale prepared
+        patterns.  Mutable inputs are re-prepared on every call (the
+        pre-engine behaviour); callers wanting the memo pass the
+        gallery as a jax array.  Multi-operand plans (ternary care
+        masks, interval lo/hi pairs) key on the full source tuple.
+
+        ``faults`` (already normalised) corrupts the stored sources
+        host-side *before* the jitted prepare — the executable itself
+        is fault-agnostic, so injecting faults never retraces.
+        """
+        def check():
+            # guarded before (not inside) the jitted prepare, and only
+            # when actually preparing — memo hits skip it: packing
+            # collapses non-binary alphabets silently, see the guard
+            if self.packed and self.spec.metric == "hamming":
+                _check_binary_cells(srcs[0], "patterns")
+
+        def run():
+            if faults is not None:
+                use = faults.corrupt_stored(
+                    tuple(np.asarray(s) for s in srcs), self.spec)
+                return self._prepare(*(jnp.asarray(u) for u in use))
+            return self._prepare(*(s if isinstance(s, jax.Array)
+                                   else jnp.asarray(s) for s in srcs))
+
+        return _memoised_prepare(self, tuple(srcs), run, check, faults)
+
+    # -- dispatch / execute ------------------------------------------------
+
+    def dispatch(self, *inputs, faults=None) -> "PendingSearch":
+        """Enqueue the plan's chunks without waiting for device results.
+
+        Returns a :class:`PendingSearch` whose chunk arrays are
+        async-dispatched jax values; pass it to :meth:`finalize` to
+        materialise the results.  The split lets a serving loop
+        dispatch the next micro-batch while the device still runs the
+        previous one.
+
+        Thread-safe: the serving layer drives one shared plan from many
+        worker threads.  The jitted executables are pure, the pattern
+        memo has its own lock, and the stats counters are guarded here.
+
+        ``faults`` injects a device-fault model (see ``repro.faults``):
+        the stored operands are corrupted host-side before the prepare,
+        the queries and executables stay clean.  A null model is
+        normalised away, so ``faults=FaultModel(p_stuck=0)`` is
+        bit-identical to ``faults=None``.
+        """
+        faults = _normalize_faults(faults)
+        with self._stats_lock:
+            self.executions += 1
+        spec = self.spec
+        q_src = inputs[spec.query_arg]
+        srcs = self._stored_sources(inputs)
+        q2, lead = _as_2d(jnp.asarray(q_src))
+        m = q2.shape[0]
+        # host-resident queries are validated for free (they are about to
+        # be transferred anyway; the serving layer always passes numpy
+        # rows).  Device-resident jax queries skip the per-dispatch check
+        # — np.asarray on them would block mid-dispatch and defeat the
+        # async dispatch/finalize pipelining; the memo-miss gallery guard
+        # still catches the realistic failure (one encoding pipeline
+        # feeding both operands a non-binary alphabet).
+        if self.packed and spec.metric == "hamming" and \
+                not isinstance(q_src, jax.Array):
+            _check_binary_cells(q_src, "queries")
+        pp = self._prepared_patterns(*srcs, faults=faults)
+
+        b = self.batch
+        chunks = []
+        if self.tiny and m <= b:
+            # tiny-plan fast path: the whole gallery is one dense tile
+            # and the query block fits one micro-batch, so the chunk
+            # loop, tail padding and result slicing are pure overhead
+            # next to the (small) search itself.  The dense executable
+            # is shape-polymorphic — it traces at the caller's m, which
+            # small-program workloads (forest inference, interactive
+            # probes) hold constant.
+            out = self._chunk_fn(q2, pp)
+            with self._stats_lock:
+                self.chunks_run += 1
+            return PendingSearch(plan=self, m=m, lead=lead,
+                                 chunks=[self._chunk_entry(out, m)])
+        for s in range(0, m, b):
+            chunk = q2[s:s + b]
+            valid = chunk.shape[0]
+            if valid < b:
+                chunk = jnp.pad(chunk, ((0, b - valid), (0, 0)))
+            out = self._chunk_fn(chunk, pp)
+            with self._stats_lock:
+                self.chunks_run += 1
+            chunks.append(self._chunk_entry(out, valid))
+        return PendingSearch(plan=self, m=m, lead=lead, chunks=chunks)
+
+    def execute(self, *inputs, faults=None):
+        """Run the plan; accepts exactly the compiled module's arguments.
+
+        Always returns jax arrays, regardless of shard count (the
+        sharded finalize merges on host; converting back keeps the
+        public output type shard-invariant).  Serving loops that want
+        the host arrays directly use dispatch/finalize themselves.
+        ``faults`` is forwarded to :meth:`dispatch`.
+        """
+        out = self.finalize(self.dispatch(*inputs, faults=faults))
+        if self.shards <= 1:
+            return out
+        if isinstance(out, tuple):
+            return tuple(jnp.asarray(o) for o in out)
+        return jnp.asarray(out)
+
+    # -- gallery mutation (update_rows relay machinery) --------------------
+
+    def _validate_update(self, idx: np.ndarray, *new_rows) -> None:
+        spec = self.spec
+        if idx.ndim != 1:
+            raise ValueError(f"indices must be 1-D, got shape {idx.shape}")
+        if idx.size == 0:
+            return
+        if idx.min() < 0 or idx.max() >= spec.n:
+            raise ValueError(
+                f"row indices out of range for an n={spec.n} gallery")
+        if np.unique(idx).size != idx.size:
+            # jax scatter with duplicate indices picks an unspecified
+            # winner; reject instead of silently choosing one
+            raise ValueError("duplicate row indices in update_rows")
+        for nr in new_rows:
+            if tuple(np.shape(nr)) != (idx.size, spec.dim):
+                raise ValueError(
+                    f"new rows shape {np.shape(nr)} != "
+                    f"({idx.size}, {spec.dim})")
+
+    def _seed_updated_memo(self, old_srcs: Tuple[Any, ...],
+                           new_srcs: Tuple[Any, ...], idx: np.ndarray,
+                           donate: bool = False) -> None:
+        """Derive the mutated sources' prepared layout from the old one.
+
+        Incremental only when the old layout is memoised (immutable
+        jax-array sources that have been prepared and not evicted) and
+        the update path is enabled; otherwise a counted fallback — the
+        next dispatch re-prepares the new sources in full, which is
+        always correct, just not incremental.
+
+        ``donate`` (the caller just invalidated the old gallery):
+        the stale memo entry is popped and its prepared leaves' buffers
+        are reused in place for the fresh-tile scatter — no full-leaf
+        copy per update.
+        """
+        with self._stats_lock:
+            self.row_updates += 1
+            self.rows_updated += int(idx.size)
+        if self._row_update is None or not _update_enabled() or \
+                not all(isinstance(s, jax.Array) for s in old_srcs):
+            with self._stats_lock:
+                self.row_update_fallbacks += 1
+            return
+        # only the clean (faults=None) entry is rewritten incrementally;
+        # faulted layouts re-prepare in full on the next faulted
+        # dispatch — fault masks are position-keyed, so a row moving
+        # through update_rows must re-draw its cell faults anyway
+        key = tuple(_src_ident(s) for s in old_srcs) + (None,)
+        with self._pattern_lock:
+            if donate:       # the old layout must not outlive its buffers
+                hit = self._pattern_cache.pop(key, None)
+            else:
+                hit = self._pattern_cache.get(key)
+        if hit is None:
+            with self._stats_lock:
+                self.row_update_fallbacks += 1
+            return
+        prepared = self._row_update(hit[-1], new_srcs, idx, donate)
+        _memo_insert(self, new_srcs, prepared)
+
+    def _mutate_stored(self, olds: Tuple[Any, ...], news: Tuple[Any, ...],
+                       idx: np.ndarray, donate: bool) -> Tuple[Any, ...]:
+        """Scatter ``news`` row blocks into the leading stored operands
+        and seed the mutated sources' memo entry.  Operands beyond
+        ``len(news)`` (a ternary plan's immutable care mask) pass
+        through unchanged but stay part of the memo key."""
+        gj = tuple(o if isinstance(o, jax.Array) else jnp.asarray(o)
+                   for o in olds)
+        if idx.size == 0:
+            return gj
+        if self.packed and self.spec.metric == "hamming":
+            _check_binary_cells(news[0], "updated rows")
+        j = jnp.asarray(idx)
+        scatter = _scatter_rows_donated if donate else _scatter_rows
+        upd = tuple(scatter(g, j, jnp.asarray(nr).astype(g.dtype))
+                    for g, nr in zip(gj, news)) + gj[len(news):]
+        self._seed_updated_memo(gj, upd, idx, donate)
+        return upd

@@ -1,0 +1,244 @@
+"""The process-wide plan cache and its public entry point, ``get_plan``.
+
+One cache for every plan family: keys are ``(spec, backend, batch,
+shards, packed)`` where the spec is a frozen dataclass —
+:class:`~.spec.SimilaritySpec`, :class:`~.spec.RangeSpec` or
+:class:`~.composite.HierarchicalSpec` — so keys from different families
+can never collide.  Recompiling the same program, or a different
+program with identical structure (exactly what a DSE sweep over
+optimization targets produces), returns the *same* plan object and
+reuses its jitted executables instead of re-tracing.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from ..envcfg import env_int
+from ..ir import Module
+from .base import PlanBase, _pick_batch
+from .executables import (_build_pallas_executable,
+                          _build_range_pallas_executable,
+                          _build_range_scan_executable,
+                          _build_range_sharded_executable,
+                          _build_scan_executable, _build_sharded_executable,
+                          _build_tiny_executable,
+                          _build_tiny_range_executable)
+from .plans import RangePlan, SearchPlan
+from .spec import (RangeSpec, _resolve_pack, extract_plan_spec,
+                   extract_range_spec)
+
+_PLAN_CACHE: "OrderedDict[Tuple, PlanBase]" = OrderedDict()
+#: LRU bound — a DSE sweep over many distinct geometries must not pin
+#: every plan (and its memoised galleries) forever
+_MAX_PLANS = 64
+_CACHE_LOCK = threading.Lock()
+#: pattern_* entries retain the pattern-memo counters of plans evicted
+#: from the LRU, keeping plan_cache_stats() monotonic across evictions
+_STATS = {"hits": 0, "misses": 0,
+          "pattern_hits": 0, "pattern_misses": 0, "pattern_evictions": 0}
+
+
+def _retire_plan(plan: PlanBase) -> None:
+    """Fold an evicted plan's pattern counters into the retained stats.
+
+    Caller holds ``_CACHE_LOCK``; lock order ``_CACHE_LOCK`` ->
+    ``_pattern_lock`` is safe (no path acquires them in reverse).
+    """
+    with plan._pattern_lock:
+        _STATS["pattern_hits"] += plan.pattern_hits
+        _STATS["pattern_misses"] += plan.pattern_misses
+        _STATS["pattern_evictions"] += plan.pattern_evictions
+        plan.pattern_hits = plan.pattern_misses = plan.pattern_evictions = 0
+
+
+def _normalize_shards(shards: Optional[int]) -> int:
+    """Effective shard count: ``None``/<=1 means unsharded; requests are
+    clamped to the host's device count (a plan asking for 8-way sharding
+    on a 1-device host degrades to the single-device executable)."""
+    if shards is None or shards <= 1:
+        return 1
+    return max(1, min(int(shards), jax.device_count()))
+
+
+def _cache_lookup(key: Tuple) -> Optional[PlanBase]:
+    with _CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _STATS["hits"] += 1
+            _PLAN_CACHE.move_to_end(key)
+            return plan
+        _STATS["misses"] += 1
+    return None
+
+
+def _cache_insert(key: Tuple, plan: PlanBase) -> PlanBase:
+    with _CACHE_LOCK:
+        # lost-race double insert is harmless but keep one canonical plan
+        plan = _PLAN_CACHE.setdefault(key, plan)
+        _PLAN_CACHE.move_to_end(key)
+        while len(_PLAN_CACHE) > _MAX_PLANS:
+            _, evicted = _PLAN_CACHE.popitem(last=False)
+            _retire_plan(evicted)
+    return plan
+
+
+def _lookup_or_insert(key: Tuple, build: Callable[[], PlanBase]) -> PlanBase:
+    """Shared cache participation for plan factories outside this module
+    (the composite/hierarchical family): counted lookup, build on miss,
+    canonical insert with the same LRU/race semantics as ``get_plan``."""
+    plan = _cache_lookup(key)
+    if plan is not None:
+        return plan
+    return _cache_insert(key, build())
+
+
+def _tiny_plan(spec, backend: str, shards: int) -> bool:
+    """Small-program fast path eligibility (ROADMAP item 5).
+
+    A plan is *tiny* when its whole gallery collapses into one dense
+    tile with identical semantics: a single column tile (full-width
+    distances — dense and tiled arithmetic coincide), the jnp backend,
+    no sharding, and a physical cell count small enough that per-tile
+    ``lax.scan`` stepping would dominate the arithmetic.  The threshold
+    is ``REPRO_ENGINE_TINY_CELLS`` (physical rows x logical dims;
+    ``0`` disables the fast path).
+    """
+    if backend != "jnp" or shards != 1 or spec.grid_cols != 1:
+        return False
+    cells = spec.grid_rows * spec.tile_rows * spec.dim
+    return cells <= env_int("REPRO_ENGINE_TINY_CELLS", 32768, min_value=0)
+
+
+def get_plan(module: Module, *, backend: str = "jnp",
+             batch: Optional[int] = None,
+             shards: Optional[int] = None,
+             pack: Optional[bool] = None) -> Optional[PlanBase]:
+    """Plan for a partitioned module, from the cache when possible.
+
+    ``shards > 1`` selects the multi-device executable: gallery rows
+    sharded over a ``("data",)`` mesh, cross-device ``merge_topk``
+    tournament (see ``_build_sharded_executable``).  The effective shard
+    count is part of the plan-cache key.
+
+    ``pack`` selects bit-packed execution (uint32 lanes, XOR+popcount):
+    ``None`` auto-packs binary/bipolar metrics (hamming / dot / cos) —
+    bit-identical results at 1/32nd the gallery footprint — ``False``
+    forces the float path, ``True`` on an analog metric raises.  The
+    effective packing joins the plan-cache key: a packed and an unpacked
+    plan for the same geometry are different executables and must never
+    collide (their prepared operands have different dtypes).
+
+    Returns ``None`` when the module is not a pure similarity program
+    (callers then fall back to the IR interpreter).
+    """
+    try:
+        spec = extract_plan_spec(module)
+        if spec is None:
+            spec = extract_range_spec(module)
+    except Exception:       # malformed/exotic IR: the interpreter handles it
+        spec = None
+    if spec is None:
+        return None
+    if backend not in ("jnp", "pallas"):
+        return None
+    if shards is not None and shards > 1 and backend != "jnp":
+        # checked on the *requested* count, before device clamping, so
+        # the refusal does not depend on how many devices this host has
+        raise ValueError(
+            f"sharded plans require the 'jnp' backend, got {backend!r}")
+    is_range = isinstance(spec, RangeSpec)
+    packed = _resolve_pack(spec, pack)
+    if is_range and backend == "pallas" and packed:
+        # the fused range kernels take float cells; the packed popcount
+        # range path lives in the jnp executable
+        if pack:
+            raise ValueError(
+                "packed range search requires the 'jnp' backend")
+        packed = False
+    if getattr(spec, "care_arg", None) is not None and not packed \
+            and backend == "pallas":
+        raise ValueError(
+            "ternary (care-masked) search on the pallas backend requires "
+            "packed execution; pass pack=True (and unset "
+            "REPRO_ENGINE_PACK=off if the kill switch disabled auto-pack)")
+    s = _normalize_shards(shards)
+    b = batch or _pick_batch(spec.m)
+    key = (spec, backend, b, s, packed)
+    plan = _cache_lookup(key)
+    if plan is not None:
+        return plan
+    tiny = _tiny_plan(spec, backend, s)
+    if is_range:
+        if s > 1:
+            prepare, chunk_fn, row_update = _build_range_sharded_executable(
+                spec, b, s, packed=packed)
+        elif backend == "pallas":
+            prepare, chunk_fn, row_update = _build_range_pallas_executable(
+                spec, b)
+        elif tiny:
+            prepare, chunk_fn, row_update = _build_tiny_range_executable(
+                spec, b, packed=packed)
+        else:
+            prepare, chunk_fn, row_update = _build_range_scan_executable(
+                spec, b, packed=packed)
+        plan = RangePlan(spec=spec, backend=backend, batch=b, shards=s,
+                         packed=packed, tiny=tiny, _prepare=prepare,
+                         _chunk_fn=chunk_fn, _row_update=row_update)
+    else:
+        if s > 1:
+            prepare, chunk_fn, row_update = _build_sharded_executable(
+                spec, b, s, packed=packed)
+        elif backend == "pallas":
+            prepare, chunk_fn, row_update = _build_pallas_executable(
+                spec, b, packed=packed)
+        elif tiny:
+            prepare, chunk_fn, row_update = _build_tiny_executable(
+                spec, b, packed=packed)
+        else:
+            prepare, chunk_fn, row_update = _build_scan_executable(
+                spec, b, packed=packed)
+        plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
+                          packed=packed, tiny=tiny, _prepare=prepare,
+                          _chunk_fn=chunk_fn, _row_update=row_update)
+    return _cache_insert(key, plan)
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    """Process-wide cache counters.
+
+    Plan cache (hits / misses / live plans) plus the pattern-prep memo
+    counters (each plan's memoised prepared-gallery LRU — see
+    ``PlanBase._prepared_patterns``): ``pattern_hits`` /
+    ``pattern_misses`` / ``pattern_evictions``, summed over the live
+    plans plus the retained totals of plans the 64-slot LRU evicted —
+    monotonic until :func:`clear_plan_cache` resets everything.
+    """
+    # the whole aggregation holds _CACHE_LOCK so a concurrent eviction
+    # cannot move a plan's counters into _STATS between the snapshot and
+    # the live sum (which would transiently undercount); the established
+    # lock order _CACHE_LOCK -> _pattern_lock makes the nesting safe
+    with _CACHE_LOCK:
+        out = {"hits": _STATS["hits"], "misses": _STATS["misses"],
+               "plans": len(_PLAN_CACHE)}
+        ph = _STATS["pattern_hits"]
+        pm = _STATS["pattern_misses"]
+        pe = _STATS["pattern_evictions"]
+        for p in _PLAN_CACHE.values():
+            with p._pattern_lock:
+                ph += p.pattern_hits
+                pm += p.pattern_misses
+                pe += p.pattern_evictions
+    out.update(pattern_hits=ph, pattern_misses=pm, pattern_evictions=pe)
+    return out
+
+
+def clear_plan_cache() -> None:
+    with _CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        for k in _STATS:
+            _STATS[k] = 0

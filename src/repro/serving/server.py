@@ -102,7 +102,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.compiler import CompiledCamProgram
-from ..core.engine import RangePlan, SearchPlan
+from ..core.engine import PlanBase, RangePlan
 from ..core.envcfg import env_float, env_int
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
@@ -395,11 +395,11 @@ class CamSearchServer:
                 raise ValueError(
                     "program has no engine plan (not a pure similarity "
                     "program); the search server needs a SearchPlan")
-        elif isinstance(program, SearchPlan):
+        elif isinstance(program, PlanBase):
             plan = program
         else:
-            raise TypeError(f"expected CompiledCamProgram or SearchPlan, "
-                            f"got {type(program).__name__}")
+            raise TypeError(f"expected CompiledCamProgram or an engine "
+                            f"plan, got {type(program).__name__}")
         import jax.numpy as jnp
         self.plan = plan
         self.is_range = isinstance(plan, RangePlan)
@@ -731,7 +731,7 @@ class CamSearchServer:
         single-device (for sharded primaries) → jnp (for pallas) → jnp
         unpacked (for packed) → IR interpreter.  Every level is an
         ordinary plan-cache citizen compiled for the same spec/batch."""
-        from ..core.engine import get_plan, module_for_spec
+        from ..core.engine import CompositePlan, get_plan, module_for_spec
         spec = self.plan.spec
         mod = module_for_spec(spec)
         chain: List[Tuple[str, Any]] = []
@@ -745,6 +745,11 @@ class CamSearchServer:
                     all(p is not e for _, e in chain):
                 chain.append((name, p))
 
+        if isinstance(self.plan, CompositePlan):
+            # composite primaries degrade to the *exact* flat search
+            # first — module_for_spec resolved the flat equivalent above
+            add("jnp-flat", backend="jnp", pack=self.plan.packed,
+                shards=self.plan.shards)
         if self.plan.shards > 1:
             add("jnp-single", backend="jnp", pack=self.plan.packed)
         if self.plan.backend == "pallas":
@@ -979,7 +984,7 @@ class CamSearchServer:
         out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
                        "backend": self.plan.backend,
                        "packed": self.plan.packed,
-                       "family": "range" if self.is_range else "search",
+                       "family": self.plan.family,
                        "ternary": getattr(spec, "care_arg", None) is not None,
                        "metric": spec.metric,
                        "executions": self.plan.executions,

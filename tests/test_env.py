@@ -156,3 +156,59 @@ class TestEngineKnobsAreStrict:
         monkeypatch.setenv("REPRO_SERVE_DEADLINE_MS", "soon")
         with pytest.raises(ValueError, match="REPRO_SERVE_DEADLINE_MS"):
             CamSearchServer(plan, p)
+
+    def test_tiny_cells_garbage_raises(self, monkeypatch):
+        from repro.core.engine.cache import _tiny_plan
+        from test_plan_cache_keys import _sim_specs
+        monkeypatch.setenv("REPRO_ENGINE_TINY_CELLS", "lots")
+        with pytest.raises(ValueError, match="REPRO_ENGINE_TINY_CELLS"):
+            _tiny_plan(_sim_specs()[0], "jnp", 1)
+
+    def test_hier_nprobe_strict_and_applied(self, monkeypatch):
+        from repro.core import ArchSpec, clear_plan_cache
+        from repro.core.engine import get_hierarchical_plan
+        from test_engine import _sim_module
+
+        mod = _sim_module("hamming", 2, False, 4, 64, 16,
+                          ArchSpec(rows=8, cols=16))
+        monkeypatch.setenv("REPRO_HIER_NPROBE", "some")
+        with pytest.raises(ValueError, match="REPRO_HIER_NPROBE"):
+            get_hierarchical_plan(mod, clusters=8)
+        monkeypatch.setenv("REPRO_HIER_NPROBE", "-1")
+        with pytest.raises(ValueError, match="REPRO_HIER_NPROBE"):
+            get_hierarchical_plan(mod, clusters=8)
+        clear_plan_cache()
+        monkeypatch.setenv("REPRO_HIER_NPROBE", "3")
+        plan = get_hierarchical_plan(mod, clusters=8)
+        assert plan.spec.nprobe == 3
+        # an explicit nprobe argument beats the environment default
+        plan = get_hierarchical_plan(mod, clusters=8, nprobe=5)
+        assert plan.spec.nprobe == 5
+
+
+class TestBenchGatesUseEnvcfg:
+    """Every benchmark acceptance gate parses through ``env_gate`` —
+    ``auto``/``off``/float semantics with strict errors, no ad-hoc
+    ``os.environ`` parsing left behind."""
+
+    @pytest.mark.parametrize("var,loader,auto", [
+        ("REPRO_FOREST_GATE", "benchmarks.bench_forest", 2.0),
+        ("REPRO_PACKED_GATE", "benchmarks.bench_packed", 4.0),
+        ("REPRO_HDC_GATE", "benchmarks.bench_hdc", 3.0),
+    ])
+    def test_gate_semantics(self, monkeypatch, var, loader, auto):
+        import importlib
+        import pathlib
+        import sys
+        root = str(pathlib.Path(__file__).resolve().parent.parent)
+        monkeypatch.syspath_prepend(root)
+        bench = importlib.import_module(loader)
+        monkeypatch.delenv(var, raising=False)
+        assert bench._gate() == auto
+        monkeypatch.setenv(var, "off")
+        assert bench._gate() == 0.0
+        monkeypatch.setenv(var, "1.25")
+        assert bench._gate() == 1.25
+        monkeypatch.setenv(var, "fast")
+        with pytest.raises(ValueError, match=var):
+            bench._gate()

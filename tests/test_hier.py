@@ -1,0 +1,362 @@
+"""Hierarchical two-stage plans: the IVF-style coarse→fine composite.
+
+Pins the contracts the plan-graph tentpole introduced:
+
+* **bit-identity** — at ``nprobe == clusters`` every tile is probed and
+  the composite must reproduce the flat plan's results bit-for-bit
+  (indices everywhere; values exactly for the integer metrics, to float
+  tolerance for the analog ones), packed and unpacked, both polarities.
+* **recall** — smaller ``nprobe`` trades recall monotonically (the
+  probed cluster sets are nested per query).
+* **update_rows** — row mutation re-assigns touched rows to their
+  nearest *stored* centroid incrementally; results are placement
+  invariant, so any update schedule reaching the same gallery content
+  gives identical results at any fixed ``nprobe``, and a cluster
+  overflow (full re-layout, same centroids) changes nothing either.
+* **serving** — a hierarchical plan is a first-class primary for
+  ``CamSearchServer``: searches, live ``update_gallery``, a flat-exact
+  fallback level, and the ``hierarchical`` family tag in telemetry.
+* **sharding** — the fine probing stage shards across devices with a
+  composite-key host merge; parity checks run in a forced-8-device
+  child process (this file doubles as that child:
+  ``python tests/test_hier.py --child``).
+
+Galleries here keep ``n >= k``: with ``n < k`` the flat tournament and
+the probing stage fill the dead slots with different (equally losing)
+filler indices — that caveat is documented on ``repro.core.engine.hier``
+and exercised by the sharded suite's ``n < k`` axis instead.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+DEVICES = 8
+
+
+def _assert_same(got, want, metric, msg=""):
+    gv, gi = (np.asarray(x) for x in got)
+    wv, wi = (np.asarray(x) for x in want)
+    np.testing.assert_array_equal(gi, wi, err_msg=f"indices {msg}")
+    if metric in ("hamming", "dot"):
+        np.testing.assert_array_equal(gv, wv, err_msg=f"values {msg}")
+    else:
+        np.testing.assert_allclose(gv, wv, atol=1e-4,
+                                   err_msg=f"values {msg}")
+
+
+# ---------------------------------------------------------------------------
+# child: sharded parity under 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+def _child_main() -> int:
+    import jax
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.core import ArchSpec, get_plan
+    from repro.core.engine import get_hierarchical_plan
+
+    assert jax.device_count() == DEVICES, jax.device_count()
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_engine import _data, _sim_module
+
+    rng = np.random.default_rng(11)
+    arch = ArchSpec(rows=16, cols=32)
+
+    # gallery sizes that pad unevenly across 8 shards; every metric
+    for metric, largest in (("hamming", False), ("dot", True),
+                            ("cos", False), ("eucl", False)):
+        for n in (137, 192, 61):
+            m, dim, k = 7, 64, 5
+            mod = _sim_module(metric, k, largest, m, n, dim, arch)
+            q, p = _data(rng, metric, m, n, dim)
+            flat = get_plan(mod, shards=1)
+            fr = flat.execute(q, p)
+
+            # sharded nprobe=all == flat (single-device)
+            hs = get_hierarchical_plan(mod, clusters=6, nprobe=6,
+                                       shards=DEVICES)
+            assert hs.shards == DEVICES
+            hv, hi = (np.asarray(x) for x in hs.execute(q, p))
+            np.testing.assert_array_equal(
+                hi, np.asarray(fr[1]),
+                err_msg=f"sharded hier != flat: {metric} n={n}")
+            if metric in ("hamming", "dot"):
+                np.testing.assert_array_equal(hv, np.asarray(fr[0]))
+            else:
+                np.testing.assert_allclose(hv, np.asarray(fr[0]),
+                                           atol=1e-4)
+
+            # sharded partial nprobe == unsharded partial nprobe
+            h1 = get_hierarchical_plan(mod, clusters=6, nprobe=2, shards=1)
+            h8 = get_hierarchical_plan(mod, clusters=6, nprobe=2,
+                                       shards=DEVICES)
+            r1 = tuple(np.asarray(x) for x in h1.execute(q, p))
+            r8 = tuple(np.asarray(x) for x in h8.execute(q, p))
+            np.testing.assert_array_equal(
+                r8[1], r1[1], err_msg=f"shard split changed results: "
+                                      f"{metric} n={n}")
+
+    # sharded update_rows keeps nprobe=all parity with the flat plan
+    metric, m, n, dim, k = "hamming", 6, 160, 64, 4
+    mod = _sim_module(metric, k, False, m, n, dim, arch)
+    q, p = _data(rng, metric, m, n, dim)
+    import jax.numpy as jnp
+
+    hs = get_hierarchical_plan(mod, clusters=5, nprobe=5, shards=DEVICES)
+    flat = get_plan(mod, shards=1)
+    g = jnp.asarray(p)
+    hs.execute(q, g)
+    idx = np.asarray([0, 3, 64, 121])
+    new = (rng.random((4, dim)) > 0.5).astype(np.float32)
+    p2 = hs.update_rows(g, idx, new)
+    fb = hs.row_update_fallbacks
+    fv, fi = flat.execute(q, np.asarray(p2))
+    hv, hi = hs.execute(q, p2)
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(fi))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(fv))
+    assert hs.row_update_fallbacks == fb, "sharded update fell back"
+
+    print("SHARDED-HIER-OK")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# pytest entry points
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def arch():
+    from repro.core import ArchSpec
+    return ArchSpec(rows=16, cols=32)
+
+
+def test_nprobe_all_bit_identical_to_flat(arch, rng):
+    """Every metric x polarity x packing: probing every cluster must be
+    indistinguishable from the flat plan."""
+    from repro.core import clear_plan_cache, get_plan
+    from repro.core.engine import get_hierarchical_plan
+    from test_engine import _data, _sim_module
+
+    clear_plan_cache()
+    for metric, largest in (("hamming", False), ("dot", True),
+                            ("dot", False), ("cos", True), ("eucl", False)):
+        for pack in (None, False):
+            m, n, dim, k = 7, 96, 64, 6
+            mod = _sim_module(metric, k, largest, m, n, dim, arch)
+            q, p = _data(rng, metric, m, n, dim)
+            flat = get_plan(mod, pack=pack)
+            hier = get_hierarchical_plan(mod, clusters=6, nprobe=6,
+                                         pack=pack)
+            assert hier.family == "hierarchical"
+            assert hier.spec.nprobe == hier.spec.clusters == 6
+            _assert_same(hier.execute(q, p), flat.execute(q, p), metric,
+                         f"{metric} largest={largest} pack={pack}")
+
+
+def test_recall_monotone_and_partial_probe_cost(arch, rng):
+    """Recall grows monotonically in nprobe and hits 1.0 at nprobe=all;
+    the composite accounts the work to itself, not the coarse stage."""
+    from repro.core import clear_plan_cache, get_plan
+    from repro.core.engine import get_hierarchical_plan
+    from test_engine import _data, _sim_module
+
+    clear_plan_cache()
+    m, n, dim, k = 16, 256, 32, 8
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    q, p = _data(rng, "hamming", m, n, dim)
+    flat = get_plan(mod)
+    _, fi = (np.asarray(x) for x in flat.execute(q, p))
+    flat_sets = [set(map(int, row)) for row in fi]
+    recalls = []
+    for nprobe in (1, 2, 4, 8):
+        hp = get_hierarchical_plan(mod, clusters=8, nprobe=nprobe)
+        _, hi = hp.execute(q, p)
+        recalls.append(np.mean([
+            len(set(map(int, row)) & fs) / k
+            for row, fs in zip(np.asarray(hi), flat_sets)]))
+    assert all(a <= b + 1e-9 for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] == 1.0, recalls
+
+    stats = hp.graph_stats()
+    assert stats["family"] == "hierarchical"
+    assert stats["executions"] >= 1
+    # the coarse stage ran fused inside the composite dispatch: its own
+    # counters must not have been bumped
+    assert stats["stage0:search"]["executions"] == 0
+
+
+def test_factory_contracts(arch, rng):
+    """get_hierarchical_plan mirrors get_plan's front door: None for
+    non-similarity programs, errors for unsupported axes, clamped
+    clustering parameters."""
+    from repro.core import ArchSpec, clear_plan_cache, compile_fn
+    from repro.core.engine import get_hierarchical_plan
+    from test_engine import _sim_module
+    from test_range import _range_module
+
+    clear_plan_cache()
+    mod = _sim_module("hamming", 3, False, 4, 64, 32, arch)
+    # non-similarity programs: None, like get_plan
+    ew = compile_fn(lambda a, b: a.add(b), [(8, 8), (8, 8)],
+                    ArchSpec(rows=16, cols=16))
+    assert get_hierarchical_plan(ew.stages["cim_partitioned"]) is None
+    assert get_hierarchical_plan(_range_module(4, 16, 32, arch)) is None
+    # unsupported axes raise instead of silently degrading
+    with pytest.raises(ValueError):
+        get_hierarchical_plan(mod, backend="pallas")
+    # clustering parameters clamp into valid range
+    p = get_hierarchical_plan(mod, clusters=1000, nprobe=4000)
+    assert p.spec.clusters <= 64 and p.spec.nprobe <= p.spec.clusters
+    # defaults: ~sqrt(n) clusters, nprobe >= 1
+    d = get_hierarchical_plan(mod)
+    assert 1 <= d.spec.nprobe <= d.spec.clusters <= 64
+
+
+def test_update_rows_incremental_and_overflow(arch, rng):
+    """Incremental reassignment keeps nprobe=all parity with the flat
+    plan through same-cluster rewrites, cross-cluster moves, and a
+    cluster overflow that forces the full re-layout (same centroids)."""
+    from repro.core import clear_plan_cache, get_plan
+    from repro.core.engine import get_hierarchical_plan
+    from test_engine import _data, _sim_module
+
+    import jax.numpy as jnp
+
+    clear_plan_cache()
+    m, n, dim, k = 8, 192, 32, 5
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    q, p = _data(rng, "hamming", m, n, dim)
+    flat = get_plan(mod)
+    hier = get_hierarchical_plan(mod, clusters=6, nprobe=6)
+
+    # the memo is keyed by jax.Array identity: keep the gallery chain
+    # on-device (a numpy gallery re-prepares every call by contract)
+    g = jnp.asarray(p)
+    hier.execute(q, g)
+
+    # a stream of scattered updates: moved and unmoved rows mixed
+    for step in range(3):
+        idx = np.sort(rng.choice(n, size=9, replace=False))
+        new = (rng.random((9, dim)) > 0.5).astype(np.float32)
+        g = hier.update_rows(g, idx, new)
+        _assert_same(hier.execute(q, g), flat.execute(q, np.asarray(g)),
+                     "hamming", f"update step {step}")
+    assert hier.row_update_fallbacks == 0, \
+        "scattered updates must stay on the incremental path"
+
+    # overflow: clone one row's content everywhere -> every row lands in
+    # one cluster, which cannot fit its tile group -> full re-layout
+    # with the *same* centroids, still flat-identical
+    idx = np.arange(128)
+    new = np.tile(np.asarray(g)[n - 1], (128, 1))
+    g2 = hier.update_rows(g, idx, new)
+    _assert_same(hier.execute(q, g2), flat.execute(q, np.asarray(g2)),
+                 "hamming", "overflow re-layout")
+
+
+def test_update_schedule_invariance(arch, rng):
+    """Placement invariance: two update schedules reaching the same
+    gallery content give bit-identical results at a *partial* nprobe —
+    incremental row moves are equivalent to a rebuild with the same
+    centroids, wherever the rows physically landed."""
+    from repro.core import clear_plan_cache, get_plan
+    from repro.core.engine import get_hierarchical_plan
+    from test_engine import _data, _sim_module
+
+    clear_plan_cache()
+    m, n, dim, k = 8, 160, 32, 4
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    q, p = _data(rng, "hamming", m, n, dim)
+
+    import jax.numpy as jnp
+
+    idx_all = np.sort(rng.choice(n, size=24, replace=False))
+    new_all = (rng.random((24, dim)) > 0.5).astype(np.float32)
+
+    # schedule A: one bulk update
+    a = get_hierarchical_plan(mod, clusters=6, nprobe=2)
+    g0a = jnp.asarray(p)
+    a.execute(q, g0a)
+    ga = a.update_rows(g0a, idx_all, new_all)
+    ra = tuple(np.asarray(x) for x in a.execute(q, ga))
+
+    # schedule B: same rows in three interleaved slices (different
+    # vacate/fill order -> different physical slots)
+    clear_plan_cache()
+    b = get_hierarchical_plan(mod, clusters=6, nprobe=2)
+    gb = jnp.asarray(p)
+    b.execute(q, gb)
+    for sl in (slice(0, 24, 3), slice(1, 24, 3), slice(2, 24, 3)):
+        gb = b.update_rows(gb, idx_all[sl], new_all[sl])
+    assert a.row_update_fallbacks == 0 and b.row_update_fallbacks == 0
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(ga))
+    rb = tuple(np.asarray(x) for x in b.execute(q, gb))
+    np.testing.assert_array_equal(rb[1], ra[1])
+    np.testing.assert_array_equal(rb[0], ra[0])
+
+
+def test_served_hierarchical_plan(arch, rng):
+    """A hierarchical plan as the serving primary: parity with the
+    served flat plan, live update_gallery on the incremental path, the
+    flat-exact fallback level, and family-tagged telemetry."""
+    from repro.core import clear_plan_cache, get_plan
+    from repro.core.engine import get_hierarchical_plan
+    from repro.serving import CamSearchServer
+    from test_engine import _data, _sim_module
+
+    clear_plan_cache()
+    m, n, dim, k = 8, 192, 32, 5
+    mod = _sim_module("hamming", k, False, m, n, dim, arch)
+    q, p = _data(rng, "hamming", m, n, dim)
+    flat = get_plan(mod)
+    hier = get_hierarchical_plan(mod, clusters=6, nprobe=6)
+
+    srv = CamSearchServer(hier, p, max_wait_ms=0.5).start()
+    try:
+        _assert_same(srv.search(q), flat.execute(q, p), "hamming",
+                     "served")
+        snap = srv.snapshot()
+        assert snap["plan"]["family"] == "hierarchical"
+        assert "jnp-flat" in [name for name, _ in srv._levels()]
+
+        idx = np.arange(0, 48)
+        new = (rng.random((48, dim)) > 0.5).astype(np.float32)
+        fb = hier.row_update_fallbacks
+        srv.update_gallery(idx, new)
+        assert hier.row_update_fallbacks == fb
+        g2 = p.copy()
+        g2[idx] = new
+        _assert_same(srv.search(q), flat.execute(q, g2), "hamming",
+                     "served after update_gallery")
+        assert srv.snapshot()["gallery_updates"] == 1
+    finally:
+        srv.stop()
+
+
+def test_hier_sharded_multi_device():
+    """Sharded probing parity matrix under 8 forced host devices."""
+    from repro.launch.mesh import forced_host_devices_env
+
+    env = forced_host_devices_env(DEVICES)
+    env.pop("REPRO_ENGINE_MAX_CHUNK", None)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "SHARDED-HIER-OK" in out.stdout, (
+        f"sharded hier child failed (rc={out.returncode}):\n"
+        f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={DEVICES}")
+        raise SystemExit(_child_main())
+    raise SystemExit(pytest.main([__file__, "-v"]))

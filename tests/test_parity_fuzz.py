@@ -8,6 +8,12 @@ engine plan, the IR interpreter, and the tiled reference oracles agree:
 indices and boolean matches bit-exactly everywhere, values bit-exactly
 for the integer metrics and to float tolerance for the analog ones.
 
+A **hierarchical** sweep rides along: random two-stage plans
+(clusters x nprobe x metric x polarity x packed/unpacked) must be
+bit-identical to their flat equivalent at ``nprobe == clusters`` and
+monotone in recall as ``nprobe`` grows (the probed cluster sets are
+nested per query).
+
 A third axis rides on every case: a **fault model** (absent / null /
 real).  A null model (all probabilities zero) must be bit-identical to
 running with no model at all on every backend and layout; a real model
@@ -28,13 +34,13 @@ Every failure message carries the full case tuple so any mismatch is
 reproducible with ``_run_sim_case``/``_run_range_case`` directly.
 """
 
-import os
-
 import jax.numpy as jnp
 import numpy as np
 
 from _hypothesis_compat import given, settings, st
 from repro.core import ArchSpec, clear_plan_cache, get_plan
+from repro.core.engine import get_hierarchical_plan
+from repro.core.envcfg import env_int
 from repro.core.executor import execute_module
 from repro.faults import FaultModel
 from repro.kernels import ref as kref
@@ -42,10 +48,12 @@ from repro.kernels import ref as kref
 from test_engine import _sim_module
 from test_range import _range_module
 
-FUZZ_CASES = max(1, int(os.environ.get("REPRO_FUZZ_CASES", "200")))
-#: similarity cases get the larger share (more axes to cross)
-SIM_CASES = (FUZZ_CASES * 3) // 5
-RANGE_CASES = FUZZ_CASES - SIM_CASES
+FUZZ_CASES = env_int("REPRO_FUZZ_CASES", 200, min_value=1)
+#: similarity cases get the larger share (more axes to cross);
+#: hierarchical cases are the most expensive (k-means per nprobe plan)
+HIER_CASES = max(1, FUZZ_CASES // 10)
+SIM_CASES = ((FUZZ_CASES - HIER_CASES) * 3) // 5
+RANGE_CASES = FUZZ_CASES - HIER_CASES - SIM_CASES
 
 #: discrete axes — small enough that geometry keys repeat (plan-cache
 #: hits keep the sweep fast), rich enough to cross every semantics axis
@@ -316,6 +324,82 @@ def _ternary_module(m, n, dim, k, arch):
     pm = PassManager()
     pm.add(CompulsoryPartition())
     return pm.run(mod, {"arch": arch})
+
+
+# ---------------------------------------------------------------------------
+# hierarchical axis: two-stage plans vs their flat equivalent
+# ---------------------------------------------------------------------------
+
+#: hierarchical galleries need n >= k (the strict-identity contract:
+#: with n < k the flat tournament and the probing stage fill the dead
+#: slots with different — equally losing — filler indices)
+_NS_HIER = (48, 64, 97, 130)
+_CLUSTERS = (2, 4, 6, 8)
+
+
+def _draw_hier_case(rng: np.random.Generator) -> dict:
+    metric = _METRICS[rng.integers(len(_METRICS))]
+    return {
+        "family": "hier",
+        "metric": metric,
+        "largest": bool(rng.integers(2)) if metric in ("dot", "cos")
+        else False,
+        "m": int(_MS[rng.integers(len(_MS))]),
+        "n": int(_NS_HIER[rng.integers(len(_NS_HIER))]),
+        "k": int(_KS[rng.integers(len(_KS))]),
+        "dim": int(_DIMS[rng.integers(len(_DIMS))]),
+        "rows": int(_ROWS[rng.integers(len(_ROWS))]),
+        "cols": int(_COLS[rng.integers(len(_COLS))]),
+        "unroll": int(_UNROLL[rng.integers(len(_UNROLL))]),
+        "pack": None if rng.integers(2) else False,
+        "clusters": int(_CLUSTERS[rng.integers(len(_CLUSTERS))]),
+    }
+
+
+def _run_hier_case(case: dict, rng: np.random.Generator) -> None:
+    m, n, dim, k = case["m"], case["n"], case["dim"], case["k"]
+    metric, largest, c = case["metric"], case["largest"], case["clusters"]
+    arch = ArchSpec(rows=case["rows"], cols=case["cols"])
+    q, p = _data_for(rng, metric, m, n, dim)
+    mod = _sim_module(metric, k, largest, m, n, dim, arch,
+                      unroll_limit=case["unroll"])
+    flat = get_plan(mod, pack=case["pack"])
+    fv, fi = (np.asarray(x) for x in flat.execute(q, p))
+
+    # nprobe == clusters: every tile probed -> bit-identical to flat
+    full = get_hierarchical_plan(mod, clusters=c, nprobe=c,
+                                 pack=case["pack"])
+    hv, hi = (np.asarray(x) for x in full.execute(q, p))
+    np.testing.assert_array_equal(hi, fi, err_msg=f"hier!=flat {case}")
+    if metric in ("hamming", "dot"):
+        np.testing.assert_array_equal(hv, fv, err_msg=f"hier!=flat {case}")
+    else:
+        np.testing.assert_allclose(hv, fv, atol=1e-4,
+                                   err_msg=f"hier!=flat {case}")
+
+    # recall vs the flat oracle is monotone in nprobe: the coarse
+    # ranking is fixed per query, so the probed cluster sets are nested
+    # and a flat winner, once a candidate, always survives selection
+    flat_sets = [set(map(int, row)) for row in fi]
+    recalls = []
+    for nprobe in sorted({1, max(1, c // 2), c}):
+        hp = get_hierarchical_plan(mod, clusters=c, nprobe=nprobe,
+                                   pack=case["pack"])
+        _, pi = hp.execute(q, p)
+        pi = np.asarray(pi)
+        recalls.append(np.mean([
+            len(set(map(int, row)) & fs) / max(len(fs), 1)
+            for row, fs in zip(pi, flat_sets)]))
+    assert all(a <= b + 1e-9 for a, b in zip(recalls, recalls[1:])), \
+        f"recall not monotone in nprobe: {recalls} {case}"
+    assert recalls[-1] > 1.0 - 1e-9, f"nprobe=all recall {recalls[-1]} {case}"
+
+
+def test_fuzz_hierarchical_family():
+    master = np.random.default_rng(40817)
+    for i in range(HIER_CASES):
+        rng = np.random.default_rng(np.random.SeedSequence([40817, i]))
+        _run_hier_case(_draw_hier_case(master), rng)
 
 
 # ---------------------------------------------------------------------------

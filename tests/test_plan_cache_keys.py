@@ -11,8 +11,9 @@ instead of colliding silently.
 
 import itertools
 
-from repro.core import (ArchSpec, RangeSpec, SimilaritySpec,
-                        clear_plan_cache, get_plan)
+from repro.core import (ArchSpec, HierarchicalSpec, RangeSpec,
+                        SimilaritySpec, clear_plan_cache,
+                        get_hierarchical_plan, get_plan)
 
 from test_engine import _sim_module
 from test_range import _range_module
@@ -60,10 +61,26 @@ def _range_specs():
     return specs
 
 
+def _hier_specs():
+    """HierarchicalSpec instances across the clustering axes (the fine
+    spec sweep is covered by ``_sim_specs``; here a few fine specs cross
+    clusters / nprobe / kmeans_iters / seed)."""
+    specs = []
+    for fine in _sim_specs()[:4]:
+        for clusters, nprobe, iters, seed in itertools.product(
+                (4, 8), (1, 4), (4, 8), (0, 7)):
+            if nprobe > clusters:
+                continue
+            specs.append(HierarchicalSpec(
+                fine=fine, clusters=clusters, nprobe=nprobe,
+                kmeans_iters=iters, seed=seed))
+    return specs
+
+
 def test_cache_keys_disjoint_across_all_axes():
     """Exhaustive cross: (spec, backend, batch, shards, packed) keys are
     pairwise distinct for every distinct configuration."""
-    specs = _sim_specs() + _range_specs()
+    specs = _sim_specs() + _range_specs() + _hier_specs()
     keys = []
     for spec in specs:
         for backend, batch, shards, packed in itertools.product(
@@ -77,7 +94,7 @@ def test_cache_keys_disjoint_across_all_axes():
 
 
 def test_similarity_and_range_specs_never_compare_equal():
-    """The two plan families share the cache dict; a frozen-dataclass
+    """The plan families share the cache dict; a frozen-dataclass
     type split is what keeps their keys disjoint — pin it."""
     for s in _sim_specs():
         for r in _range_specs():
@@ -86,6 +103,24 @@ def test_similarity_and_range_specs_never_compare_equal():
     s = _sim_specs()[0]
     r = _range_specs()[0]
     assert hash((s,)) != hash((r,)) or s != r
+
+
+def test_hierarchical_specs_never_equal_their_fine_spec():
+    """A composite wrapping a fine spec must not collide with the flat
+    plan compiled for that same fine spec — the wrapper *type* splits
+    the key even when every delegated field agrees."""
+    for h in _hier_specs():
+        assert h != h.fine and h.fine != h
+    # ... and nprobe / clusters / seed / kmeans_iters all join the key
+    fine = _sim_specs()[0]
+    base = HierarchicalSpec(fine=fine, clusters=8, nprobe=2)
+    for other in (HierarchicalSpec(fine=fine, clusters=8, nprobe=3),
+                  HierarchicalSpec(fine=fine, clusters=4, nprobe=2),
+                  HierarchicalSpec(fine=fine, clusters=8, nprobe=2,
+                                   kmeans_iters=9),
+                  HierarchicalSpec(fine=fine, clusters=8, nprobe=2,
+                                   seed=1)):
+        assert base != other
 
 
 def test_get_plan_returns_distinct_plans_per_axis():
@@ -117,6 +152,23 @@ def test_get_plan_returns_distinct_plans_per_axis():
     # a range program can never hit a similarity plan's slot
     sim_like = get_plan(_sim_module("hamming", 1, False, 4, 20, 32, arch))
     assert sim_like is not None and sim_like is not r1
+
+
+def test_hierarchical_plans_share_the_cache():
+    """get_hierarchical_plan is an ordinary plan-cache citizen: same
+    clustering config -> the same object, any axis change -> a new one,
+    and the flat plan for the same module keeps its own slot."""
+    clear_plan_cache()
+    arch = ArchSpec(rows=16, cols=32)
+    mod = _sim_module("hamming", 3, False, 6, 64, 32, arch)
+    flat = get_plan(mod)
+    h1 = get_hierarchical_plan(mod, clusters=4, nprobe=2)
+    h2 = get_hierarchical_plan(mod, clusters=4, nprobe=2)
+    h3 = get_hierarchical_plan(mod, clusters=4, nprobe=4)
+    h4 = get_hierarchical_plan(mod, clusters=4, nprobe=2, seed=1)
+    assert h1 is h2
+    assert h1 is not h3 and h1 is not h4 and h3 is not h4
+    assert all(h is not flat for h in (h1, h3, h4))
 
 
 def test_spec_equality_is_value_based():
