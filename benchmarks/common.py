@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 from typing import Any, Dict, List, Optional
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -20,7 +21,20 @@ def save_json(name: str, payload: Any) -> str:
 
 def save_bench_json(name: str, payload: Any) -> str:
     """Timing record for the perf trajectory: ``BENCH_<name>.json`` at the
-    repo root, so successive perf PRs have a comparable baseline."""
+    repo root, so successive perf PRs have a comparable baseline.
+
+    ``*_smoke`` records are CI-run side products, not baselines — they
+    land in a scratch directory (``REPRO_BENCH_SMOKE_DIR``, default
+    under the system temp dir) instead of littering the repo root.
+    """
+    if name.endswith("_smoke"):
+        base = os.environ.get("REPRO_BENCH_SMOKE_DIR") or \
+            os.path.join(tempfile.gettempdir(), "repro-bench-smoke")
+        os.makedirs(base, exist_ok=True)
+        path = os.path.join(base, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        return path
     path = os.path.join(ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)

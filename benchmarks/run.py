@@ -17,9 +17,9 @@ import traceback
 from repro.core import plan_cache_stats
 
 from . import (bench_engine, bench_faults, bench_forest, bench_hdc,
-               bench_hier, bench_packed, bench_serve, fig7_validation,
-               fig8_dse, fig9_isocapacity, gpu_comparison, roofline_table,
-               table1_density, table2_knn)
+               bench_hier, bench_multitenant, bench_packed, bench_serve,
+               fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
+               roofline_table, table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -53,6 +53,11 @@ SUITES = [
     # packed gallery; detailed record in BENCH_hier.json (gate
     # REPRO_HIER_GATE, auto = 3x at the tuned recall>=0.95 nprobe)
     ("hier_smoke", bench_hier.run),
+    # multi-tenant gateway: hot-tenant isolation (admission control vs a
+    # naive shared server) + replica-kill failover; detailed record in
+    # BENCH_multitenant.json (gate REPRO_MULTITENANT_GATE, auto = 2x
+    # isolation factor)
+    ("multitenant_smoke", bench_multitenant.run),
 ]
 
 

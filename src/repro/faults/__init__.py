@@ -8,7 +8,9 @@ checksum-readback self-healing, and aCAM guard bands.  See
 ``docs/robustness.md``.
 """
 
-from .harden import HardenedPlan, HealReport
+from .harden import (HardenedPlan, HealReport, detect_faulty_rows,
+                     row_checksums)
 from .model import FaultModel
 
-__all__ = ["FaultModel", "HardenedPlan", "HealReport"]
+__all__ = ["FaultModel", "HardenedPlan", "HealReport", "row_checksums",
+           "detect_faulty_rows"]

@@ -39,10 +39,56 @@ import numpy as np
 from ..core.engine import RangeSpec, get_plan, module_for_spec
 from ..core.envcfg import env_int
 
-__all__ = ["HardenedPlan", "HealReport"]
+__all__ = ["HardenedPlan", "HealReport", "row_checksums",
+           "detect_faulty_rows"]
 
 #: losing-candidate index sentinel (same as ``kref.pad_candidates``)
 _PAD_IDX = 2 ** 30
+
+
+def row_checksums(arrs: Tuple[np.ndarray, ...]) -> np.ndarray:
+    """Per-row CRC32 over all stored components.
+
+    The digest primitive shared by :class:`HardenedPlan` (physical-row
+    readback checks) and the serving replica layer (replica-divergence
+    detection): row ``p``'s checksum covers row ``p`` of *every*
+    component — gallery and care mask, or interval ``(lo, hi)`` — so
+    two stored copies agree iff their checksum vectors agree.
+    """
+    n = arrs[0].shape[0]
+    return np.array([
+        zlib.crc32(b"".join(np.ascontiguousarray(a[p]).tobytes()
+                            for a in arrs))
+        for p in range(n)], np.uint32)
+
+
+def detect_faulty_rows(readback: Tuple[Any, ...],
+                       clean: Tuple[np.ndarray, ...],
+                       tolerance: float = 0.0) -> np.ndarray:
+    """Row mask of a simulated device readback diverging from the
+    clean stored content.
+
+    Digital cells (``tolerance <= 0``) compare exactly via
+    :func:`row_checksums`; analog cells use a per-cell absolute
+    tolerance — typically :meth:`FaultModel.suggest_guard`, a few
+    noise sigmas plus drift — since Gaussian read noise perturbs every
+    cell and only outliers (stuck cells, flipped bounds, excessive
+    drift) indicate a row worth rewriting.  Handles ``inf`` bounds
+    (``inf == inf`` matches; ``inf - finite`` is an outlier).
+    """
+    clean = tuple(np.asarray(c, np.float32) for c in clean)
+    if tolerance <= 0.0:
+        crc = row_checksums(tuple(np.asarray(a, np.float32)
+                                  for a in readback))
+        return crc != row_checksums(clean)
+    bad = np.zeros(clean[0].shape[0], bool)
+    for rb, cl in zip(readback, clean):
+        rb = np.asarray(rb, np.float32)
+        same = rb == cl                         # matching cells/infs
+        with np.errstate(invalid="ignore"):     # inf - inf -> nan
+            diff = np.where(same, 0.0, np.abs(rb - cl))
+        bad |= ~(np.nan_to_num(diff, nan=np.inf) <= tolerance).all(axis=1)
+    return bad
 
 
 @dataclass
@@ -170,11 +216,7 @@ class HardenedPlan:
     @staticmethod
     def _checksums(arrs: Tuple[np.ndarray, ...]) -> np.ndarray:
         """Per-physical-row CRC32 over all stored components."""
-        n_phys = arrs[0].shape[0]
-        return np.array([
-            zlib.crc32(b"".join(np.ascontiguousarray(a[p]).tobytes()
-                                for a in arrs))
-            for p in range(n_phys)], np.uint32)
+        return row_checksums(arrs)
 
     def _logical_rows(self, logical_idx: np.ndarray
                       ) -> Tuple[np.ndarray, ...]:
@@ -314,19 +356,7 @@ class HardenedPlan:
     def _detect(self, model, tolerance: float) -> np.ndarray:
         """Faulty-live-row mask from a simulated readback."""
         readback = model.corrupt_stored(self._clean, self.phys_spec)
-        if tolerance <= 0.0:
-            crc = self._checksums(tuple(np.asarray(a, np.float32)
-                                        for a in readback))
-            bad = crc != self._crc
-        else:
-            bad = np.zeros(self.n_phys, bool)
-            for rb, clean in zip(readback, self._clean):
-                rb = np.asarray(rb, np.float32)
-                same = rb == clean                   # matching cells/infs
-                with np.errstate(invalid="ignore"):  # inf - inf -> nan
-                    diff = np.where(same, 0.0, np.abs(rb - clean))
-                bad |= ~(np.nan_to_num(diff, nan=np.inf) <= tolerance
-                         ).all(axis=1)
+        bad = detect_faulty_rows(readback, self._clean, tolerance)
         return bad & (self.logical_of >= 0)
 
     def _remap(self, frm: np.ndarray, to: np.ndarray) -> None:

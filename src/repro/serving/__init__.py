@@ -3,9 +3,21 @@
 Continuous-batching front end over the search-plan engine: concurrent
 KNN / HDC query requests are coalesced into plan-sized micro-batches
 against one cached (optionally multi-device-sharded)
-:class:`~repro.core.engine.SearchPlan`.  See ``docs/serving.md``.
+:class:`~repro.core.engine.SearchPlan`.  On top of the single-gallery
+:class:`CamSearchServer` sits the multi-tenant
+:class:`CamServingGateway`: named tenants, per-tenant admission
+control (rate limits, priorities, load shedding), gallery replicas
+load-balanced across device groups with transparent failover, and
+digest-checked replica healing.  See ``docs/serving.md``.
 """
 
+from .gateway import (CamServingGateway, GatewayRequest, GatewayResult)
+from .replica import Replica, ReplicaSet
 from .server import CamSearchServer, SearchRequest, SearchResult
+from .telemetry import ServerStats
+from .tenant import AdmissionConfig, AdmissionError, TenantUnavailable
 
-__all__ = ["CamSearchServer", "SearchRequest", "SearchResult"]
+__all__ = ["CamSearchServer", "SearchRequest", "SearchResult",
+           "ServerStats", "CamServingGateway", "GatewayRequest",
+           "GatewayResult", "Replica", "ReplicaSet", "AdmissionConfig",
+           "AdmissionError", "TenantUnavailable"]

@@ -1,0 +1,316 @@
+"""Serving resilience: breaker, fallback chain, locks, degraded dispatch.
+
+The failure-domain machinery :class:`~repro.serving.CamSearchServer`
+mixes in (see ``docs/robustness.md``):
+
+* :class:`_CircuitBreaker` — closed → open → half-open over the
+  primary backend (also reused per tenant by the multi-tenant
+  gateway, where it guards admission instead of dispatch).
+* :class:`_InterpreterExecutor` — the last-resort fallback level.
+* :class:`_WriterPriorityLock` — reader/writer lock where waiting
+  writers block new readers (batch dispatch reads, gallery updates
+  write; the gateway's replica sets reuse it for update fan-out).
+* :class:`_ResilienceMixin` — the degraded dispatch walk: retry with
+  exponential backoff per level, breaker gating of the primary, and
+  the synchronous finalize-failure rescue.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["_CircuitBreaker", "_InterpreterExecutor",
+           "_WriterPriorityLock", "_ResilienceMixin"]
+
+
+class _CircuitBreaker:
+    """Closed → open → half-open circuit breaker over the primary backend.
+
+    ``threshold`` consecutive primary failures trip the breaker
+    **open**; while open, batches go straight to the degraded chain.
+    After ``cooldown`` seconds the next batch runs as a **half-open**
+    probe against the primary: success closes the breaker, failure
+    re-opens it (and restarts the cooldown).  ``threshold=0`` disables
+    the breaker entirely (every batch tries the primary).
+    """
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = int(threshold)
+        self.cooldown = float(cooldown_s)
+        self.state = "closed"
+        self.consecutive = 0
+        self.trips = 0
+        self.probes = 0
+        self.recoveries = 0
+        self._opened_at = 0.0
+        self._lock = threading.Lock()
+
+    @property
+    def enabled(self) -> bool:
+        return self.threshold > 0
+
+    def allow_primary(self) -> bool:
+        if not self.enabled:
+            return True
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if time.perf_counter() - self._opened_at >= self.cooldown:
+                self.state = "half-open"
+                self.probes += 1
+                return True
+            return False
+
+    def record_failure(self) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self.consecutive += 1
+            if self.state == "half-open" or \
+                    self.consecutive >= self.threshold:
+                if self.state != "open":
+                    self.trips += 1
+                self.state = "open"
+                self._opened_at = time.perf_counter()
+
+    def record_success(self) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self.consecutive = 0
+            if self.state != "closed":
+                self.state = "closed"
+                self.recoveries += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"state": self.state, "threshold": self.threshold,
+                    "consecutive_failures": self.consecutive,
+                    "trips": self.trips, "probes": self.probes,
+                    "recoveries": self.recoveries,
+                    "cooldown_ms": 1e3 * self.cooldown}
+
+
+class _InterpreterExecutor:
+    """Last-resort fallback level: the IR interpreter.
+
+    Synthesises a fused module for the plan's spec
+    (:func:`~repro.core.engine.module_for_spec`) and executes it with
+    :func:`~repro.core.executor.execute_module`, chunked to the traced
+    query count.  Synchronous (``dispatch`` computes eagerly) and slow,
+    but it has no jit/pallas/device dependency at all — when every
+    compiled level is failing, correctness-over-latency is the only
+    remaining contract.  Fault models corrupt the stored operands here
+    exactly like the compiled levels, so the degraded results match.
+    """
+
+    backend = "interpreter"
+
+    def __init__(self, spec):
+        from ..core.engine import RangeSpec, module_for_spec
+        self.spec = spec
+        self.is_range = isinstance(spec, RangeSpec)
+        self._module = module_for_spec(spec)
+
+    def dispatch(self, *inputs, faults=None):
+        from ..core.executor import execute_module
+        spec = self.spec
+        rows = np.asarray(inputs[spec.query_arg], np.float32)
+        if self.is_range:
+            stored = tuple(np.asarray(inputs[i], np.float32)
+                           for i in spec.pattern_args)
+        else:
+            stored = (np.asarray(inputs[spec.pattern_arg], np.float32),)
+            if spec.care_arg is not None:
+                stored += (np.asarray(inputs[spec.care_arg], np.float32),)
+        if faults is not None and not faults.is_null:
+            stored = tuple(np.asarray(s, np.float32)
+                           for s in faults.corrupt_stored(stored, spec))
+        m = spec.m
+        outs = []
+        for s in range(0, rows.shape[0], m):
+            chunk = rows[s:s + m]
+            valid = chunk.shape[0]
+            if valid < m:        # pad the ragged tail to the traced shape
+                chunk = np.concatenate(
+                    [chunk, np.zeros((m - valid, chunk.shape[1]),
+                                     chunk.dtype)])
+            res = execute_module(self._module, chunk, *stored)
+            outs.append((tuple(np.asarray(r) for r in res), valid))
+        return outs
+
+    def finalize(self, pending):
+        if self.is_range:
+            return np.concatenate([r[0][:v] for r, v in pending], axis=0)
+        return (np.concatenate([r[0][:v] for r, v in pending], axis=0),
+                np.concatenate([r[1][:v] for r, v in pending], axis=0))
+
+
+class _WriterPriorityLock:
+    """A reader/writer lock where waiting writers block new readers.
+
+    The batcher takes the read side around every batch dispatch (many
+    batches may overlap the completion pipeline, but dispatch itself is
+    the only point that reads the gallery); ``update_gallery`` takes
+    the write side.  Writer priority matters under load: a steady
+    request stream keeps the read side continuously busy, and a plain
+    RW lock would starve the update forever.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writers_waiting = 0
+        self._writing = False
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writing or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writing or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writing = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writing = False
+            self._cond.notify_all()
+
+
+class _ResilienceMixin:
+    """Degraded dispatch for :class:`~repro.serving.CamSearchServer`.
+
+    Expects the host class to provide ``plan``, ``_stats``
+    (:class:`~.telemetry.ServerStats`), ``_breaker``, ``_faults``,
+    ``_fault_injector``, ``_max_retries``, ``_backoff_s``,
+    ``_fallbacks``, ``_lock``, ``_gallery_lock`` and ``_inputs_for``.
+    """
+
+    def _build_fallbacks(self) -> List[Tuple[str, Any]]:
+        """Degraded chain below the primary plan, most- to least-capable:
+        single-device (for sharded primaries) → jnp (for pallas) → jnp
+        unpacked (for packed) → IR interpreter.  Every level is an
+        ordinary plan-cache citizen compiled for the same spec/batch."""
+        from ..core.engine import CompositePlan, get_plan, module_for_spec
+        spec = self.plan.spec
+        mod = module_for_spec(spec)
+        chain: List[Tuple[str, Any]] = []
+
+        def add(name: str, **kw) -> None:
+            try:
+                p = get_plan(mod, batch=self.plan.batch, **kw)
+            except Exception:       # level not buildable here: skip it
+                return
+            if p is not None and p is not self.plan and \
+                    all(p is not e for _, e in chain):
+                chain.append((name, p))
+
+        if isinstance(self.plan, CompositePlan):
+            # composite primaries degrade to the *exact* flat search
+            # first — module_for_spec resolved the flat equivalent above
+            add("jnp-flat", backend="jnp", pack=self.plan.packed,
+                shards=self.plan.shards)
+        if self.plan.shards > 1:
+            add("jnp-single", backend="jnp", pack=self.plan.packed)
+        if self.plan.backend == "pallas":
+            add("jnp", backend="jnp", pack=self.plan.packed)
+        if self.plan.packed:
+            add("jnp-unpacked", backend="jnp", pack=False)
+        chain.append(("interpreter", _InterpreterExecutor(spec)))
+        return chain
+
+    def _levels(self) -> List[Tuple[str, Any]]:
+        with self._lock:
+            if self._fallbacks is None:
+                self._fallbacks = self._build_fallbacks()
+            fallbacks = self._fallbacks
+        return [("primary", self.plan)] + fallbacks
+
+    def _dispatch_resilient(self, rows: np.ndarray) -> Tuple[Any, Any]:
+        """Dispatch with retry, breaker, and degraded fallback.
+
+        Walks the level chain (skipping the primary while the breaker
+        is open), giving each level ``max_retries`` extra attempts with
+        exponential backoff.  Returns ``(executor, pending)`` from the
+        first level that accepts the dispatch; raises the last error
+        only when *every* level (including the interpreter) failed.
+        """
+        levels = self._levels()
+        start = 0
+        if not self._breaker.allow_primary():
+            start = 1
+            self._stats.bump(breaker_skips=1)
+        last: Optional[BaseException] = None
+        for li in range(start, len(levels)):
+            name, ex = levels[li]
+            primary = li == 0
+            for attempt in range(self._max_retries + 1):
+                try:
+                    if self._fault_injector is not None:
+                        self._fault_injector(name)
+                    pending = ex.dispatch(*self._inputs_for(ex.spec, rows),
+                                          faults=self._faults)
+                except BaseException as e:      # noqa: BLE001 — retried
+                    last = e
+                    if primary:
+                        self._breaker.record_failure()
+                    if attempt < self._max_retries:
+                        # one bump: a reader never sees the error
+                        # without its retry (or vice versa)
+                        self._stats.bump(backend_errors=1, retries=1)
+                        if self._backoff_s:
+                            time.sleep(self._backoff_s * (2 ** attempt))
+                    else:
+                        self._stats.bump(backend_errors=1)
+                    continue
+                if primary:
+                    self._breaker.record_success()
+                else:
+                    self._stats.bump(degraded_batches=1)
+                return ex, pending
+        raise last if last is not None else RuntimeError("no dispatch level")
+
+    def _rescue(self, batch, rows: np.ndarray, failed: Any):
+        """Synchronous finalize-failure recovery in the completion
+        thread: re-run the batch through the levels below the one that
+        failed (under the gallery read lock, so the retry still sees
+        one gallery version)."""
+        levels = self._levels()
+        idx = next((i for i, (_, ex) in enumerate(levels)
+                    if ex is failed), -1)
+        self._gallery_lock.acquire_read()
+        try:
+            for name, ex in levels[idx + 1:]:
+                try:
+                    if self._fault_injector is not None:
+                        self._fault_injector(name)
+                    pending = ex.dispatch(
+                        *self._inputs_for(ex.spec, rows),
+                        faults=self._faults)
+                    out = ex.finalize(pending)
+                except BaseException:       # noqa: BLE001 — next level
+                    self._stats.bump(backend_errors=1)
+                    continue
+                self._stats.bump(degraded_batches=1)
+                return out
+        finally:
+            self._gallery_lock.release_read()
+        return None

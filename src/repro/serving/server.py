@@ -60,33 +60,34 @@ incremental :meth:`~repro.core.engine.SearchPlan.update_rows` path
 re-encoded/re-packed), which is what makes online HDC retraining —
 misclassified queries re-bundled into class vectors, then re-served —
 cheap against live traffic (see ``repro.hdc`` and ``docs/hdc.md``).
+:meth:`CamSearchServer.adopt_gallery` is the replicated-serving
+variant: the multi-tenant gateway computes one ``update_rows`` against
+a gallery array shared by every replica and each replica server adopts
+the same resulting jax array — the plan's pattern memo is primed once
+for the whole fleet.
 
 Resilience (deadlines, retries, circuit breaker, degraded mode)
 ---------------------------------------------------------------
 Production serving assumes the backend sometimes fails: a pallas
 kernel hits a driver bug, a device wedges, a gallery transfer throws.
-The failure-domain machinery (see ``docs/robustness.md``):
+The failure-domain machinery lives in :mod:`repro.serving.resilience`
+(see ``docs/robustness.md``): per-request deadlines
+(``REPRO_SERVE_DEADLINE_MS``), bounded retry with exponential backoff
+(``REPRO_SERVE_RETRIES`` / ``REPRO_SERVE_BACKOFF_MS``), a circuit
+breaker over the primary backend (``REPRO_SERVE_BREAKER_K`` /
+``REPRO_SERVE_BREAKER_COOLDOWN_MS``), and a degraded fallback chain
+(pallas → jnp → jnp unpacked → IR interpreter) that serves the same
+gallery at every level.  ``health()`` surfaces breaker state,
+fault-cell counters and deadline-miss rates; ``snapshot()`` keeps the
+throughput/latency counters — both read a **consistent** view of the
+stats (every related counter group is updated atomically, see
+:class:`~repro.serving.telemetry.ServerStats`).
 
-* **Per-request deadlines** (``deadline_ms`` / ``REPRO_SERVE_DEADLINE_MS``)
-  — an expired request is failed with a ``TimeoutError`` *without*
-  losing its batch slot: the rest of the coalesced batch still
-  dispatches, and results that arrive after the deadline are dropped
-  as misses rather than delivered late.
-* **Bounded retry with exponential backoff** — transient dispatch
-  failures retry up to ``REPRO_SERVE_RETRIES`` times per fallback
-  level, sleeping ``backoff * 2^attempt`` between attempts.
-* **Circuit breaker** — ``REPRO_SERVE_BREAKER_K`` consecutive primary-
-  backend errors trip the breaker open: batches skip straight to the
-  degraded chain until a cooldown elapses, then a half-open probe
-  batch tests the primary and closes the breaker on success.
-* **Degraded fallback chain** — pallas → jnp (same packing) → jnp
-  unpacked → IR interpreter; sharded plans degrade to single-device
-  first.  Every level serves the same gallery (and the same fault
-  model, when one is injected), so a degraded response is a correct
-  response, just slower.
-* **health()** — breaker state, fault-cell counters, deadline-miss
-  rate, degraded/retry telemetry; ``snapshot()`` keeps the
-  throughput/latency counters.
+This module is the package's assembly point: the batching loop lives
+in :mod:`repro.serving.batcher`, the failure machinery in
+:mod:`repro.serving.resilience`, counters/requests in
+:mod:`repro.serving.telemetry`, and the multi-tenant layer on top in
+:mod:`repro.serving.gateway`.
 """
 
 from __future__ import annotations
@@ -95,230 +96,80 @@ import itertools
 import queue
 import threading
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.compiler import CompiledCamProgram
 from ..core.engine import PlanBase, RangePlan
 from ..core.envcfg import env_float, env_int
+from .batcher import _BatcherMixin
+from .resilience import _CircuitBreaker, _ResilienceMixin, \
+    _WriterPriorityLock
+from .telemetry import SearchRequest, SearchResult, ServerStats
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
 
 
-class _CircuitBreaker:
-    """Closed → open → half-open circuit breaker over the primary backend.
-
-    ``threshold`` consecutive primary failures trip the breaker
-    **open**; while open, batches go straight to the degraded chain.
-    After ``cooldown`` seconds the next batch runs as a **half-open**
-    probe against the primary: success closes the breaker, failure
-    re-opens it (and restarts the cooldown).  ``threshold=0`` disables
-    the breaker entirely (every batch tries the primary).
-    """
-
-    def __init__(self, threshold: int, cooldown_s: float):
-        self.threshold = int(threshold)
-        self.cooldown = float(cooldown_s)
-        self.state = "closed"
-        self.consecutive = 0
-        self.trips = 0
-        self.probes = 0
-        self.recoveries = 0
-        self._opened_at = 0.0
-        self._lock = threading.Lock()
-
-    @property
-    def enabled(self) -> bool:
-        return self.threshold > 0
-
-    def allow_primary(self) -> bool:
-        if not self.enabled:
-            return True
-        with self._lock:
-            if self.state == "closed":
-                return True
-            if time.perf_counter() - self._opened_at >= self.cooldown:
-                self.state = "half-open"
-                self.probes += 1
-                return True
-            return False
-
-    def record_failure(self) -> None:
-        if not self.enabled:
-            return
-        with self._lock:
-            self.consecutive += 1
-            if self.state == "half-open" or \
-                    self.consecutive >= self.threshold:
-                if self.state != "open":
-                    self.trips += 1
-                self.state = "open"
-                self._opened_at = time.perf_counter()
-
-    def record_success(self) -> None:
-        if not self.enabled:
-            return
-        with self._lock:
-            self.consecutive = 0
-            if self.state != "closed":
-                self.state = "closed"
-                self.recoveries += 1
-
-    def snapshot(self) -> Dict[str, Any]:
-        with self._lock:
-            return {"state": self.state, "threshold": self.threshold,
-                    "consecutive_failures": self.consecutive,
-                    "trips": self.trips, "probes": self.probes,
-                    "recoveries": self.recoveries,
-                    "cooldown_ms": 1e3 * self.cooldown}
+def _resolve_plan(program: Any) -> PlanBase:
+    """Accept a :class:`CompiledCamProgram` (with an engine plan) or a
+    bare plan; reject anything else synchronously."""
+    if isinstance(program, CompiledCamProgram):
+        plan = program.engine_plan
+        if plan is None:
+            raise ValueError(
+                "program has no engine plan (not a pure similarity "
+                "program); the search server needs a SearchPlan")
+        return plan
+    if isinstance(program, PlanBase):
+        return program
+    raise TypeError(f"expected CompiledCamProgram or an engine "
+                    f"plan, got {type(program).__name__}")
 
 
-class _InterpreterExecutor:
-    """Last-resort fallback level: the IR interpreter.
+def _validate_queries(plan: PlanBase, queries: np.ndarray) -> np.ndarray:
+    """Normalise a query block to ``(rows, dim)`` numpy, rejecting
+    malformed blocks synchronously — one bad request must never poison
+    the innocent requests it would have been coalesced with."""
+    q = np.asarray(queries)
+    if q.ndim == 1:
+        q = q[None, :]
+    if q.ndim != 2:
+        raise ValueError(f"queries must be (rows, dim), got {q.shape}")
+    if q.shape[0] == 0:
+        raise ValueError("empty query block")
+    dim = plan.spec.dim
+    if q.shape[1] != dim:
+        raise ValueError(
+            f"query feature dimension {q.shape[1]} != plan dim {dim}")
+    return q
 
-    Synthesises a fused module for the plan's spec
-    (:func:`~repro.core.engine.module_for_spec`) and executes it with
-    :func:`~repro.core.executor.execute_module`, chunked to the traced
-    query count.  Synchronous (``dispatch`` computes eagerly) and slow,
-    but it has no jit/pallas/device dependency at all — when every
-    compiled level is failing, correctness-over-latency is the only
-    remaining contract.  Fault models corrupt the stored operands here
-    exactly like the compiled levels, so the degraded results match.
-    """
 
-    backend = "interpreter"
-
-    def __init__(self, spec):
-        from ..core.engine import RangeSpec, module_for_spec
-        self.spec = spec
-        self.is_range = isinstance(spec, RangeSpec)
-        self._module = module_for_spec(spec)
-
-    def dispatch(self, *inputs, faults=None):
-        from ..core.executor import execute_module
-        spec = self.spec
-        rows = np.asarray(inputs[spec.query_arg], np.float32)
-        if self.is_range:
-            stored = tuple(np.asarray(inputs[i], np.float32)
-                           for i in spec.pattern_args)
+def _coerce_stored(plan: PlanBase, is_range: bool, gallery: Any):
+    """Validate + convert the stored operands to the server's gallery
+    attribute: a jax array for best-match plans, a tuple of jax arrays
+    for range plans (``(lo, hi)`` in interval mode)."""
+    import jax.numpy as jnp
+    if is_range:
+        n_pats = len(plan.spec.pattern_args)
+        if n_pats == 2:           # interval mode: gallery is (lo, hi)
+            if not (isinstance(gallery, (tuple, list))
+                    and len(gallery) == 2):
+                raise ValueError(
+                    "interval range plan needs gallery=(lo, hi)")
+            stored = tuple(jnp.asarray(g) for g in gallery)
         else:
-            stored = (np.asarray(inputs[spec.pattern_arg], np.float32),)
-            if spec.care_arg is not None:
-                stored += (np.asarray(inputs[spec.care_arg], np.float32),)
-        if faults is not None and not faults.is_null:
-            stored = tuple(np.asarray(s, np.float32)
-                           for s in faults.corrupt_stored(stored, spec))
-        m = spec.m
-        outs = []
-        for s in range(0, rows.shape[0], m):
-            chunk = rows[s:s + m]
-            valid = chunk.shape[0]
-            if valid < m:        # pad the ragged tail to the traced shape
-                chunk = np.concatenate(
-                    [chunk, np.zeros((m - valid, chunk.shape[1]),
-                                     chunk.dtype)])
-            res = execute_module(self._module, chunk, *stored)
-            outs.append((tuple(np.asarray(r) for r in res), valid))
-        return outs
-
-    def finalize(self, pending):
-        if self.is_range:
-            return np.concatenate([r[0][:v] for r, v in pending], axis=0)
-        return (np.concatenate([r[0][:v] for r, v in pending], axis=0),
-                np.concatenate([r[1][:v] for r, v in pending], axis=0))
+            stored = (jnp.asarray(gallery),)
+        for g in stored:
+            if tuple(g.shape) != (plan.spec.n, plan.spec.dim):
+                raise ValueError(
+                    f"stored operand shape {tuple(g.shape)} != plan "
+                    f"geometry ({plan.spec.n}, {plan.spec.dim})")
+        return stored
+    return jnp.asarray(gallery)
 
 
-class _WriterPriorityLock:
-    """A reader/writer lock where waiting writers block new readers.
-
-    The batcher takes the read side around every batch dispatch (many
-    batches may overlap the completion pipeline, but dispatch itself is
-    the only point that reads the gallery); ``update_gallery`` takes
-    the write side.  Writer priority matters under load: a steady
-    request stream keeps the read side continuously busy, and a plain
-    RW lock would starve the update forever.
-    """
-
-    def __init__(self):
-        self._cond = threading.Condition()
-        self._readers = 0
-        self._writers_waiting = 0
-        self._writing = False
-
-    def acquire_read(self) -> None:
-        with self._cond:
-            while self._writing or self._writers_waiting:
-                self._cond.wait()
-            self._readers += 1
-
-    def release_read(self) -> None:
-        with self._cond:
-            self._readers -= 1
-            if not self._readers:
-                self._cond.notify_all()
-
-    def acquire_write(self) -> None:
-        with self._cond:
-            self._writers_waiting += 1
-            try:
-                while self._writing or self._readers:
-                    self._cond.wait()
-            finally:
-                self._writers_waiting -= 1
-            self._writing = True
-
-    def release_write(self) -> None:
-        with self._cond:
-            self._writing = False
-            self._cond.notify_all()
-
-
-@dataclass
-class SearchResult:
-    """Per-request outcome: top-k values/indices (best-match plans) or
-    the boolean match rows (range plans), row-aligned with the
-    submitted queries, plus queueing/batching latency telemetry."""
-
-    rid: int
-    values: Optional[np.ndarray] = None
-    indices: Optional[np.ndarray] = None
-    #: range-plan requests: (rows, n) boolean match matrix
-    matches: Optional[np.ndarray] = None
-    error: Optional[BaseException] = None
-    submitted_at: float = 0.0
-    completed_at: float = 0.0
-
-    @property
-    def latency_s(self) -> float:
-        return self.completed_at - self.submitted_at
-
-
-@dataclass
-class SearchRequest:
-    """One in-flight query block (``queries``: ``(rows, dim)``).
-
-    ``deadline`` (absolute ``time.perf_counter()`` seconds, or ``None``)
-    is the server-side budget: an expired request is failed with a
-    ``TimeoutError`` instead of dispatched (or instead of delivered, if
-    the result arrives late) — its batch never waits for it.
-    """
-
-    rid: int
-    queries: np.ndarray
-    result: SearchResult
-    deadline: Optional[float] = None
-    _done: threading.Event = field(default_factory=threading.Event)
-
-    def wait(self, timeout: Optional[float] = None) -> SearchResult:
-        if not self._done.wait(timeout):
-            raise TimeoutError(f"search request {self.rid} timed out")
-        return self.result
-
-
-class CamSearchServer:
+class CamSearchServer(_BatcherMixin, _ResilienceMixin):
     """Row-granular continuous batching over one shared ``SearchPlan``.
 
     Parameters
@@ -389,17 +240,7 @@ class CamSearchServer:
                  breaker_threshold: Optional[int] = None,
                  breaker_cooldown_ms: Optional[float] = None,
                  fault_injector: Any = None):
-        if isinstance(program, CompiledCamProgram):
-            plan = program.engine_plan
-            if plan is None:
-                raise ValueError(
-                    "program has no engine plan (not a pure similarity "
-                    "program); the search server needs a SearchPlan")
-        elif isinstance(program, PlanBase):
-            plan = program
-        else:
-            raise TypeError(f"expected CompiledCamProgram or an engine "
-                            f"plan, got {type(program).__name__}")
+        plan = _resolve_plan(program)
         import jax.numpy as jnp
         self.plan = plan
         self.is_range = isinstance(plan, RangePlan)
@@ -407,35 +248,25 @@ class CamSearchServer:
             if care_mask is not None:
                 raise ValueError("care_mask only applies to ternary "
                                  "best-match plans, not range plans")
-            n_pats = len(plan.spec.pattern_args)
-            if n_pats == 2:       # interval mode: gallery is (lo, hi)
-                if not (isinstance(gallery, (tuple, list))
-                        and len(gallery) == 2):
-                    raise ValueError(
-                        "interval range plan needs gallery=(lo, hi)")
-                self.gallery = tuple(jnp.asarray(g) for g in gallery)
-            else:
-                self.gallery = (jnp.asarray(gallery),)
-            for g in self.gallery:
-                if tuple(g.shape) != (plan.spec.n, plan.spec.dim):
-                    raise ValueError(
-                        f"stored operand shape {tuple(g.shape)} != plan "
-                        f"geometry ({plan.spec.n}, {plan.spec.dim})")
+            self.gallery = _coerce_stored(plan, True, gallery)
             self.care = None
         else:
-            self.gallery = jnp.asarray(gallery)
+            self.gallery = _coerce_stored(plan, False, gallery)
             if plan.spec.care_arg is not None:
                 if care_mask is None:
                     raise ValueError("ternary plan (TCAM wildcard search) "
                                      "needs a care_mask")
-                care = np.asarray(care_mask)
-                if care.shape != (plan.spec.n, plan.spec.dim):
+                if tuple(np.shape(care_mask)) != (plan.spec.n,
+                                                  plan.spec.dim):
                     raise ValueError(
-                        f"care_mask shape {care.shape} != gallery geometry "
-                        f"({plan.spec.n}, {plan.spec.dim})")
+                        f"care_mask shape {tuple(np.shape(care_mask))} != "
+                        f"gallery geometry ({plan.spec.n}, {plan.spec.dim})")
                 # jax array for the same reason as the gallery: the plan's
-                # pattern memo keys on the (gallery, care) pair of arrays
-                self.care = jnp.asarray(care)
+                # pattern memo keys on the (gallery, care) pair of arrays —
+                # and jnp.asarray preserves the identity of a jax input,
+                # so replica servers handed one shared care array share
+                # one memo entry
+                self.care = jnp.asarray(care_mask)
             elif care_mask is not None:
                 raise ValueError("care_mask given but the plan's program "
                                  "has no care operand (not a ternary "
@@ -481,16 +312,18 @@ class CamSearchServer:
         self._lock = threading.Lock()
         # gallery consistency: batch dispatch reads, update_gallery writes
         self._gallery_lock = _WriterPriorityLock()
-        # bounded: a long-lived server must not grow per-request state
-        self._latencies: "deque[float]" = deque(maxlen=4096)
         self._completer_alive = False
-        self.stats: Dict[str, Any] = {
-            "requests": 0, "queries": 0, "batches": 0,
-            "batched_rows": 0, "errors": 0,
-            "gallery_updates": 0, "rows_updated": 0,
-            "deadline_misses": 0, "backend_errors": 0, "retries": 0,
-            "degraded_batches": 0, "breaker_skips": 0,
-        }
+        self._stats = ServerStats(
+            "requests", "queries", "batches", "batched_rows", "errors",
+            "gallery_updates", "rows_updated", "deadline_misses",
+            "backend_errors", "retries", "degraded_batches",
+            "breaker_skips")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Consistent copy of the raw counters (one lock acquisition);
+        ``snapshot()`` adds derived rates and plan telemetry."""
+        return self._stats.view()[0]
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -561,22 +394,11 @@ class CamSearchServer:
                deadline_ms: Optional[float] = None) -> SearchRequest:
         """Enqueue a query block; returns a waitable request handle.
 
-        Malformed blocks are rejected here, synchronously — one bad
-        request must never poison the innocent requests it would have
-        been coalesced with.  ``deadline_ms`` overrides the server's
-        default per-request deadline (0 = none for this request).
+        Malformed blocks are rejected here, synchronously.
+        ``deadline_ms`` overrides the server's default per-request
+        deadline (0 = none for this request).
         """
-        q = np.asarray(queries)
-        if q.ndim == 1:
-            q = q[None, :]
-        if q.ndim != 2:
-            raise ValueError(f"queries must be (rows, dim), got {q.shape}")
-        if q.shape[0] == 0:
-            raise ValueError("empty query block")
-        dim = self.plan.spec.dim
-        if q.shape[1] != dim:
-            raise ValueError(
-                f"query feature dimension {q.shape[1]} != plan dim {dim}")
+        q = _validate_queries(self.plan, queries)
         rid = next(self._rid)
         now = time.perf_counter()
         budget = self._deadline_s if deadline_ms is None \
@@ -659,339 +481,61 @@ class CamSearchServer:
                     self.gallery, indices, new_rows, care=self.care,
                     donate=donate)
             n_rows = int(np.atleast_1d(np.asarray(indices)).size)
-            with self._lock:
-                self.stats["gallery_updates"] += 1
-                self.stats["rows_updated"] += n_rows
+            self._stats.bump(gallery_updates=1, rows_updated=n_rows)
         finally:
             self._gallery_lock.release_write()
 
-    # -- batcher -----------------------------------------------------------
+    def adopt_gallery(self, gallery, *, rows_updated: int = 0) -> None:
+        """Swap in an externally-updated gallery wholesale.
 
-    def _drain(self, first: SearchRequest) -> List[SearchRequest]:
-        """Coalesce pending requests after ``first`` into one batch:
-        up to ``max_batch`` rows, lingering at most ``max_wait``."""
-        batch = [first]
-        rows = first.queries.shape[0]
-        deadline = time.perf_counter() + self.max_wait
-        while rows < self.max_batch:
-            remaining = deadline - time.perf_counter()
-            try:
-                req = self._queue.get(
-                    timeout=max(remaining, 0) if remaining > 0 else None,
-                    block=remaining > 0)
-            except queue.Empty:
-                break
-            if req is None:                 # shutdown sentinel
-                self._queue.put(None)       # leave it for the main loop
-                break
-            batch.append(req)
-            rows += req.queries.shape[0]
-        return batch
+        The replicated-serving write path: a
+        :class:`~repro.serving.replica.ReplicaSet` computes **one**
+        incremental :meth:`~repro.core.engine.SearchPlan.update_rows`
+        against the jax gallery array its replicas share, then every
+        replica server adopts the same resulting array — the plan's
+        pattern memo (seeded once by ``update_rows``) serves the whole
+        fleet, instead of each replica re-preparing its own copy.
 
-    def _loop(self) -> None:
-        while True:
-            req = self._queue.get()
-            if req is None:
-                if self._running:
-                    continue                # stray sentinel from a drain
-                break
-            batch = self._drain(req)
-            self._execute_batch(batch)
-        # drain anything left after shutdown so no client blocks forever
-        while True:
-            try:
-                req = self._queue.get_nowait()
-            except queue.Empty:
-                break
-            if req is not None:
-                self._fail(req, RuntimeError("server stopped"))
-
-    def _inputs_for(self, spec, rows: np.ndarray) -> List[Any]:
-        """Module-argument list for one executor's spec (fallback levels
-        may order arguments differently from the primary plan)."""
-        if self.is_range:
-            n_args = max(spec.query_arg, *spec.pattern_args) + 1
-            inputs: List[Any] = [None] * n_args
-            inputs[spec.query_arg] = rows
-            for pos, g in zip(spec.pattern_args, self.gallery):
-                inputs[pos] = g
-        else:
-            n_args = max(spec.query_arg, spec.pattern_arg,
-                         -1 if spec.care_arg is None
-                         else spec.care_arg) + 1
-            inputs = [None] * n_args
-            inputs[spec.query_arg] = rows
-            inputs[spec.pattern_arg] = self.gallery
-            if spec.care_arg is not None:
-                inputs[spec.care_arg] = self.care
-        return inputs
-
-    def _build_fallbacks(self) -> List[Tuple[str, Any]]:
-        """Degraded chain below the primary plan, most- to least-capable:
-        single-device (for sharded primaries) → jnp (for pallas) → jnp
-        unpacked (for packed) → IR interpreter.  Every level is an
-        ordinary plan-cache citizen compiled for the same spec/batch."""
-        from ..core.engine import CompositePlan, get_plan, module_for_spec
-        spec = self.plan.spec
-        mod = module_for_spec(spec)
-        chain: List[Tuple[str, Any]] = []
-
-        def add(name: str, **kw) -> None:
-            try:
-                p = get_plan(mod, batch=self.plan.batch, **kw)
-            except Exception:       # level not buildable here: skip it
-                return
-            if p is not None and p is not self.plan and \
-                    all(p is not e for _, e in chain):
-                chain.append((name, p))
-
-        if isinstance(self.plan, CompositePlan):
-            # composite primaries degrade to the *exact* flat search
-            # first — module_for_spec resolved the flat equivalent above
-            add("jnp-flat", backend="jnp", pack=self.plan.packed,
-                shards=self.plan.shards)
-        if self.plan.shards > 1:
-            add("jnp-single", backend="jnp", pack=self.plan.packed)
-        if self.plan.backend == "pallas":
-            add("jnp", backend="jnp", pack=self.plan.packed)
-        if self.plan.packed:
-            add("jnp-unpacked", backend="jnp", pack=False)
-        chain.append(("interpreter", _InterpreterExecutor(spec)))
-        return chain
-
-    def _levels(self) -> List[Tuple[str, Any]]:
-        with self._lock:
-            if self._fallbacks is None:
-                self._fallbacks = self._build_fallbacks()
-            fallbacks = self._fallbacks
-        return [("primary", self.plan)] + fallbacks
-
-    def _dispatch_resilient(self, rows: np.ndarray) -> Tuple[Any, Any]:
-        """Dispatch with retry, breaker, and degraded fallback.
-
-        Walks the level chain (skipping the primary while the breaker
-        is open), giving each level ``max_retries`` extra attempts with
-        exponential backoff.  Returns ``(executor, pending)`` from the
-        first level that accepts the dispatch; raises the last error
-        only when *every* level (including the interpreter) failed.
+        Validated like the constructor's ``gallery`` argument and
+        applied under the writer side of the gallery lock (in-flight
+        batches finish on the old version; every later batch sees the
+        new one).  The care mask is fixed.  ``rows_updated`` is
+        telemetry only.
         """
-        levels = self._levels()
-        start = 0
-        if not self._breaker.allow_primary():
-            start = 1
-            with self._lock:
-                self.stats["breaker_skips"] += 1
-        last: Optional[BaseException] = None
-        for li in range(start, len(levels)):
-            name, ex = levels[li]
-            primary = li == 0
-            for attempt in range(self._max_retries + 1):
-                try:
-                    if self._fault_injector is not None:
-                        self._fault_injector(name)
-                    pending = ex.dispatch(*self._inputs_for(ex.spec, rows),
-                                          faults=self._faults)
-                except BaseException as e:      # noqa: BLE001 — retried
-                    last = e
-                    if primary:
-                        self._breaker.record_failure()
-                    with self._lock:
-                        self.stats["backend_errors"] += 1
-                    if attempt < self._max_retries:
-                        with self._lock:
-                            self.stats["retries"] += 1
-                        if self._backoff_s:
-                            time.sleep(self._backoff_s * (2 ** attempt))
-                    continue
-                if primary:
-                    self._breaker.record_success()
-                else:
-                    with self._lock:
-                        self.stats["degraded_batches"] += 1
-                return ex, pending
-        raise last if last is not None else RuntimeError("no dispatch level")
-
-    def _execute_batch(self, batch: Sequence[SearchRequest]) -> None:
-        """Dispatch one coalesced batch; the device result (async jax
-        arrays) goes to the completion thread, so the batcher is free to
-        coalesce and dispatch the next batch immediately."""
-        # expire dead-on-arrival requests first: a missed deadline costs
-        # a TimeoutError, never the rest of the batch's slot
-        now = time.perf_counter()
-        live = []
-        for r in batch:
-            if r.deadline is not None and now > r.deadline:
-                self._fail_timeout(r)
-            else:
-                live.append(r)
-        if not live:
-            return
-        batch = live
-        # reader side of the gallery lock: the whole read-gallery +
-        # dispatch sequence sees exactly one gallery version, and a
-        # waiting update_gallery writer gets in before the *next* batch
-        self._gallery_lock.acquire_read()
+        stored = _coerce_stored(self.plan, self.is_range, gallery)
+        self._gallery_lock.acquire_write()
         try:
-            rows = np.concatenate([r.queries for r in batch], axis=0)
-            executor, pending = self._dispatch_resilient(rows)
-        except BaseException as e:          # noqa: BLE001 — fanned out
-            for r in batch:
-                self._fail(r, e)
-            return
+            self.gallery = stored
+            self._stats.bump(gallery_updates=1,
+                             rows_updated=int(rows_updated))
         finally:
-            self._gallery_lock.release_read()
-        with self._lock:
-            self.stats["batches"] += 1
-            self.stats["batched_rows"] += rows.shape[0]
-        self._put_completion((batch, executor, pending, rows))
-
-    def _put_completion(self, item: Tuple[Any, ...]) -> None:
-        """Backpressured hand-off that cannot hang shutdown: the put
-        polls so a dead completion thread fails the batch instead of
-        blocking the batcher (and therefore ``stop()``) forever."""
-        while True:
-            try:
-                self._completions.put(item, timeout=0.05)
-                return
-            except queue.Full:
-                if not self._completer_alive:
-                    for r in item[0]:
-                        self._fail(r, RuntimeError(
-                            "completion thread is not running"))
-                    return
-
-    def _rescue(self, batch: Sequence[SearchRequest], rows: np.ndarray,
-                failed: Any):
-        """Synchronous finalize-failure recovery in the completion
-        thread: re-run the batch through the levels below the one that
-        failed (under the gallery read lock, so the retry still sees
-        one gallery version)."""
-        levels = self._levels()
-        idx = next((i for i, (_, ex) in enumerate(levels)
-                    if ex is failed), -1)
-        self._gallery_lock.acquire_read()
-        try:
-            for name, ex in levels[idx + 1:]:
-                try:
-                    if self._fault_injector is not None:
-                        self._fault_injector(name)
-                    pending = ex.dispatch(
-                        *self._inputs_for(ex.spec, rows),
-                        faults=self._faults)
-                    out = ex.finalize(pending)
-                except BaseException:       # noqa: BLE001 — next level
-                    with self._lock:
-                        self.stats["backend_errors"] += 1
-                    continue
-                with self._lock:
-                    self.stats["degraded_batches"] += 1
-                return out
-        finally:
-            self._gallery_lock.release_read()
-        return None
-
-    def _completion_loop(self) -> None:
-        self._completer_alive = True
-        try:
-            while True:
-                item = self._completions.get()
-                if item is None:
-                    break
-                self._complete_one(item)
-        finally:
-            self._completer_alive = False
-
-    def _complete_one(self, item: Tuple[Any, ...]) -> None:
-        batch, executor, pending, rows_arr = item
-        rows = rows_arr.shape[0]
-        try:
-            out = executor.finalize(pending)
-        except BaseException as e:          # noqa: BLE001 — rescued
-            if executor is self.plan:
-                self._breaker.record_failure()
-            with self._lock:
-                self.stats["backend_errors"] += 1
-            out = self._rescue(batch, rows_arr, executor)
-            if out is None:
-                for r in batch:
-                    self._fail(r, e)
-                return
-        if self.is_range:
-            matches = np.asarray(out).reshape(rows, -1)
-            values = indices = None
-        else:
-            values, indices = out
-            # finalize shapes outputs for the *compiled module* (which
-            # may have been traced with 1-D or stacked queries); the
-            # scatter below is strictly row-major
-            values = np.asarray(values).reshape(rows, -1)
-            indices = np.asarray(indices).reshape(rows, -1)
-        now = time.perf_counter()
-        off = 0
-        with self._lock:
-            self.stats["requests"] += len(batch)
-            self.stats["queries"] += rows
-        for r in batch:
-            m = r.queries.shape[0]
-            if r.deadline is not None and now > r.deadline:
-                # result arrived, but past the budget: a miss, not a
-                # late delivery the client already gave up on
-                off += m
-                self._fail_timeout(r)
-                continue
-            if self.is_range:
-                r.result.matches = matches[off:off + m]
-            else:
-                r.result.values = values[off:off + m]
-                r.result.indices = indices[off:off + m]
-            r.result.completed_at = now
-            off += m
-            with self._lock:
-                self._latencies.append(r.result.latency_s)
-            r._done.set()
-
-    def _fail(self, req: SearchRequest, err: BaseException) -> None:
-        req.result.error = err
-        req.result.completed_at = time.perf_counter()
-        with self._lock:
-            self.stats["errors"] += 1
-        req._done.set()
-
-    def _fail_timeout(self, req: SearchRequest) -> None:
-        req.result.error = TimeoutError(
-            f"request {req.rid} missed its deadline")
-        req.result.completed_at = time.perf_counter()
-        with self._lock:
-            self.stats["deadline_misses"] += 1
-        req._done.set()
+            self._gallery_lock.release_write()
 
     # -- telemetry ---------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:
         """Point-in-time stats: throughput-ready counters plus latency
         percentiles (over a bounded recent window) and the mean batch
-        fill (rows per launched batch)."""
-        with self._lock:
-            lat = sorted(self._latencies)
-            out = dict(self.stats)
+        fill (rows per launched batch).  The counters are one
+        consistent view — every related group was updated atomically
+        and the whole copy is taken in one lock acquisition."""
+        out, lat = self._stats.view()
         out["avg_batch_fill"] = (out["batched_rows"] / out["batches"]
                                  if out["batches"] else 0.0)
-        if lat:
-            out["p50_ms"] = 1e3 * lat[len(lat) // 2]
-            out["p95_ms"] = 1e3 * lat[min(len(lat) - 1,
-                                          int(len(lat) * 0.95))]
+        out.update(ServerStats.percentiles(lat))
         spec = self.plan.spec
+        plan_counters = self.plan.counters()
         out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
                        "backend": self.plan.backend,
                        "packed": self.plan.packed,
                        "family": self.plan.family,
                        "ternary": getattr(spec, "care_arg", None) is not None,
                        "metric": spec.metric,
-                       "executions": self.plan.executions,
-                       "chunks_run": self.plan.chunks_run,
-                       "row_updates": self.plan.row_updates,
+                       "executions": plan_counters["executions"],
+                       "chunks_run": plan_counters["chunks_run"],
+                       "row_updates": plan_counters["row_updates"],
                        "row_update_fallbacks":
-                           self.plan.row_update_fallbacks}
+                           plan_counters["row_update_fallbacks"]}
         if self.is_range:
             out["plan"]["mode"] = spec.mode
         else:
@@ -1006,8 +550,8 @@ class CamSearchServer:
         ``"degraded"`` once the breaker is open or any batch has been
         served by a fallback level.
         """
+        st, _ = self._stats.view()
         with self._lock:
-            st = dict(self.stats)
             fallbacks = self._fallbacks
         br = self._breaker.snapshot()
         misses = st["deadline_misses"]

@@ -157,6 +157,42 @@ class TestEngineKnobsAreStrict:
         with pytest.raises(ValueError, match="REPRO_SERVE_DEADLINE_MS"):
             CamSearchServer(plan, p)
 
+    def test_tenant_knobs_garbage_fails_at_registration(self, monkeypatch):
+        from repro.serving import CamServingGateway
+        gw = CamServingGateway(maint_ms=0.0)
+        monkeypatch.setenv("REPRO_TENANT_RATE", "plenty")
+        with pytest.raises(ValueError, match="REPRO_TENANT_RATE"):
+            gw.register_tenant("t", object(), object())
+        monkeypatch.delenv("REPRO_TENANT_RATE")
+        monkeypatch.setenv("REPRO_TENANT_QUEUE", "0")
+        with pytest.raises(ValueError, match="REPRO_TENANT_QUEUE"):
+            gw.register_tenant("t", object(), object())
+
+    def test_replica_knobs_garbage_fails_at_registration(
+            self, monkeypatch, rng):
+        from repro.core import ArchSpec, get_plan
+        from repro.serving import CamServingGateway
+        from test_engine import _data, _sim_module
+
+        mod = _sim_module("dot", 2, True, 4, 16, 16,
+                          ArchSpec(rows=8, cols=16))
+        plan = get_plan(mod)
+        _, p = _data(rng, "dot", 4, 16, 16)
+        gw = CamServingGateway(maint_ms=0.0)
+        monkeypatch.setenv("REPRO_SERVE_REPLICAS", "many")
+        with pytest.raises(ValueError, match="REPRO_SERVE_REPLICAS"):
+            gw.register_tenant("t", plan, p)
+        monkeypatch.delenv("REPRO_SERVE_REPLICAS")
+        monkeypatch.setenv("REPRO_SERVE_UNHEALTHY_K", "0")
+        with pytest.raises(ValueError, match="REPRO_SERVE_UNHEALTHY_K"):
+            gw.register_tenant("t", plan, p)
+
+    def test_gateway_maint_garbage_fails_at_construction(self, monkeypatch):
+        from repro.serving import CamServingGateway
+        monkeypatch.setenv("REPRO_SERVE_MAINT_MS", "often")
+        with pytest.raises(ValueError, match="REPRO_SERVE_MAINT_MS"):
+            CamServingGateway()
+
     def test_tiny_cells_garbage_raises(self, monkeypatch):
         from repro.core.engine.cache import _tiny_plan
         from test_plan_cache_keys import _sim_specs
@@ -195,6 +231,7 @@ class TestBenchGatesUseEnvcfg:
         ("REPRO_FOREST_GATE", "benchmarks.bench_forest", 2.0),
         ("REPRO_PACKED_GATE", "benchmarks.bench_packed", 4.0),
         ("REPRO_HDC_GATE", "benchmarks.bench_hdc", 3.0),
+        ("REPRO_MULTITENANT_GATE", "benchmarks.bench_multitenant", 2.0),
     ])
     def test_gate_semantics(self, monkeypatch, var, loader, auto):
         import importlib

@@ -533,3 +533,96 @@ def test_stop_does_not_hang_with_dead_completer_and_full_queue(
         res = r.wait(timeout=10)
         assert res.error is not None           # failed, never stranded
     assert srv._thread is None and srv._completer is None
+
+
+# -- stats consistency (the snapshot/health atomicity regression) -----------
+
+class TestStatsConsistency:
+    """``snapshot()``/``health()`` must read a *consistent* view: every
+    related counter group lands atomically, so no reader can observe a
+    half-applied update (the historical bug: each ``stats[k] += 1``
+    took its own lock acquisition)."""
+
+    def test_serverstats_multi_key_bump_is_atomic(self):
+        from repro.serving import ServerStats
+        stats = ServerStats("a", "b", window=64)
+        stop = threading.Event()
+        torn = []
+
+        def writer():
+            while not stop.is_set():
+                stats.bump(a=1, b=2)       # invariant: b == 2a, always
+
+        def reader():
+            while not stop.is_set():
+                c, _ = stats.view()
+                if c["b"] != 2 * c["a"]:
+                    torn.append(dict(c))
+                    return
+
+        writers = [threading.Thread(target=writer) for _ in range(4)]
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for t in writers + readers:
+            t.start()
+        time.sleep(0.4)
+        stop.set()
+        for t in writers + readers:
+            t.join(10)
+        assert not torn, f"torn read observed: {torn[:3]}"
+        c, lat = stats.view()
+        assert c["b"] == 2 * c["a"] and c["a"] > 0
+
+    def test_serverstats_rejects_unknown_counter(self):
+        from repro.serving import ServerStats
+        stats = ServerStats("a")
+        with pytest.raises(KeyError, match="typo"):
+            stats.bump(typo=1)
+        assert stats.view()[0] == {"a": 0}
+
+    def test_live_snapshot_invariants_under_concurrency(self, compiled,
+                                                        rng):
+        """Hammer a live server from worker threads while snapshotting:
+        every snapshot must satisfy the cross-counter invariants (a
+        request is never visible without its rows, the latency window
+        never exceeds delivered requests)."""
+        prog, gallery = compiled
+        q = rng.standard_normal((3, 64)).astype(np.float32)
+        violations = []
+        stop = threading.Event()
+
+        with CamSearchServer(prog, gallery, max_wait_ms=0.5) as srv:
+            def client():
+                while not stop.is_set():
+                    srv.search(q)
+
+            def observer():
+                while not stop.is_set():
+                    counts, lat = srv._stats.view()
+                    snap = srv.snapshot()
+                    for src in (counts, snap):
+                        if src["queries"] != 3 * src["requests"]:
+                            violations.append(
+                                ("rows", src["requests"], src["queries"]))
+                    if len(lat) > counts["requests"]:
+                        violations.append(
+                            ("latency", len(lat), counts["requests"]))
+                    if counts["batched_rows"] < \
+                            counts["queries"] - 3 * 64:
+                        # batched rows may run AHEAD of delivered
+                        # queries, never meaningfully behind
+                        violations.append(
+                            ("batch", counts["batched_rows"],
+                             counts["queries"]))
+
+            clients = [threading.Thread(target=client) for _ in range(4)]
+            obs = [threading.Thread(target=observer) for _ in range(2)]
+            for t in clients + obs:
+                t.start()
+            time.sleep(0.8)
+            stop.set()
+            for t in clients + obs:
+                t.join(10)
+            final = srv.stats
+        assert not violations, violations[:5]
+        assert final["requests"] > 0
+        assert final["queries"] == 3 * final["requests"]
