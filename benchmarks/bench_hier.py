@@ -11,12 +11,21 @@ ways:
   only those clusters' tiles.
 
 For each ``nprobe`` in the sweep the recall against the flat oracle's
-top-k and the wall-clock speedup are recorded.  Writes
-``BENCH_hier.json``; the gate is the *tuned* operating point — the
-smallest swept ``nprobe`` whose recall clears ``RECALL_FLOOR`` (0.95)
-must beat the flat plan by ``REPRO_HIER_GATE`` (``auto`` -> 3.0, any
-float overrides, ``0``/``off`` disables).  Bit-identity at
-``nprobe == clusters`` is pinned by the test suite
+top-k, the wall-clock speedup, and a trace-derived coarse/probe stage
+breakdown (``repro.obs`` spans) are recorded.  Writes
+``BENCH_hier.json``; two gates:
+
+* **tuned** — the smallest swept ``nprobe`` whose recall clears
+  ``RECALL_FLOOR`` (0.95) must beat the flat plan by
+  ``REPRO_HIER_GATE`` (``auto`` -> 3.0, any float overrides,
+  ``0``/``off`` disables);
+* **wide** — the widest swept ``nprobe`` must not *lose* to the flat
+  plan (``REPRO_HIER_WIDE_GATE``, ``auto`` -> 1.0).  Before the
+  occupancy-bounded probe budget (the fix the roofline report drove)
+  nprobe=16 ran at 0.82x — uniform tiles-per-cluster padding made the
+  fine gather touch ~1.8x the steps the occupancy distribution needs.
+
+Bit-identity at ``nprobe == clusters`` is pinned by the test suite
 (``tests/test_hier.py``, ``tests/test_parity_fuzz.py``), not re-timed
 here.
 """
@@ -35,6 +44,7 @@ from repro.core.cim_dialect import (make_acquire, make_execute, make_release,
 from repro.core.engine import get_hierarchical_plan
 from repro.core.envcfg import env_gate
 from repro.core.passes import CompulsoryPartition
+from repro.obs import trace as _trace
 
 from .common import banner, save_bench_json, table
 
@@ -53,6 +63,32 @@ RECALL_FLOOR = 0.95
 
 def _gate() -> float:
     return env_gate("REPRO_HIER_GATE", 3.0)
+
+
+def _wide_gate() -> float:
+    return env_gate("REPRO_HIER_WIDE_GATE", 1.0)
+
+
+def _stage_breakdown(plan, q, g):
+    """One traced execute -> {coarse_ms, probe_ms} from the engine
+    spans (off the timed path; the recorder is cleared afterwards)."""
+    was_enabled = _trace.tracer.enabled
+    _trace.tracer.clear()
+    _trace.enable()
+    try:
+        v, i = plan.execute(q, g)
+        np.asarray(v), np.asarray(i)
+    finally:
+        if not was_enabled:
+            _trace.stop()
+    stats = _trace.span_stats()
+    out = {}
+    for span, key in (("hier.coarse", "coarse_ms"),
+                      ("hier.probe", "probe_ms")):
+        if span in stats:
+            out[key] = round(stats[span]["total_ms"], 2)
+    _trace.tracer.clear()
+    return out
 
 
 def _hamming_module(m, n, dim, k, arch):
@@ -125,21 +161,25 @@ def run():
             len(set(map(int, row)) & fs) / K
             for row, fs in zip(np.asarray(hi), flat_sets)]))
         speedup = t_flat / max(t, 1e-9)
+        stages = _stage_breakdown(plan, q, g)
         sweep[f"nprobe{nprobe}"] = {
             "nprobe": nprobe, "clusters": CLUSTERS,
             "probed_frac": round(nprobe / CLUSTERS, 4),
             "hier_ms": round(1e3 * t, 2),
             "recall": round(recall, 4),
             "speedup": round(speedup, 2),
+            "stages": stages,
         }
         rows_out.append({"nprobe": nprobe, "hier_ms": 1e3 * t,
                          "flat_ms": 1e3 * t_flat, "recall": recall,
-                         "speedup": speedup})
+                         "speedup": speedup, **stages})
     print(table(rows_out))
 
     gate = _gate()
+    wide_gate = _wide_gate()
     tuned = next((s for s in sweep.values() if s["recall"] >= RECALL_FLOOR),
                  None)
+    wide = sweep[f"nprobe{max(NPROBES)}"]
     payload = {
         "workload": {"n_gallery": N_GALLERY, "dim": DIM, "k": K,
                      "m_queries": M_QUERIES, "clusters": CLUSTERS,
@@ -151,8 +191,17 @@ def run():
         "recall_floor": RECALL_FLOOR,
         "gate": gate,
         "tuned": tuned,
+        "wide_gate": wide_gate,
+        "wide": wide,
     }
     save_bench_json("hier", payload)
+    if wide_gate:
+        assert wide["speedup"] >= wide_gate, (
+            f"hierarchical plan at the widest probe "
+            f"(nprobe={wide['nprobe']}) only {wide['speedup']:.2f}x over "
+            f"the flat plan (gate: >= {wide_gate}x) — the occupancy-"
+            f"bounded probe budget should keep the wide point ahead of "
+            f"a dense scan; see BENCH_hier.json")
     if gate:
         assert tuned is not None, (
             f"no swept nprobe reached recall >= {RECALL_FLOOR} "

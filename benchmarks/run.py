@@ -18,8 +18,9 @@ from repro.core import plan_cache_stats
 
 from . import (bench_engine, bench_faults, bench_forest, bench_hdc,
                bench_hier, bench_multitenant, bench_packed, bench_serve,
-               fig7_validation, fig8_dse, fig9_isocapacity, gpu_comparison,
-               roofline_table, table1_density, table2_knn)
+               bench_trace, fig7_validation, fig8_dse, fig9_isocapacity,
+               gpu_comparison, report_roofline, roofline_table,
+               table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -58,6 +59,15 @@ SUITES = [
     # BENCH_multitenant.json (gate REPRO_MULTITENANT_GATE, auto = 2x
     # isolation factor)
     ("multitenant_smoke", bench_multitenant.run),
+    # repro.obs tracing overhead: disabled-path cost per call site and
+    # enabled wall-clock tax; detailed record in BENCH_trace.json (gate
+    # REPRO_TRACE_GATE, auto = 1% disabled / 10% enabled)
+    ("trace_smoke", bench_trace.run),
+    # measured span timings vs the streaming-memory roofline; flags the
+    # worst under-roofline kernel stage (the ranking that drove the
+    # occupancy-bounded probe budget); detailed record in
+    # BENCH_roofline_report.json
+    ("roofline_report_smoke", report_roofline.run),
 ]
 
 

@@ -15,12 +15,12 @@ gateway's three contracts:
     PYTHONPATH=src python examples/multitenant_serve.py
 """
 
-import json
 import time
 
 import numpy as np
 
 from repro.core import ArchSpec, compile_fn
+from repro.obs import print_stats
 from repro.serving import AdmissionError, CamServingGateway
 
 
@@ -86,11 +86,12 @@ def main():
           f"prod unaffected")
 
     health = gw.health()
-    print(json.dumps({t: {"stats": e["stats"],
-                          "replicas": [r["state"]
-                                       for r in e["replicas"]["replicas"]]}
-                      for t, e in health["tenants"].items()},
-                     indent=1, default=str))
+    print_stats({t: {"stats": e["stats"],
+                     "latency": e["latency"],
+                     "replicas": [r["state"]
+                                  for r in e["replicas"]["replicas"]]}
+                 for t, e in health["tenants"].items()},
+                title="gateway health")
     gw.stop()
     print("MULTITENANT-OK")
 

@@ -6,11 +6,15 @@ client threads — the serving-layer analogue of ``examples/knn_search.py``.
 With more than one host device the gallery is sharded across the
 ``("data",)`` mesh (run with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see it).
+The served run is traced (``repro.obs``) and the Chrome-tracing
+export is written next to the temp dir — load it in Perfetto or
+``chrome://tracing`` to see the batcher/engine pipeline.
 
     PYTHONPATH=src python examples/serve_knn.py
 """
 
-import json
+import os
+import tempfile
 import threading
 
 import jax
@@ -18,6 +22,8 @@ import numpy as np
 
 from repro.core import ArchSpec, compile_fn
 from repro.data import knn_dataset
+from repro.obs import enable as enable_tracing
+from repro.obs import print_stats
 from repro.serving import CamSearchServer
 
 
@@ -45,6 +51,9 @@ def main():
     slices = np.array_split(np.arange(len(queries)), n_clients)
     preds = {}
 
+    enable_tracing()
+    trace_path = os.path.join(tempfile.gettempdir(),
+                              "serve_knn_trace.json")
     with CamSearchServer(prog, gallery, max_wait_ms=2.0) as srv:
         def client(cid):
             q = queries[slices[cid]]
@@ -60,11 +69,14 @@ def main():
         for t in threads:
             t.join()
         snap = srv.snapshot()
+        srv.dump_trace(trace_path)
 
     pred = np.concatenate([preds[c] for c in range(n_clients)])
     acc = float((pred == q_labels).mean())
     print(f"5-NN accuracy (served): {acc:.3f}")
-    print(json.dumps(snap, indent=1, default=str))
+    print_stats(snap, title="server snapshot")
+    print(f"\ntrace: {trace_path} "
+          f"(load in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

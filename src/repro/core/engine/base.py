@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs.trace import trace_span, tracer
 from ..envcfg import env_flag, env_int
 from .spec import _check_binary_cells
 
@@ -180,8 +181,11 @@ def _memoised_prepare(plan, srcs: Tuple[Any, ...], run: Callable[[], Any],
             plan.pattern_hits += 1
             plan._pattern_cache.move_to_end(key)
             return hit[-1]
-    check()
-    prepared = run()
+    with trace_span("plan.prepare",
+                    args=None if not tracer.enabled else
+                    {"plan": type(plan).__name__, "n": plan.spec.n}):
+        check()
+        prepared = run()
     with plan._pattern_lock:
         plan.pattern_misses += 1
     _memo_insert(plan, srcs, prepared, faults)
@@ -374,33 +378,38 @@ class PlanBase:
         if self.packed and spec.metric == "hamming" and \
                 not isinstance(q_src, jax.Array):
             _check_binary_cells(q_src, "queries")
-        pp = self._prepared_patterns(*srcs, faults=faults)
+        with trace_span("plan.dispatch",
+                        args=None if not tracer.enabled else
+                        {"plan": type(self).__name__,
+                         "family": self.family, "m": m,
+                         "batch": self.batch}):
+            pp = self._prepared_patterns(*srcs, faults=faults)
 
-        b = self.batch
-        chunks = []
-        if self.tiny and m <= b:
-            # tiny-plan fast path: the whole gallery is one dense tile
-            # and the query block fits one micro-batch, so the chunk
-            # loop, tail padding and result slicing are pure overhead
-            # next to the (small) search itself.  The dense executable
-            # is shape-polymorphic — it traces at the caller's m, which
-            # small-program workloads (forest inference, interactive
-            # probes) hold constant.
-            out = self._chunk_fn(q2, pp)
-            with self._stats_lock:
-                self.chunks_run += 1
-            return PendingSearch(plan=self, m=m, lead=lead,
-                                 chunks=[self._chunk_entry(out, m)])
-        for s in range(0, m, b):
-            chunk = q2[s:s + b]
-            valid = chunk.shape[0]
-            if valid < b:
-                chunk = jnp.pad(chunk, ((0, b - valid), (0, 0)))
-            out = self._chunk_fn(chunk, pp)
-            with self._stats_lock:
-                self.chunks_run += 1
-            chunks.append(self._chunk_entry(out, valid))
-        return PendingSearch(plan=self, m=m, lead=lead, chunks=chunks)
+            b = self.batch
+            chunks = []
+            if self.tiny and m <= b:
+                # tiny-plan fast path: the whole gallery is one dense
+                # tile and the query block fits one micro-batch, so the
+                # chunk loop, tail padding and result slicing are pure
+                # overhead next to the (small) search itself.  The
+                # dense executable is shape-polymorphic — it traces at
+                # the caller's m, which small-program workloads (forest
+                # inference, interactive probes) hold constant.
+                out = self._chunk_fn(q2, pp)
+                with self._stats_lock:
+                    self.chunks_run += 1
+                return PendingSearch(plan=self, m=m, lead=lead,
+                                     chunks=[self._chunk_entry(out, m)])
+            for s in range(0, m, b):
+                chunk = q2[s:s + b]
+                valid = chunk.shape[0]
+                if valid < b:
+                    chunk = jnp.pad(chunk, ((0, b - valid), (0, 0)))
+                out = self._chunk_fn(chunk, pp)
+                with self._stats_lock:
+                    self.chunks_run += 1
+                chunks.append(self._chunk_entry(out, valid))
+            return PendingSearch(plan=self, m=m, lead=lead, chunks=chunks)
 
     def execute(self, *inputs, faults=None):
         """Run the plan; accepts exactly the compiled module's arguments.
@@ -492,9 +501,13 @@ class PlanBase:
             return gj
         if self.packed and self.spec.metric == "hamming":
             _check_binary_cells(news[0], "updated rows")
-        j = jnp.asarray(idx)
-        scatter = _scatter_rows_donated if donate else _scatter_rows
-        upd = tuple(scatter(g, j, jnp.asarray(nr).astype(g.dtype))
-                    for g, nr in zip(gj, news)) + gj[len(news):]
-        self._seed_updated_memo(gj, upd, idx, donate)
-        return upd
+        with trace_span("plan.update_rows",
+                        args=None if not tracer.enabled else
+                        {"plan": type(self).__name__,
+                         "rows": int(idx.size)}):
+            j = jnp.asarray(idx)
+            scatter = _scatter_rows_donated if donate else _scatter_rows
+            upd = tuple(scatter(g, j, jnp.asarray(nr).astype(g.dtype))
+                        for g, nr in zip(gj, news)) + gj[len(news):]
+            self._seed_updated_memo(gj, upd, idx, donate)
+            return upd

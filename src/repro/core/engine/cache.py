@@ -18,6 +18,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
+from ...obs.trace import trace_span, tracer
 from ..envcfg import env_int
 from ..ir import Module
 from .base import PlanBase, _pick_batch
@@ -94,7 +95,11 @@ def _lookup_or_insert(key: Tuple, build: Callable[[], PlanBase]) -> PlanBase:
     plan = _cache_lookup(key)
     if plan is not None:
         return plan
-    return _cache_insert(key, build())
+    with trace_span("plan.compile",
+                    args=None if not tracer.enabled else
+                    {"key": repr(key[1:])}):
+        built = build()
+    return _cache_insert(key, built)
 
 
 def _tiny_plan(spec, backend: str, shards: int) -> bool:
@@ -173,6 +178,18 @@ def get_plan(module: Module, *, backend: str = "jnp",
     if plan is not None:
         return plan
     tiny = _tiny_plan(spec, backend, s)
+    with trace_span("plan.compile",
+                    args=None if not tracer.enabled else
+                    {"family": "range" if is_range else "search",
+                     "backend": backend, "batch": b, "shards": s,
+                     "packed": packed}):
+        plan = _build_leaf_plan(spec, backend, b, s, packed, tiny,
+                                is_range)
+    return _cache_insert(key, plan)
+
+
+def _build_leaf_plan(spec, backend: str, b: int, s: int, packed: bool,
+                     tiny: bool, is_range: bool) -> PlanBase:
     if is_range:
         if s > 1:
             prepare, chunk_fn, row_update = _build_range_sharded_executable(
@@ -205,7 +222,7 @@ def get_plan(module: Module, *, backend: str = "jnp",
         plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
                           packed=packed, tiny=tiny, _prepare=prepare,
                           _chunk_fn=chunk_fn, _row_update=row_update)
-    return _cache_insert(key, plan)
+    return plan
 
 
 def plan_cache_stats() -> Dict[str, int]:

@@ -58,6 +58,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
 from ...launch.mesh import make_data_mesh
+from ...obs.trace import trace_span, tracer
 from ..envcfg import env_int
 from .base import _pick_batch, _size
 from .cache import _lookup_or_insert, _normalize_shards, get_plan
@@ -150,14 +151,19 @@ def _kmeans(g: jax.Array, spec_h: HierarchicalSpec
 
 
 def _layout_from_assign(assign: np.ndarray, clusters: int, tr: int,
-                        n: int) -> Tuple[np.ndarray, np.ndarray, int]:
+                        n: int) -> Tuple[np.ndarray, np.ndarray, int,
+                                         np.ndarray]:
     """Uniform tiles-per-cluster slot layout from an assignment.
 
     Every cluster gets ``tpc = ceil(max_cluster_size / tile_rows)``
     tiles (uniform so a probe step is a static-shape gather: candidate
     tile ids are just ``cluster * tpc + j``).  Rows land in their
     cluster's slots in ascending global-id order; empty slots carry the
-    ``_SENT`` row id.  Returns ``(row_ids (T, tr), slot_of (n,), tpc)``.
+    ``_SENT`` row id.  Returns ``(row_ids (T, tr), slot_of (n,), tpc,
+    cnt (clusters,))`` where ``cnt[c]`` is the *occupied tile prefix*
+    of cluster ``c`` — k-means clusters are imbalanced, so most
+    clusters fill far fewer than ``tpc`` tiles and the probe skips the
+    all-sentinel remainder (see :func:`_probe_budget`).
     """
     counts = np.bincount(assign, minlength=clusters)
     tpc = max(1, int(-(-int(counts.max()) // tr))) if n else 1
@@ -170,7 +176,30 @@ def _layout_from_assign(assign: np.ndarray, clusters: int, tr: int,
     flat[slot] = order.astype(np.int32)
     slot_of = np.empty(n, np.int64)
     slot_of[order] = slot
-    return flat.reshape(clusters * tpc, tr), slot_of, tpc
+    cnt = (-(-counts // tr)).astype(np.int32)       # rows fill a prefix
+    return flat.reshape(clusters * tpc, tr), slot_of, tpc, cnt
+
+
+def _probe_budget(cnt: np.ndarray, nprobe: int, tpc: int) -> int:
+    """Static per-query probe-step budget: the worst case any query can
+    need is the ``nprobe`` largest occupied-tile prefixes — data
+    dependent on the *gallery* (known at prepare time), never on the
+    queries, so the probe jit stays query-shape-static.  Rounded up to
+    a multiple of 16 steps so small occupancy drift under
+    ``update_rows`` does not retrace, capped at the padded
+    ``nprobe * tpc`` it replaces.
+
+    Trace-motivated (ROADMAP item 1): at the bench geometry the
+    largest cluster forces ``tpc = 26`` while the mean occupancy is
+    ~8.5 tiles, so the padded schedule ran 416 probe steps/query where
+    the top-16 occupancy sum needs 235 — the gather, distance and
+    select stages all shrank proportionally (probe 191 ms -> 99 ms,
+    bit-identical output).
+    """
+    top = np.sort(cnt)[::-1][:nprobe]
+    nb = int(top.sum())
+    nb = -(-max(nb, 1) // 16) * 16
+    return max(1, min(nprobe * tpc, nb))
 
 
 def _leaves_from_rows(g: jax.Array, row_ids: np.ndarray,
@@ -206,6 +235,9 @@ class HierState:
     slot_of: np.ndarray                # (n,) int64 flat slot index
     row_ids_h: np.ndarray              # (T, tr) int32, host master
     tpc: int                           # tiles per cluster
+    cnt: jax.Array                     # (clusters,) occupied tile prefix
+    cnt_h: np.ndarray                  # host master of ``cnt``
+    budget: int                        # static probe steps per query
 
 
 # ---------------------------------------------------------------------------
@@ -305,11 +337,37 @@ def _composite_select(k: int, lose, exact_gids: bool):
     return by_topk
 
 
+def _step_to_tile(s, pre, nprobe: int):
+    """Map one probe step to its per-query (probe rank, tile offset).
+
+    ``pre`` (B, nprobe+1) is the per-query inclusive prefix sum of the
+    probed clusters' occupied-tile counts: step ``s`` belongs to the
+    probe rank whose prefix window contains it, at offset ``s`` minus
+    the window start.  Steps past ``pre[:, -1]`` are dead padding (the
+    static budget covers the worst-case query; most need fewer).
+    """
+    p = jnp.sum(s >= pre[:, 1:], axis=1)
+    p = jnp.minimum(p, nprobe - 1)
+    j = s - jnp.take_along_axis(pre, p[:, None], axis=1)[:, 0]
+    live = s < pre[:, -1]
+    return p, j, live
+
+
+def _probe_prefix(ci, cnt):
+    """Per-query prefix sums of the probed clusters' occupied-tile
+    counts: ``(B, nprobe+1)`` int32, leading zero column."""
+    pc = cnt[ci]
+    return jnp.concatenate(
+        [jnp.zeros((ci.shape[0], 1), jnp.int32),
+         jnp.cumsum(pc, axis=1, dtype=jnp.int32)], axis=1)
+
+
 def _probe_steps(spec_h: HierarchicalSpec, packed: bool):
     """The candidate-tile scan shared by the single-device and sharded
-    probes: ``steps(qt, gather, bsz, tpc)`` folds ``nprobe * tpc``
-    probe steps, where ``gather(s) -> (tile_leaf (B, gc, tr, X),
-    row_ids (B, tr))`` is the backend-specific candidate fetch.
+    probes: ``steps(qt, gather, bsz, total)`` folds ``total`` probe
+    steps (the occupancy budget from :func:`_probe_budget`), where
+    ``gather(s) -> (tile_leaf (B, gc, tr, X), row_ids (B, tr))`` is the
+    backend-specific candidate fetch.
 
     Steps run in *groups*: each ``lax.scan`` iteration gathers ``G``
     candidate tiles per query and folds all ``G * tile_rows``
@@ -331,8 +389,7 @@ def _probe_steps(spec_h: HierarchicalSpec, packed: bool):
     wpr = fine.grid_cols * (-(-fine.dims_per_tile // 32) if packed
                             else fine.dims_per_tile)
 
-    def run(qt, gather, bsz, tpc):
-        total = spec_h.nprobe * tpc
+    def run(qt, gather, bsz, total):
         per_tile = max(1, bsz * tr * wpr)
         g = max(1, min(total, _GROUP_BUDGET // per_tile))
         ngroups = -(-total // g)
@@ -370,24 +427,36 @@ def _probe_steps(spec_h: HierarchicalSpec, packed: bool):
 
 
 def _hier_probe(spec_h: HierarchicalSpec, packed: bool):
-    """Single-device fine probe: ``probe(q, ci, leaf, rid, tpc)`` ->
-    logical ``(values, indices)``.  ``tpc`` is static (the jit retraces
-    when an overflow re-layout changes the tiles-per-cluster)."""
+    """Single-device fine probe: ``probe(q, ci, leaf, rid, cnt, tpc,
+    budget)`` -> logical ``(values, indices)``.  ``tpc`` and ``budget``
+    are static (the jit retraces when an overflow re-layout changes the
+    tiles-per-cluster, or occupancy drift moves the bucketed budget).
+
+    Each step probes one *occupied* tile of one probed cluster: the
+    per-query prefix map (:func:`_step_to_tile`) packs the ragged
+    per-cluster tile lists into a dense static schedule, so imbalanced
+    clusters no longer pay the padded worst case.
+    """
     fine = spec_h.fine
+    nprobe = spec_h.nprobe
     _, to_logical, _ = _metric_values(fine.metric, fine.largest)
     run = _probe_steps(spec_h, packed)
 
-    def probe(q, ci, leaf, rid, tpc):
+    def probe(q, ci, leaf, rid, cnt, tpc, budget):
         qt = _layout_queries(q, fine, packed)
+        pre = _probe_prefix(ci, cnt)
 
         def gather(s):
-            tile = jnp.take(ci, s // tpc, axis=1) * tpc + (s % tpc)
-            return leaf[tile], rid[tile]
+            p, j, live = _step_to_tile(s, pre, nprobe)
+            c = jnp.take_along_axis(ci, p[:, None], axis=1)[:, 0]
+            tile = jnp.clip(c * tpc + j, 0, leaf.shape[0] - 1)
+            rg = jnp.where(live[:, None], rid[tile], _SENT)
+            return leaf[tile], rg
 
-        kd, kg = run(qt, gather, q.shape[0], tpc)
+        kd, kg = run(qt, gather, q.shape[0], budget)
         return to_logical(kd, float(fine.dim)), kg
 
-    return jax.jit(probe, static_argnums=4)
+    return jax.jit(probe, static_argnums=(5, 6))
 
 
 def _hier_probe_sharded(spec_h: HierarchicalSpec, packed: bool,
@@ -397,36 +466,41 @@ def _hier_probe_sharded(spec_h: HierarchicalSpec, packed: bool,
     sentinels) and emits its own (B, k) candidate list; the cross-shard
     composite-key merge happens host-side in :func:`_merge_hier_shards`."""
     fine = spec_h.fine
+    nprobe = spec_h.nprobe
     _, to_logical, _ = _metric_values(fine.metric, fine.largest)
     run = _probe_steps(spec_h, packed)
 
-    def probe(q, ci, leaf, rid, tpc):
+    def probe(q, ci, leaf, rid, cnt, tpc, budget):
         qt = _layout_queries(q, fine, packed)
         bsz = q.shape[0]
 
-        def local(qt_l, ci_l, leaf_l, rid_l):
+        def local(qt_l, ci_l, leaf_l, rid_l, cnt_l):
             d = jax.lax.axis_index("data")
             tps = leaf_l.shape[0]
+            pre = _probe_prefix(ci_l, cnt_l)
 
             def gather(s):
-                tile = jnp.take(ci_l, s // tpc, axis=1) * tpc + (s % tpc)
+                p, j, live = _step_to_tile(s, pre, nprobe)
+                c = jnp.take_along_axis(ci_l, p[:, None], axis=1)[:, 0]
+                tile = c * tpc + j
                 loc = tile - d * tps
-                inr = (loc >= 0) & (loc < tps)
+                inr = live & (loc >= 0) & (loc < tps)
                 locc = jnp.clip(loc, 0, tps - 1)
                 rg = jnp.where(inr[:, None], rid_l[locc], _SENT)
                 return leaf_l[locc], rg
 
-            kd, kg = run(qt_l, gather, bsz, tpc)
+            kd, kg = run(qt_l, gather, bsz, budget)
             return to_logical(kd, float(fine.dim))[None], kg[None]
 
         return shard_map(
             local, mesh=mesh,
             in_specs=(PartitionSpec(), PartitionSpec(),
-                      PartitionSpec("data"), PartitionSpec("data")),
+                      PartitionSpec("data"), PartitionSpec("data"),
+                      PartitionSpec()),
             out_specs=(PartitionSpec("data"), PartitionSpec("data")),
-            check_rep=False)(qt, ci, leaf, rid)              # (S, B, k)
+            check_rep=False)(qt, ci, leaf, rid, cnt)         # (S, B, k)
 
-    return jax.jit(probe, static_argnums=4)
+    return jax.jit(probe, static_argnums=(5, 6))
 
 
 def _merge_hier_shards(values, indices, *, k: int,
@@ -492,12 +566,14 @@ def _build_hier_executable(spec_h: HierarchicalSpec, coarse: SearchPlan,
                 jax.device_put(jnp.asarray(rid), placement))
 
     def fresh_state(g, cent_src, cpp, assign):
-        row_h, slot_of, tpc = _layout_from_assign(
+        row_h, slot_of, tpc, cnt_h = _layout_from_assign(
             assign, spec_h.clusters, tr, fine.n)
         leaves, rid = materialise(g, row_h)
         return HierState(centroid_src=cent_src, coarse_prepared=cpp,
                          leaves=leaves, row_ids=rid, assign=assign,
-                         slot_of=slot_of, row_ids_h=row_h, tpc=tpc)
+                         slot_of=slot_of, row_ids_h=row_h, tpc=tpc,
+                         cnt=jnp.asarray(cnt_h), cnt_h=cnt_h,
+                         budget=_probe_budget(cnt_h, spec_h.nprobe, tpc))
 
     def prepare(gallery):
         g = jnp.asarray(gallery)
@@ -507,8 +583,22 @@ def _build_hier_executable(spec_h: HierarchicalSpec, coarse: SearchPlan,
         return fresh_state(g, cent_src, cpp, assign)
 
     def chunk_fn(q, hs):
-        _, ci = coarse._chunk_fn(q, hs.coarse_prepared)
-        return probe(q, ci, hs.leaves[0], hs.row_ids, hs.tpc)
+        # under tracing each stage blocks on its device result so the
+        # span durations attribute real stage time instead of jax's
+        # async dispatch latency (the stages are data-dependent anyway,
+        # so blocking costs pipelining only across chunk boundaries)
+        with trace_span("hier.coarse"):
+            _, ci = coarse._chunk_fn(q, hs.coarse_prepared)
+            if tracer.enabled:
+                ci.block_until_ready()
+        with trace_span("hier.probe",
+                        args=None if not tracer.enabled else
+                        {"budget": hs.budget, "tpc": hs.tpc}):
+            out = probe(q, ci, hs.leaves[0], hs.row_ids, hs.cnt,
+                        hs.tpc, hs.budget)
+            if tracer.enabled:
+                jax.block_until_ready(out)
+            return out
 
     # -- incremental row update -------------------------------------------
 
@@ -552,9 +642,11 @@ def _build_hier_executable(spec_h: HierarchicalSpec, coarse: SearchPlan,
         flat = row_h.reshape(-1)
         cap = hs.tpc * tr
         touched = set((slot_of[idxa] // tr).tolist())
+        moved_clusters = set()
         overflow = False
         for r, c_new in zip(idxa.tolist(), a_new.tolist()):
-            if c_new == int(assign[r]):
+            c_old = int(assign[r])
+            if c_new == c_old:
                 continue                      # content change, same cluster
             s_old = int(slot_of[r])
             flat[s_old] = _SENT               # vacate the old slot
@@ -569,6 +661,8 @@ def _build_hier_executable(spec_h: HierarchicalSpec, coarse: SearchPlan,
             assign[r] = c_new
             touched.add(s_old // tr)
             touched.add(s_new // tr)
+            moved_clusters.add(c_old)
+            moved_clusters.add(c_new)
         if overflow:
             # the moved row's cluster is full: rebuild the whole layout
             # with the SAME centroids and a fresh uniform tpc.  Slot
@@ -584,10 +678,24 @@ def _build_hier_executable(spec_h: HierarchicalSpec, coarse: SearchPlan,
         leaves = fn(tuple(hs.leaves), rid, g_new, tiles)
         if placement is not None:
             leaves = tuple(jax.device_put(x, placement) for x in leaves)
+        # occupancy maintenance: a moved row can extend its new
+        # cluster's occupied prefix or (with holes filled later) let an
+        # old one shrink — recompute the prefix for touched clusters
+        # from the highest occupied slot, so probing [0, cnt) always
+        # covers every live row
+        cnt_h, cnt, budget = hs.cnt_h, hs.cnt, hs.budget
+        if moved_clusters:
+            cnt_h = cnt_h.copy()
+            for c in moved_clusters:
+                occ = np.flatnonzero(flat[c * cap:(c + 1) * cap] != _SENT)
+                cnt_h[c] = 0 if occ.size == 0 else int(occ[-1]) // tr + 1
+            cnt = jnp.asarray(cnt_h)
+            budget = _probe_budget(cnt_h, spec_h.nprobe, hs.tpc)
         return HierState(centroid_src=hs.centroid_src,
                          coarse_prepared=hs.coarse_prepared,
                          leaves=leaves, row_ids=rid, assign=assign,
-                         slot_of=slot_of, row_ids_h=row_h, tpc=hs.tpc)
+                         slot_of=slot_of, row_ids_h=row_h, tpc=hs.tpc,
+                         cnt=cnt, cnt_h=cnt_h, budget=budget)
 
     return prepare, chunk_fn, row_update
 
@@ -620,6 +728,10 @@ class HierarchicalPlan(CompositePlan):
     def finalize(self, pending):
         """SearchPlan-shaped finalize with the hierarchical shard merge
         (composite-key lexsort instead of the shard-order value sort)."""
+        with trace_span("plan.finalize"):
+            return self._finalize(pending)
+
+    def _finalize(self, pending):
         spec = self.spec
         xp = np if self.shards > 1 else jnp
         vs, is_ = [], []

@@ -16,6 +16,7 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs.trace import trace_span
 from .base import PendingSearch, PlanBase, _size
 from .executables import merge_shard_candidates
 
@@ -46,6 +47,10 @@ class SearchPlan(PlanBase):
     def finalize(self, pending: "PendingSearch"):
         """Materialise a dispatched search: cross-shard merge (sharded
         plans), ragged-tail slicing, chunk concatenation, output shaping."""
+        with trace_span("plan.finalize"):
+            return self._finalize(pending)
+
+    def _finalize(self, pending: "PendingSearch"):
         spec = self.spec
         xp = np if self.shards > 1 else jnp
         vs, is_ = [], []
@@ -134,6 +139,10 @@ class RangePlan(PlanBase):
         matrix: concatenate per-shard slices (shard order == ascending
         global row order — no tournament), drop padded rows/chunks,
         shape for the compiled module."""
+        with trace_span("plan.finalize"):
+            return self._finalize(pending)
+
+    def _finalize(self, pending: "PendingSearch"):
         spec = self.spec
         xp = np if self.shards > 1 else jnp
         outs = []

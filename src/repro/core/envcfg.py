@@ -18,6 +18,7 @@ from typing import Optional, Sequence, Tuple
 
 __all__ = [
     "env_flag", "env_int", "env_float", "env_choice", "env_gate",
+    "env_path",
 ]
 
 #: accepted spellings for boolean-ish flags (case-insensitive)
@@ -96,6 +97,19 @@ def env_choice(name: str, default: str, choices: Sequence[str]) -> str:
     if v not in choices:
         raise _bad(name, raw, "one of " + "/".join(choices))
     return v
+
+
+def env_path(name: str, default: Optional[str] = None) -> Optional[str]:
+    """Filesystem-path knob.  An empty or whitespace-only value is a
+    shell quoting accident (``REPRO_TRACE= python ...``), not a request
+    to write to ``""`` — it raises rather than silently disabling or
+    producing an unopenable path."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    if not raw.strip():
+        raise _bad(name, raw, "a non-empty filesystem path")
+    return raw
 
 
 def env_gate(name: str, auto: float) -> float:

@@ -1,0 +1,18 @@
+"""Observability: execution tracing and telemetry rendering.
+
+``repro.obs`` is deliberately a leaf package: it imports only
+``repro.core.envcfg`` so the engine, serving layer and gateway can all
+emit spans without import cycles.  See ``docs/observability.md`` for
+the span taxonomy and a Perfetto walkthrough.
+"""
+
+from .trace import (TraceRecorder, configure_from_env, dump, enable,
+                    instant, span_stats, stop, to_chrome, trace_begin,
+                    trace_span, tracer)
+from .pretty import format_stats, print_stats
+
+__all__ = [
+    "TraceRecorder", "tracer", "enable", "stop", "configure_from_env",
+    "trace_span", "trace_begin", "instant", "to_chrome", "dump",
+    "span_stats", "format_stats", "print_stats",
+]

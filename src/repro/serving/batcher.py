@@ -19,6 +19,7 @@ from typing import Any, List, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.trace import trace_begin, trace_span, tracer
 from .telemetry import SearchRequest
 
 __all__ = ["_BatcherMixin"]
@@ -30,6 +31,7 @@ class _BatcherMixin:
     def _drain(self, first: SearchRequest) -> List[SearchRequest]:
         """Coalesce pending requests after ``first`` into one batch:
         up to ``max_batch`` rows, lingering at most ``max_wait``."""
+        fill = trace_begin("batch.fill", "serving")
         batch = [first]
         rows = first.queries.shape[0]
         deadline = time.perf_counter() + self.max_wait
@@ -46,6 +48,8 @@ class _BatcherMixin:
                 break
             batch.append(req)
             rows += req.queries.shape[0]
+        if fill is not None:
+            fill.end({"rows": int(rows), "requests": len(batch)})
         return batch
 
     def _loop(self) -> None:
@@ -102,13 +106,17 @@ class _BatcherMixin:
         if not live:
             return
         batch = live
+        bid = next(self._batch_ids)
         # reader side of the gallery lock: the whole read-gallery +
         # dispatch sequence sees exactly one gallery version, and a
         # waiting update_gallery writer gets in before the *next* batch
         self._gallery_lock.acquire_read()
         try:
-            rows = np.concatenate([r.queries for r in batch], axis=0)
-            executor, pending = self._dispatch_resilient(rows)
+            with trace_span("batch.dispatch", "serving",
+                            args=None if not tracer.enabled else
+                            {"batch": bid, "requests": len(batch)}):
+                rows = np.concatenate([r.queries for r in batch], axis=0)
+                executor, pending = self._dispatch_resilient(rows)
             err = None
         except BaseException as e:          # noqa: BLE001 — fanned out
             err = e
@@ -124,8 +132,14 @@ class _BatcherMixin:
             for r in batch:
                 self._fail(r, err)
             return
+        now = time.perf_counter()
+        for r in batch:
+            r.result.dispatched_at = now
+            if r._tspan is not None:
+                # closes the queue-wait window: submit -> this dispatch
+                r._tspan.lap("request.queue_wait", {"batch": bid})
         self._stats.bump(batches=1, batched_rows=rows.shape[0])
-        self._put_completion((batch, executor, pending, rows))
+        self._put_completion((batch, executor, pending, rows, bid))
 
     def _put_completion(self, item: Tuple[Any, ...]) -> None:
         """Backpressured hand-off that cannot hang shutdown: the put
@@ -154,10 +168,13 @@ class _BatcherMixin:
             self._completer_alive = False
 
     def _complete_one(self, item: Tuple[Any, ...]) -> None:
-        batch, executor, pending, rows_arr = item
+        batch, executor, pending, rows_arr, bid = item
         rows = rows_arr.shape[0]
         try:
-            out = executor.finalize(pending)
+            with trace_span("batch.finalize", "serving",
+                            args=None if not tracer.enabled else
+                            {"batch": bid, "rows": rows}):
+                out = executor.finalize(pending)
         except BaseException as e:          # noqa: BLE001 — rescued
             if executor is self.plan:
                 self._breaker.record_failure()
@@ -197,13 +214,21 @@ class _BatcherMixin:
             # one bump per delivered request: a snapshot can never see
             # the request counted without its rows and latency sample
             self._stats.bump(_latency_s=r.result.latency_s,
+                             _queue_s=r.result.queue_wait_s,
+                             _service_s=r.result.service_s,
                              requests=1, queries=m)
+            if r._tspan is not None:
+                # dispatch -> delivery window, then the whole request
+                r._tspan.lap("request.service", {"batch": bid})
+                r._tspan.end()
             r._settle()
 
     def _fail(self, req: SearchRequest, err: BaseException) -> None:
         req.result.error = err
         req.result.completed_at = time.perf_counter()
         self._stats.bump(errors=1)
+        if req._tspan is not None:
+            req._tspan.end({"error": type(err).__name__})
         req._settle()
 
     def _fail_timeout(self, req: SearchRequest) -> None:
@@ -211,4 +236,6 @@ class _BatcherMixin:
             f"request {req.rid} missed its deadline")
         req.result.completed_at = time.perf_counter()
         self._stats.bump(deadline_misses=1)
+        if req._tspan is not None:
+            req._tspan.end({"error": "TimeoutError"})
         req._settle()

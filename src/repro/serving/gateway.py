@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.envcfg import env_float
+from ..obs.trace import instant, trace_begin, tracer
 from .replica import Replica, ReplicaSet
 from .resilience import _CircuitBreaker
 from .server import _validate_queries
@@ -97,6 +98,9 @@ class GatewayRequest:
     attempts: int = 0
     #: replica incarnations already tried (failover skips them)
     tried: set = field(default_factory=set)
+    #: cross-thread trace handle (``repro.obs.trace_begin``); ``None``
+    #: when tracing is disabled
+    _tspan: Any = None
     _done: threading.Event = field(default_factory=threading.Event)
 
     def wait(self, timeout: Optional[float] = None) -> GatewayResult:
@@ -121,6 +125,11 @@ class GatewayRequest:
         self.result.matches = matches
         self.result.replica = replica
         self.result.completed_at = time.perf_counter()
+        if self._tspan is not None:
+            self._tspan.end(
+                {"error": type(error).__name__} if error is not None
+                else {"replica": replica,
+                      "failovers": self.result.failovers})
         self._done.set()
 
 
@@ -288,10 +297,14 @@ class CamServingGateway:
         t.stats.bump(submitted=1)
         if not t.breaker.allow_primary():
             t.stats.bump(rejected_breaker=1)
+            instant("gw.reject", "gateway",
+                    {"reason": "breaker", "tenant": tenant})
             raise TenantUnavailable(
                 f"tenant {tenant!r} circuit breaker open")
         if not t.bucket.try_acquire(q.shape[0]):
             t.stats.bump(rejected_rate=1)
+            instant("gw.reject", "gateway",
+                    {"reason": "rate", "tenant": tenant})
             raise AdmissionError(
                 f"tenant {tenant!r} over rate limit "
                 f"({t.cfg.rate:g} rows/s)")
@@ -304,6 +317,9 @@ class CamServingGateway:
             deadline=now + budget if budget > 0 else None,
             result=GatewayResult(tenant=tenant, rid=0, submitted_at=now))
         greq.result.rid = greq.rid
+        greq._tspan = trace_begin(
+            "request", "gateway",
+            {"rid": greq.rid, "tenant": tenant, "rows": int(q.shape[0])})
         victim = None
         forward = False
         with t.lock:
@@ -318,11 +334,18 @@ class CamServingGateway:
             return greq
         if victim is greq:
             t.stats.bump(rejected_queue=1)
+            instant("gw.reject", "gateway",
+                    {"reason": "queue", "tenant": tenant})
+            if greq._tspan is not None:
+                greq._tspan.end({"error": "AdmissionError"})
             raise AdmissionError(
                 f"tenant {tenant!r} pending queue full "
                 f"({t.cfg.queue_limit})")
         if victim is not None:
             t.stats.bump(shed=1)
+            instant("gw.reject", "gateway",
+                    {"reason": "shed", "tenant": tenant,
+                     "rid": victim.rid})
             victim._settle(error=AdmissionError(
                 f"shed by higher-priority work (queue limit "
                 f"{t.cfg.queue_limit})"))
@@ -420,6 +443,17 @@ class CamServingGateway:
                 continue
             rep.inc_outstanding()
             g.attempts += 1
+            if tracer.enabled:
+                # cross-pid link: this gateway request's spans continue
+                # as server request ``server_rid`` on the serving track
+                instant("gw.route", "gateway",
+                        {"rid": g.rid, "server_rid": sreq.rid,
+                         "replica": rep.device_group,
+                         "tenant": g.tenant, "attempt": g.attempts})
+                if g._tspan is not None:
+                    # closes the admission window: submit -> dispatch
+                    g._tspan.lap("gw.admission",
+                                 {"replica": rep.device_group})
             sreq.add_done_callback(
                 lambda r, _t=t, _g=g, _rep=rep: self._on_done(_t, _g,
                                                               _rep, r))
@@ -452,6 +486,10 @@ class CamServingGateway:
         g.tried.add(rep.key)
         g.result.failovers += 1
         t.stats.bump(failovers=1)
+        instant("gw.failover", "gateway",
+                {"rid": g.rid, "tenant": g.tenant,
+                 "replica": rep.device_group,
+                 "error": type(res.error).__name__})
         self._pump(t, g)                        # retry elsewhere, same slot
 
     # -- maintenance / chaos -----------------------------------------------
@@ -491,6 +529,14 @@ class CamServingGateway:
         t.rset.replicas[idx].kill(hard=hard)
 
     # -- telemetry ---------------------------------------------------------
+
+    def dump_trace(self, path: str) -> str:
+        """Write the process-wide Chrome-tracing export (gateway,
+        serving and engine tracks all land in the same file) to
+        ``path``.  Convenience mirror of :func:`repro.obs.dump`;
+        tracing must be enabled.  See ``docs/observability.md``."""
+        from ..obs.trace import dump
+        return dump(path)
 
     def health(self) -> Dict[str, Any]:
         """Aggregated fleet health: per-tenant admission/breaker stats

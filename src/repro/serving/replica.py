@@ -47,6 +47,7 @@ import numpy as np
 from ..core.engine import RangePlan
 from ..core.envcfg import env_int
 from ..faults import detect_faulty_rows, row_checksums
+from ..obs.trace import trace_begin
 from .resilience import _WriterPriorityLock
 from .server import CamSearchServer
 
@@ -441,6 +442,9 @@ class ReplicaSet:
                 if r.state != "draining" or r.outstanding != 0:
                     return None
                 r.state = "rebuilding"
+            hspan = trace_begin("heal", "gateway",
+                                {"replica": r.idx,
+                                 "device": r.device_group})
             version0 = self.version
             gal0 = self._server_gallery()
             try:
@@ -464,6 +468,9 @@ class ReplicaSet:
                     else self._rebuild_model(r, r.generation)
         finally:
             self._rw.release_write()
+        if hspan is not None:
+            hspan.lap("heal.diagnose", {"mode": mode,
+                                        "diverged": diverged})
 
         old = r.server
         try:
@@ -480,6 +487,8 @@ class ReplicaSet:
             fault_model=r.fault_model, fault_injector=r._injector_hook,
             **self._server_kwargs)
         fresh.start()
+        if hspan is not None:
+            hspan.lap("heal.rebuild")
 
         self._rw.acquire_write()
         try:
@@ -497,6 +506,10 @@ class ReplicaSet:
                 r.state = "serving"
         finally:
             self._rw.release_write()
+        if hspan is not None:
+            hspan.lap("heal.readmit")
+            hspan.end({"mode": mode, "rows_resynced": diverged,
+                       "generation": r.generation})
         return {"replica": r.idx, "mode": mode, "rows_resynced": diverged,
                 "generation": r.generation,
                 "device_group": r.device_group}

@@ -103,12 +103,18 @@ import numpy as np
 from ..core.compiler import CompiledCamProgram
 from ..core.engine import PlanBase, RangePlan
 from ..core.envcfg import env_float, env_int
+from ..obs import trace as _trace
 from .batcher import _BatcherMixin
 from .resilience import _CircuitBreaker, _ResilienceMixin, \
     _WriterPriorityLock
 from .telemetry import SearchRequest, SearchResult, ServerStats
 
 __all__ = ["SearchRequest", "SearchResult", "CamSearchServer"]
+
+#: process-global request/batch id streams shared by every server so
+#: ids stay unique inside the shared trace recorder (see _init_state)
+_RIDS = itertools.count()
+_BATCH_IDS = itertools.count()
 
 
 def _resolve_plan(program: Any) -> PlanBase:
@@ -304,7 +310,12 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
         self._queue: "queue.Queue[Optional[SearchRequest]]" = queue.Queue()
         self._completions: "queue.Queue[Optional[Tuple[Any, ...]]]" = \
             queue.Queue(maxsize=max(1, int(max_inflight)))
-        self._rid = itertools.count()
+        # process-global id streams: a multi-tenant gateway runs many
+        # servers into ONE trace recorder, so request/batch ids must be
+        # unique across servers for the trace joins (gw.route links a
+        # gateway rid to a serving rid) to be unambiguous
+        self._rid = _RIDS
+        self._batch_ids = _BATCH_IDS
         self._thread: Optional[threading.Thread] = None
         self._completer: Optional[threading.Thread] = None
         self._running = False
@@ -406,6 +417,8 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
         req = SearchRequest(rid=rid, queries=q,
                             deadline=now + budget if budget > 0 else None,
                             result=SearchResult(rid=rid, submitted_at=now))
+        req._tspan = _trace.trace_begin(
+            "request", "serving", {"rid": rid, "rows": int(q.shape[0])})
         with self._lock:
             if not self._accepting:
                 raise RuntimeError("server not started")
@@ -513,16 +526,28 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
 
     # -- telemetry ---------------------------------------------------------
 
+    def dump_trace(self, path: str) -> str:
+        """Write the process-wide execution trace as Chrome-tracing
+        JSON (Perfetto-loadable).  The recorder is process-global —
+        engine and gateway spans land in the same file — so this is a
+        convenience mirror of :func:`repro.obs.dump`; tracing must be
+        enabled (``REPRO_TRACE=...`` or :func:`repro.obs.enable`)."""
+        return _trace.dump(path)
+
     def snapshot(self) -> Dict[str, Any]:
         """Point-in-time stats: throughput-ready counters plus latency
         percentiles (over a bounded recent window) and the mean batch
         fill (rows per launched batch).  The counters are one
         consistent view — every related group was updated atomically
         and the whole copy is taken in one lock acquisition."""
-        out, lat = self._stats.view()
+        out, lat, qw, sv = self._stats.view_windows()
         out["avg_batch_fill"] = (out["batched_rows"] / out["batches"]
                                  if out["batches"] else 0.0)
         out.update(ServerStats.percentiles(lat))
+        # end-to-end latency attribution: queue-wait (submit -> batch
+        # dispatch) vs service (dispatch -> delivery)
+        out.update(ServerStats.percentiles(qw, prefix="queue_wait_"))
+        out.update(ServerStats.percentiles(sv, prefix="service_"))
         spec = self.plan.spec
         plan_counters = self.plan.counters()
         out["plan"] = {"batch": self.plan.batch, "shards": self.plan.shards,
@@ -550,7 +575,7 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
         ``"degraded"`` once the breaker is open or any batch has been
         served by a fallback level.
         """
-        st, _ = self._stats.view()
+        st, _, qw, sv = self._stats.view_windows()
         with self._lock:
             fallbacks = self._fallbacks
         br = self._breaker.snapshot()
@@ -569,6 +594,8 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
             "breaker_skips": st["breaker_skips"],
             "fallback_levels":
                 None if fallbacks is None else [n for n, _ in fallbacks],
+            "latency": {**ServerStats.percentiles(qw, prefix="queue_wait_"),
+                        **ServerStats.percentiles(sv, prefix="service_")},
         }
         if self._faults is not None:
             spec = self.plan.spec

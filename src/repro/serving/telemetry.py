@@ -44,8 +44,15 @@ class ServerStats:
         self._counts: Dict[str, int] = {n: 0 for n in names}
         # bounded: a long-lived server must not grow per-request state
         self._latencies: "deque[float]" = deque(maxlen=window)
+        # end-to-end latency split: time parked before dispatch vs time
+        # being served (dispatch -> delivery) — one blended number can't
+        # distinguish an overloaded batcher from a slow kernel
+        self._queue_waits: "deque[float]" = deque(maxlen=window)
+        self._services: "deque[float]" = deque(maxlen=window)
 
-    def bump(self, _latency_s: Optional[float] = None, **deltas: int) -> None:
+    def bump(self, _latency_s: Optional[float] = None,
+             _queue_s: Optional[float] = None,
+             _service_s: Optional[float] = None, **deltas: int) -> None:
         with self._lock:
             for k, v in deltas.items():
                 if k not in self._counts:
@@ -53,6 +60,10 @@ class ServerStats:
                 self._counts[k] += v
             if _latency_s is not None:
                 self._latencies.append(_latency_s)
+            if _queue_s is not None:
+                self._queue_waits.append(_queue_s)
+            if _service_s is not None:
+                self._services.append(_service_s)
 
     def view(self) -> Tuple[Dict[str, int], List[float]]:
         """One consistent copy: every counter and the latency window,
@@ -60,16 +71,25 @@ class ServerStats:
         with self._lock:
             return dict(self._counts), list(self._latencies)
 
+    def view_windows(self) -> Tuple[Dict[str, int], List[float],
+                                    List[float], List[float]]:
+        """Like :meth:`view` plus the queue-wait and service windows,
+        all copied in the same critical section."""
+        with self._lock:
+            return (dict(self._counts), list(self._latencies),
+                    list(self._queue_waits), list(self._services))
+
     @staticmethod
-    def percentiles(latencies: List[float]) -> Dict[str, float]:
-        """``{"p50_ms", "p95_ms"}`` over a latency-seconds window
-        (empty window -> empty dict)."""
+    def percentiles(latencies: List[float],
+                    prefix: str = "") -> Dict[str, float]:
+        """``{"p50_ms", "p95_ms"}`` (optionally prefixed) over a
+        latency-seconds window (empty window -> empty dict)."""
         if not latencies:
             return {}
         lat = sorted(latencies)
-        return {"p50_ms": 1e3 * lat[len(lat) // 2],
-                "p95_ms": 1e3 * lat[min(len(lat) - 1,
-                                        int(len(lat) * 0.95))]}
+        return {f"{prefix}p50_ms": 1e3 * lat[len(lat) // 2],
+                f"{prefix}p95_ms": 1e3 * lat[min(len(lat) - 1,
+                                                 int(len(lat) * 0.95))]}
 
 
 @dataclass
@@ -85,11 +105,30 @@ class SearchResult:
     matches: Optional[np.ndarray] = None
     error: Optional[BaseException] = None
     submitted_at: float = 0.0
+    #: when the batcher dispatched this request's batch to the device
+    #: (0.0 for requests that failed before dispatch)
+    dispatched_at: float = 0.0
     completed_at: float = 0.0
 
     @property
     def latency_s(self) -> float:
         return self.completed_at - self.submitted_at
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Submit -> dispatch: time parked in the queue / batch fill
+        (the whole latency when the request never dispatched)."""
+        if not self.dispatched_at:
+            return self.latency_s
+        return self.dispatched_at - self.submitted_at
+
+    @property
+    def service_s(self) -> float:
+        """Dispatch -> delivery: device execution + finalize + scatter
+        (0.0 when the request never dispatched)."""
+        if not self.dispatched_at:
+            return 0.0
+        return self.completed_at - self.dispatched_at
 
 
 @dataclass
@@ -106,6 +145,9 @@ class SearchRequest:
     queries: np.ndarray
     result: SearchResult
     deadline: Optional[float] = None
+    #: cross-thread trace handle (``repro.obs.trace_begin``); ``None``
+    #: when tracing is disabled
+    _tspan: Any = None
     _done: threading.Event = field(default_factory=threading.Event)
     _cb_lock: threading.Lock = field(default_factory=threading.Lock)
     _callbacks: List[Callable[["SearchRequest"], Any]] = \

@@ -11,7 +11,7 @@ import math
 import pytest
 
 from repro.core.envcfg import (env_choice, env_flag, env_float, env_gate,
-                               env_int)
+                               env_int, env_path)
 
 
 class TestEnvFlag:
@@ -89,6 +89,24 @@ class TestEnvChoice:
         monkeypatch.setenv("X_C", "nope")
         with pytest.raises(ValueError, match="X_C.*auto/ref"):
             env_choice("X_C", "auto", ("auto", "ref"))
+
+
+class TestEnvPath:
+    def test_unset_means_default(self, monkeypatch):
+        monkeypatch.delenv("X_P", raising=False)
+        assert env_path("X_P") is None
+        assert env_path("X_P", "/tmp/d.json") == "/tmp/d.json"
+
+    def test_value_passes_through(self, monkeypatch):
+        monkeypatch.setenv("X_P", "/tmp/trace.json")
+        assert env_path("X_P") == "/tmp/trace.json"
+
+    @pytest.mark.parametrize("raw", ["", "   "])
+    def test_blank_is_a_quoting_accident_not_a_path(self, monkeypatch,
+                                                    raw):
+        monkeypatch.setenv("X_P", raw)
+        with pytest.raises(ValueError, match="X_P"):
+            env_path("X_P")
 
 
 class TestEnvGate:
@@ -200,6 +218,25 @@ class TestEngineKnobsAreStrict:
         with pytest.raises(ValueError, match="REPRO_ENGINE_TINY_CELLS"):
             _tiny_plan(_sim_specs()[0], "jnp", 1)
 
+    def test_trace_knobs_garbage_raises(self, monkeypatch):
+        from repro.obs import trace as obs
+        monkeypatch.setenv("REPRO_TRACE_EVENTS", "lots")
+        with pytest.raises(ValueError, match="REPRO_TRACE_EVENTS"):
+            obs.configure_from_env()
+        monkeypatch.setenv("REPRO_TRACE_EVENTS", "0")
+        with pytest.raises(ValueError, match="REPRO_TRACE_EVENTS.*>= 1"):
+            obs.configure_from_env()
+        monkeypatch.delenv("REPRO_TRACE_EVENTS")
+        monkeypatch.setenv("REPRO_TRACE_CLOCK", "wall")
+        with pytest.raises(ValueError,
+                           match="REPRO_TRACE_CLOCK.*perf/mono"):
+            obs.configure_from_env()
+        monkeypatch.delenv("REPRO_TRACE_CLOCK")
+        # an empty REPRO_TRACE is a shell quoting accident, not "off"
+        monkeypatch.setenv("REPRO_TRACE", "")
+        with pytest.raises(ValueError, match="REPRO_TRACE"):
+            obs.configure_from_env()
+
     def test_hier_nprobe_strict_and_applied(self, monkeypatch):
         from repro.core import ArchSpec, clear_plan_cache
         from repro.core.engine import get_hierarchical_plan
@@ -232,6 +269,7 @@ class TestBenchGatesUseEnvcfg:
         ("REPRO_PACKED_GATE", "benchmarks.bench_packed", 4.0),
         ("REPRO_HDC_GATE", "benchmarks.bench_hdc", 3.0),
         ("REPRO_MULTITENANT_GATE", "benchmarks.bench_multitenant", 2.0),
+        ("REPRO_TRACE_GATE", "benchmarks.bench_trace", 1.0),
     ])
     def test_gate_semantics(self, monkeypatch, var, loader, auto):
         import importlib
@@ -249,3 +287,17 @@ class TestBenchGatesUseEnvcfg:
         monkeypatch.setenv(var, "fast")
         with pytest.raises(ValueError, match=var):
             bench._gate()
+
+    def test_hier_wide_gate_semantics(self, monkeypatch):
+        import importlib
+        import pathlib
+        root = str(pathlib.Path(__file__).resolve().parent.parent)
+        monkeypatch.syspath_prepend(root)
+        bench = importlib.import_module("benchmarks.bench_hier")
+        monkeypatch.delenv("REPRO_HIER_WIDE_GATE", raising=False)
+        assert bench._wide_gate() == 1.0
+        monkeypatch.setenv("REPRO_HIER_WIDE_GATE", "off")
+        assert bench._wide_gate() == 0.0
+        monkeypatch.setenv("REPRO_HIER_WIDE_GATE", "slow")
+        with pytest.raises(ValueError, match="REPRO_HIER_WIDE_GATE"):
+            bench._wide_gate()

@@ -1,0 +1,357 @@
+"""Execution tracing (``repro.obs``): recorder semantics, Chrome
+export validity, and end-to-end followability.
+
+The load-bearing pins:
+
+* the disabled path allocates nothing — ``trace_span`` returns one
+  shared singleton and ``trace_begin`` returns ``None``;
+* the export is always Perfetto-loadable — every ``B`` has an ``E``
+  (synthesised at the horizon for spans still open), orphan ``E``
+  whose ``B`` was ring-evicted are dropped, timestamps are monotonic;
+* the ring is bounded — capacity evicts oldest, never grows;
+* one multi-tenant request is followable across the gateway, batcher
+  and engine threads: the gateway ``gw.route`` instant links the
+  gateway rid to the serving rid, and both request tracks plus the
+  engine spans land in the same export.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ArchSpec, compile_fn
+from repro.obs import trace as obs
+from repro.serving import CamSearchServer, CamServingGateway
+
+N, DIM, K = 96, 16, 3
+
+
+def _knn(q, gallery):
+    d = q.unsqueeze(1).sub(gallery).norm(p=2, dim=-1)
+    return d.topk(K, largest=False)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    rng = np.random.default_rng(5)
+    gal = rng.standard_normal((N, DIM)).astype(np.float32)
+    prog = compile_fn(_knn, [np.zeros((8, DIM), np.float32), gal],
+                      ArchSpec(rows=32, cols=DIM))
+    assert prog.engine_plan is not None
+    return prog, gal
+
+
+@pytest.fixture()
+def clean_tracer():
+    """Tracing off and empty before and after; capacity restored."""
+    cap, clock = obs.tracer.capacity, obs.tracer.clock
+    obs.stop()
+    obs.tracer.clear()
+    yield obs.tracer
+    obs.stop()
+    obs.tracer.clear()
+    obs.enable(cap, clock)
+    obs.stop()
+
+
+def _events(doc, ph=None, pid=None, name=None):
+    pids = {e["args"]["name"]: e["pid"] for e in doc["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "process_name"}
+    out = []
+    for e in doc["traceEvents"]:
+        if e["ph"] == "M":
+            continue
+        if ph is not None and e["ph"] != ph:
+            continue
+        if pid is not None and e["pid"] != pids.get(pid):
+            continue
+        if name is not None and e["name"] != name:
+            continue
+        out.append(e)
+    return out
+
+
+def _assert_valid_chrome(doc):
+    """Every B has an E (per pid/tid, LIFO), timestamps monotonic."""
+    json.dumps(doc)                         # serialisable
+    assert doc["displayTimeUnit"] == "ms"
+    stacks = {}
+    last_ts = -1.0
+    for e in doc["traceEvents"]:
+        if e["ph"] == "M":
+            continue
+        assert e["ts"] >= 0
+        if e["ph"] == "B":
+            stacks.setdefault((e["pid"], e["tid"]), []).append(e)
+        elif e["ph"] == "E":
+            stack = stacks.get((e["pid"], e["tid"]))
+            assert stack, f"E without open B: {e}"
+            stack.pop()
+        last_ts = max(last_ts, e["ts"])
+    for key, stack in stacks.items():
+        assert not stack, f"unterminated B on {key}: {stack}"
+
+
+class TestDisabledPath:
+    def test_span_is_shared_singleton(self, clean_tracer):
+        s1 = obs.trace_span("a")
+        s2 = obs.trace_span("b", "serving", args={"x": 1})
+        assert s1 is s2                     # no allocation when off
+        with s1:
+            pass
+        assert len(clean_tracer) == 0
+
+    def test_begin_and_instant_are_noops(self, clean_tracer):
+        assert obs.trace_begin("r") is None
+        obs.instant("i", "gateway", {"reason": "x"})
+        assert len(clean_tracer) == 0
+
+
+class TestRecorder:
+    def test_nesting_and_pairing(self, clean_tracer):
+        obs.enable()
+        with obs.trace_span("outer"):
+            with obs.trace_span("inner"):
+                pass
+        obs.stop()
+        doc = obs.to_chrome()
+        _assert_valid_chrome(doc)
+        names = [(e["name"], e["ph"]) for e in doc["traceEvents"]
+                 if e["ph"] in "BE"]
+        assert names == [("outer", "B"), ("inner", "B"),
+                         ("inner", "E"), ("outer", "E")]
+
+    def test_unterminated_b_closed_at_horizon(self, clean_tracer):
+        obs.enable()
+        clean_tracer.emit("B", "never_closed", "engine",
+                          clean_tracer.now())
+        with obs.trace_span("ok"):
+            pass
+        obs.stop()
+        _assert_valid_chrome(obs.to_chrome())
+
+    def test_orphan_e_from_eviction_dropped(self, clean_tracer):
+        obs.enable(capacity=8)
+        for _ in range(50):                 # Bs evicted, tail Es orphan
+            with obs.trace_span("s"):
+                pass
+        obs.stop()
+        assert len(clean_tracer) == 8       # bounded
+        _assert_valid_chrome(obs.to_chrome())
+
+    def test_capacity_grows_and_shrinks_preserving_events(
+            self, clean_tracer):
+        obs.enable(capacity=4)
+        with obs.trace_span("keep"):
+            pass
+        obs.enable(capacity=16)
+        assert len(clean_tracer) == 2
+        assert clean_tracer.capacity == 16
+
+    def test_cross_thread_handle_pins_origin_tid(self, clean_tracer):
+        obs.enable()
+        h = obs.trace_begin("request", "serving", {"rid": 1})
+        origin = threading.get_ident()
+
+        def worker():
+            h.lap("request.queue_wait")
+            h.end()
+
+        t = threading.Thread(target=worker, name="completer")
+        t.start()
+        t.join()
+        obs.stop()
+        xs = _events(obs.to_chrome(), ph="X")
+        assert len(xs) == 2
+        assert all(e["tid"] == origin for e in xs)
+        whole = next(e for e in xs if e["name"] == "request")
+        assert whole["args"]["rid"] == 1
+        assert whole["dur"] >= next(
+            e for e in xs if e["name"] == "request.queue_wait")["dur"]
+
+    def test_thread_and_process_names_exported(self, clean_tracer):
+        obs.enable()
+
+        def worker():
+            with obs.trace_span("w", "serving"):
+                pass
+
+        t = threading.Thread(target=worker, name="batcher-0")
+        t.start()
+        t.join()
+        obs.stop()
+        doc = obs.to_chrome()
+        procs = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+        threads = {e["args"]["name"] for e in doc["traceEvents"]
+                   if e["ph"] == "M" and e["name"] == "thread_name"}
+        assert "serving" in procs
+        assert "batcher-0" in threads
+
+    def test_span_stats_aggregates(self, clean_tracer):
+        obs.enable()
+        for _ in range(3):
+            with obs.trace_span("k"):
+                pass
+        h = obs.trace_begin("r", "serving")
+        h.end()
+        obs.stop()
+        st = obs.span_stats()
+        assert st["k"]["count"] == 3
+        assert st["k"]["total_ms"] >= st["k"]["mean_ms"]
+        assert "r" in st
+
+
+class TestServedWorkloadTrace:
+    def test_concurrent_serving_emits_followable_spans(
+            self, compiled, clean_tracer, rng, tmp_path):
+        """Batcher/completer spans nest correctly under concurrency and
+        every request's queue-wait + service windows land on its own
+        submitter thread track."""
+        prog, gal = compiled
+        obs.enable()
+        with CamSearchServer(prog, gal, max_wait_ms=2.0) as srv:
+            errs = []
+
+            def client(c):
+                try:
+                    for _ in range(3):
+                        q = rng.standard_normal((2, DIM)) \
+                            .astype(np.float32)
+                        srv.search(q, timeout=60)
+                except Exception as e:      # noqa: BLE001
+                    errs.append(e)
+
+            threads = [threading.Thread(target=client, args=(c,))
+                       for c in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errs, errs[:1]
+            path = srv.dump_trace(str(tmp_path / "serve.json"))
+        obs.stop()
+        with open(path) as f:
+            doc = json.load(f)
+        _assert_valid_chrome(doc)
+        # per-batch pipeline spans from the serving threads
+        # (batch.fill is a window handle -> X; the others nest -> B/E)
+        assert _events(doc, ph="X", pid="serving", name="batch.fill")
+        for span in ("batch.dispatch", "batch.finalize"):
+            assert _events(doc, ph="B", pid="serving", name=span)
+        # engine spans landed in the same export, on the engine pid
+        assert _events(doc, ph="B", pid="engine", name="plan.dispatch")
+        # every delivered request has its lifetime + both windows
+        reqs = _events(doc, ph="X", pid="serving", name="request")
+        waits = _events(doc, ph="X", pid="serving",
+                        name="request.queue_wait")
+        servs = _events(doc, ph="X", pid="serving",
+                        name="request.service")
+        assert len(reqs) == 12 and len(waits) == 12 and len(servs) == 12
+        # request tracks are pinned to their submitter threads
+        assert len({e["tid"] for e in reqs}) == 4
+        for r in reqs:
+            rid = r["args"]["rid"]
+            w = [e for e in waits if e["tid"] == r["tid"]
+                 and r["ts"] <= e["ts"] <= r["ts"] + r["dur"]]
+            assert w, f"request {rid} has no queue-wait inside its span"
+
+    def test_queue_wait_vs_service_split_in_snapshot(
+            self, compiled, rng):
+        prog, gal = compiled
+        with CamSearchServer(prog, gal) as srv:
+            q = rng.standard_normal((4, DIM)).astype(np.float32)
+            for _ in range(3):
+                srv.search(q, timeout=60)
+            snap = srv.snapshot()
+            health = srv.health()
+        for key in ("queue_wait_p50_ms", "queue_wait_p95_ms",
+                    "service_p50_ms", "service_p95_ms"):
+            assert key in snap
+            assert key in health["latency"]
+        assert snap["service_p50_ms"] > 0
+        # each component is pointwise <= the end-to-end latency, so its
+        # p50 cannot exceed the blended p50
+        assert snap["queue_wait_p50_ms"] <= snap["p50_ms"] + 1e-9
+        assert snap["service_p50_ms"] <= snap["p50_ms"] + 1e-9
+
+
+class TestGatewayFollowability:
+    def test_multitenant_request_followable_across_components(
+            self, compiled, clean_tracer, rng, tmp_path):
+        """THE acceptance pin: a traced multi-tenant run produces a
+        Perfetto-loadable export in which one request is followable
+        gateway -> serving -> engine via the ``gw.route`` link."""
+        prog, gal = compiled
+        obs.enable()
+        gw = CamServingGateway(maint_ms=0.0)
+        try:
+            gw.register_tenant("alpha", prog, gal)
+            gw.register_tenant("beta", prog, gal)
+            for tenant in ("alpha", "beta"):
+                for _ in range(2):
+                    q = rng.standard_normal((2, DIM)).astype(np.float32)
+                    gw.search(tenant, q, timeout=60)
+            path = gw.dump_trace(str(tmp_path / "gateway.json"))
+        finally:
+            gw.stop()
+            obs.stop()
+        with open(path) as f:
+            doc = json.load(f)
+        _assert_valid_chrome(doc)
+
+        gw_reqs = _events(doc, ph="X", pid="gateway", name="request")
+        routes = _events(doc, ph="i", pid="gateway", name="gw.route")
+        srv_reqs = _events(doc, ph="X", pid="serving", name="request")
+        assert len(gw_reqs) == 4 and len(routes) == 4
+        assert {e["args"]["tenant"] for e in gw_reqs} == {"alpha", "beta"}
+        for g in gw_reqs:
+            # gateway request -> its route hop -> the serving request
+            route = next(r for r in routes
+                         if r["args"]["rid"] == g["args"]["rid"])
+            server_rid = route["args"]["server_rid"]
+            s = [e for e in srv_reqs
+                 if e["args"]["rid"] == server_rid]
+            assert len(s) == 1, \
+                f"gateway rid {g['args']['rid']} not followable"
+            # the admission window sits on the gateway track
+        assert _events(doc, ph="X", pid="gateway", name="gw.admission")
+        # and the engine's dispatch spans are in the same export
+        assert _events(doc, ph="B", pid="engine", name="plan.dispatch")
+
+    def test_reject_instants_carry_reason(self, compiled, clean_tracer):
+        prog, gal = compiled
+        obs.enable()
+        gw = CamServingGateway(maint_ms=0.0)
+        try:
+            gw.register_tenant("limited", prog, gal,
+                               rate=1.0, burst=2)
+            q = np.zeros((2, DIM), np.float32)
+            gw.search("limited", q, timeout=60)     # drains the burst
+            with pytest.raises(Exception):
+                gw.submit("limited", q)             # over rate
+        finally:
+            gw.stop()
+            obs.stop()
+        rejects = _events(obs.to_chrome(), ph="i", pid="gateway",
+                          name="gw.reject")
+        assert any(e["args"]["reason"] == "rate" for e in rejects)
+
+
+class TestEnvDrivenTracing:
+    def test_repro_trace_enables_and_sets_dump_path(
+            self, clean_tracer, monkeypatch, tmp_path):
+        p = str(tmp_path / "t.json")
+        monkeypatch.setenv("REPRO_TRACE", p)
+        monkeypatch.setenv("REPRO_TRACE_EVENTS", "128")
+        monkeypatch.setenv("REPRO_TRACE_CLOCK", "mono")
+        assert obs.configure_from_env() == p
+        assert obs.tracer.enabled
+        assert obs.tracer.capacity == 128
+        assert obs.tracer.clock == "mono"
+        assert obs.tracer._atexit_path == p
+        monkeypatch.delenv("REPRO_TRACE")
+        assert obs.configure_from_env() is None
+        assert obs.tracer._atexit_path is None
