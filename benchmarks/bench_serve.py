@@ -155,6 +155,50 @@ def _spawn(device_count: int, shards: int) -> dict:
         f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
 
 
+def _plan_store_warmstart_check():
+    """When CI configures ``REPRO_PLAN_STORE``, prove the serving layer
+    actually consumes it: tune + persist a small workload, then build a
+    server from the *heuristic* plan and assert construction swapped in
+    the stored winner without re-running the search, and that the served
+    results match the tuned plan bit-for-bit.  Returns the check record,
+    or ``None`` when no store is configured."""
+    from repro.core.envcfg import env_path
+    if env_path("REPRO_PLAN_STORE") is None:
+        return None
+    import numpy as np
+
+    from repro.core import get_plan
+    from repro.serving import CamSearchServer
+    from repro.tune import reset_tune_stats, tune_plan, tune_stats
+    from .bench_tune import _data, _module
+
+    shape = dict(metric="hamming", k=4, m=16, n=512, dim=64,
+                 rows=16, cols=32)
+    mod = _module(shape)
+    q, p = _data(shape, seed=3)
+    tuned = tune_plan(mod, q, p, trials=4, reps=1)
+    heuristic = get_plan(mod)
+
+    reset_tune_stats()
+    with CamSearchServer(heuristic, p) as srv:
+        assert srv.plan.spec.tile_rows == tuned.config["tile_rows"], \
+            "server construction ignored the stored tuned config"
+        assert tune_stats()["trials"] == 0, \
+            "server warm start re-ran tune trials"
+        v, i = srv.search(q)
+    tv, ti = tuned.plan.execute(q, p)
+    assert np.array_equal(np.asarray(ti), np.asarray(i)), \
+        "warm-started server indices diverged from the tuned plan"
+    assert np.array_equal(np.asarray(tv), np.asarray(v)), \
+        "warm-started server values diverged from the tuned plan"
+    print("plan-store warm start: server adopted the stored tuned plan "
+          f"(tile_rows {heuristic.spec.tile_rows} -> "
+          f"{srv.plan.spec.tile_rows}, 0 trials)")
+    return {"stored_tile_rows": tuned.config["tile_rows"],
+            "heuristic_tile_rows": heuristic.spec.tile_rows,
+            "trials_at_serve": 0}
+
+
 def run(devices: int = 8, rounds: int = 2) -> dict:
     """Interleave single/sharded child runs and score each config by its
     best round — paired scheduling plus best-of damps host noise."""
@@ -204,6 +248,9 @@ def run(devices: int = 8, rounds: int = 2) -> dict:
         "sharded": sharded,
         "throughput_speedup": round(speedup, 2),
     }
+    store_check = _plan_store_warmstart_check()
+    if store_check is not None:
+        payload["plan_store_warmstart"] = store_check
     save_bench_json("serve", payload)
 
     if gate > 0:

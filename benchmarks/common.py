@@ -26,10 +26,18 @@ def save_bench_json(name: str, payload: Any) -> str:
     ``*_smoke`` records are CI-run side products, not baselines — they
     land in a scratch directory (``REPRO_BENCH_SMOKE_DIR``, default
     under the system temp dir) instead of littering the repo root.
+    A blank value raises (``env_path`` contract — a shell quoting
+    accident, not a request to write into ``""``), and a relative one
+    is anchored under the temp dir rather than wherever the benchmark
+    process happens to be cwd'd.
     """
     if name.endswith("_smoke"):
-        base = os.environ.get("REPRO_BENCH_SMOKE_DIR") or \
-            os.path.join(tempfile.gettempdir(), "repro-bench-smoke")
+        from repro.core.envcfg import env_path
+        base = env_path("REPRO_BENCH_SMOKE_DIR")
+        if base is None:
+            base = os.path.join(tempfile.gettempdir(), "repro-bench-smoke")
+        elif not os.path.isabs(base):
+            base = os.path.join(tempfile.gettempdir(), base)
         os.makedirs(base, exist_ok=True)
         path = os.path.join(base, f"BENCH_{name}.json")
         with open(path, "w") as f:

@@ -18,9 +18,9 @@ from repro.core import plan_cache_stats
 
 from . import (bench_engine, bench_faults, bench_forest, bench_hdc,
                bench_hier, bench_multitenant, bench_packed, bench_serve,
-               bench_trace, fig7_validation, fig8_dse, fig9_isocapacity,
-               gpu_comparison, report_roofline, roofline_table,
-               table1_density, table2_knn)
+               bench_trace, bench_tune, fig7_validation, fig8_dse,
+               fig9_isocapacity, gpu_comparison, report_roofline,
+               roofline_table, table1_density, table2_knn)
 from .common import banner, save_bench_json
 
 SUITES = [
@@ -59,6 +59,11 @@ SUITES = [
     # BENCH_multitenant.json (gate REPRO_MULTITENANT_GATE, auto = 2x
     # isolation factor)
     ("multitenant_smoke", bench_multitenant.run),
+    # searched plans vs heuristic geometry + plan-store warm start
+    # (cold/warm subprocesses); detailed record in BENCH_tune.json
+    # (gates REPRO_TUNE_GATE, auto = 1.2x tuned speedup on >= 1 shape;
+    # REPRO_TUNE_WARM_GATE, auto = 3x faster start-to-first-result)
+    ("tune_smoke", bench_tune.run),
     # repro.obs tracing overhead: disabled-path cost per call site and
     # enabled wall-clock tax; detailed record in BENCH_trace.json (gate
     # REPRO_TRACE_GATE, auto = 1% disabled / 10% enabled)

@@ -18,7 +18,8 @@ from .engine import (CompositePlan, HierarchicalPlan, HierarchicalSpec,
                      PendingSearch, PlanBase, RangePlan, RangeSpec,
                      SearchPlan, SimilaritySpec, clear_plan_cache,
                      get_hierarchical_plan, get_plan,
-                     merge_shard_candidates, plan_cache_stats)
+                     merge_shard_candidates, plan_cache_stats, spec_digest,
+                     workload_digest)
 from .ir import Block, Builder, IRError, Module, Operation, Pass, PassManager, TensorType, Value, verify
 from .torch_dialect import TracedTensor, trace
 
@@ -31,6 +32,7 @@ __all__ = [
     "SimilaritySpec", "clear_plan_cache",
     "get_hierarchical_plan", "get_plan",
     "merge_shard_candidates", "plan_cache_stats",
+    "spec_digest", "workload_digest",
     "Block", "Builder", "IRError", "Module", "Operation", "Pass",
     "PassManager", "TensorType", "Value", "verify",
     "TracedTensor", "trace",

@@ -44,7 +44,8 @@ from .hier import HierarchicalPlan, get_hierarchical_plan
 from .plans import RangePlan, SearchPlan
 from .spec import (RangeSpec, SimilaritySpec, _bits, _check_binary_cells,
                    _encode, _metric_values, _resolve_pack, extract_plan_spec,
-                   extract_range_spec, module_for_spec)
+                   extract_range_spec, module_for_spec, spec_digest,
+                   spec_fingerprint, workload_digest)
 
 __all__ = [
     "SimilaritySpec", "RangeSpec", "HierarchicalSpec",
@@ -53,4 +54,5 @@ __all__ = [
     "extract_plan_spec", "extract_range_spec",
     "get_plan", "get_hierarchical_plan", "merge_shard_candidates",
     "module_for_spec", "plan_cache_stats", "clear_plan_cache",
+    "spec_digest", "spec_fingerprint", "workload_digest",
 ]

@@ -218,11 +218,25 @@ class PlanBase:
     tiny: bool = False
     #: backend-specific incremental row-update closure (see update_rows)
     _row_update: Optional[Callable] = field(default=None, repr=False)
+    #: jnp-backend ``lax.scan`` unroll factor (tile steps per scan
+    #: iteration); an autotuner search axis, so it joins the cache key
+    unroll: int = 1
     executions: int = 0
     chunks_run: int = 0
     pattern_hits: int = 0
     pattern_misses: int = 0
     pattern_evictions: int = 0
+    # pattern-counter values already folded into the process-wide
+    # retained stats by plan-LRU retirement.  Retirement must NOT zero
+    # the live counters — a server still holding an evicted plan keeps
+    # incrementing them, and zeroing would make its telemetry (and a
+    # re-inserted plan's contribution to plan_cache_stats()) jump
+    # backwards or double-count.  Instead _retire_plan folds the delta
+    # above these bases and advances them (idempotent against live
+    # references); plan_cache_stats() counts live plans net of them.
+    _retired_hits: int = field(default=0, repr=False)
+    _retired_misses: int = field(default=0, repr=False)
+    _retired_evictions: int = field(default=0, repr=False)
     #: update_rows telemetry: calls, total rows rewritten, and calls
     #: that could not take the incremental path (memo miss / kill
     #: switch / mutable sources) and fell back to full re-prepare

@@ -1,7 +1,7 @@
 """The process-wide plan cache and its public entry point, ``get_plan``.
 
 One cache for every plan family: keys are ``(spec, backend, batch,
-shards, packed)`` where the spec is a frozen dataclass —
+shards, packed, unroll)`` where the spec is a frozen dataclass —
 :class:`~.spec.SimilaritySpec`, :class:`~.spec.RangeSpec` or
 :class:`~.composite.HierarchicalSpec` — so keys from different families
 can never collide.  Recompiling the same program, or a different
@@ -47,14 +47,27 @@ _STATS = {"hits": 0, "misses": 0,
 def _retire_plan(plan: PlanBase) -> None:
     """Fold an evicted plan's pattern counters into the retained stats.
 
+    A server (or any live reference) may still be driving the evicted
+    plan, so the live counters are never zeroed — that would make the
+    holder's ``counters()`` telemetry jump backwards mid-serve.
+    Instead the delta above the plan's ``_retired_*`` bases is folded
+    into ``_STATS`` and the bases advance, which makes retirement
+    idempotent: retiring twice (evict, re-insert, evict again) folds
+    each increment exactly once, and :func:`plan_cache_stats` counts a
+    live plan net of its bases so a re-inserted retired plan is never
+    double-counted.
+
     Caller holds ``_CACHE_LOCK``; lock order ``_CACHE_LOCK`` ->
     ``_pattern_lock`` is safe (no path acquires them in reverse).
     """
     with plan._pattern_lock:
-        _STATS["pattern_hits"] += plan.pattern_hits
-        _STATS["pattern_misses"] += plan.pattern_misses
-        _STATS["pattern_evictions"] += plan.pattern_evictions
-        plan.pattern_hits = plan.pattern_misses = plan.pattern_evictions = 0
+        _STATS["pattern_hits"] += plan.pattern_hits - plan._retired_hits
+        _STATS["pattern_misses"] += plan.pattern_misses - plan._retired_misses
+        _STATS["pattern_evictions"] += \
+            plan.pattern_evictions - plan._retired_evictions
+        plan._retired_hits = plan.pattern_hits
+        plan._retired_misses = plan.pattern_misses
+        plan._retired_evictions = plan.pattern_evictions
 
 
 def _normalize_shards(shards: Optional[int]) -> int:
@@ -122,7 +135,8 @@ def _tiny_plan(spec, backend: str, shards: int) -> bool:
 def get_plan(module: Module, *, backend: str = "jnp",
              batch: Optional[int] = None,
              shards: Optional[int] = None,
-             pack: Optional[bool] = None) -> Optional[PlanBase]:
+             pack: Optional[bool] = None,
+             unroll: Optional[int] = None) -> Optional[PlanBase]:
     """Plan for a partitioned module, from the cache when possible.
 
     ``shards > 1`` selects the multi-device executable: gallery rows
@@ -137,6 +151,17 @@ def get_plan(module: Module, *, backend: str = "jnp",
     effective packing joins the plan-cache key: a packed and an unpacked
     plan for the same geometry are different executables and must never
     collide (their prepared operands have different dtypes).
+
+    ``unroll`` sets the jnp ``lax.scan`` unroll factor (tile steps
+    fused per scan iteration) — a pure scheduling knob with identical
+    arithmetic at any value, exposed as an autotuner search axis.
+    ``None`` means 1; the pallas backend has no scan to unroll and
+    always normalises to 1.  The effective factor joins the cache key.
+
+    When a persistent plan store is configured (``REPRO_PLAN_STORE``),
+    a freshly built single-device jnp plan additionally consults it for
+    an AOT-serialized executable pair matching this exact key — adopted
+    executables skip XLA compilation entirely (see ``repro.tune``).
 
     Returns ``None`` when the module is not a pure similarity program
     (callers then fall back to the IR interpreter).
@@ -173,7 +198,8 @@ def get_plan(module: Module, *, backend: str = "jnp",
             "REPRO_ENGINE_PACK=off if the kill switch disabled auto-pack)")
     s = _normalize_shards(shards)
     b = batch or _pick_batch(spec.m)
-    key = (spec, backend, b, s, packed)
+    u = 1 if unroll is None or backend == "pallas" else max(1, int(unroll))
+    key = (spec, backend, b, s, packed, u)
     plan = _cache_lookup(key)
     if plan is not None:
         return plan
@@ -182,45 +208,70 @@ def get_plan(module: Module, *, backend: str = "jnp",
                     args=None if not tracer.enabled else
                     {"family": "range" if is_range else "search",
                      "backend": backend, "batch": b, "shards": s,
-                     "packed": packed}):
+                     "packed": packed, "unroll": u}):
         plan = _build_leaf_plan(spec, backend, b, s, packed, tiny,
-                                is_range)
+                                is_range, u)
+        _maybe_adopt_stored_exec(plan)
     return _cache_insert(key, plan)
 
 
+def _maybe_adopt_stored_exec(plan: PlanBase) -> None:
+    """Swap a freshly built plan's jitted executables for AOT-serialized
+    ones from the persistent plan store, when one is configured and
+    holds a matching entry.
+
+    Only single-device jnp non-tiny plans are eligible (tiny plans are
+    shape-polymorphic, sharded plans bake in a device topology, pallas
+    kernels carry their own compilation path).  The engine never
+    imports ``repro.tune`` at module scope — the store stays an
+    optional layer above the engine.
+    """
+    if plan.backend != "jnp" or plan.shards != 1 or plan.tiny:
+        return
+    try:
+        from ...tune.store import active_store
+        store = active_store()
+    except Exception:       # tune layer unavailable: engine stays standalone
+        return
+    if store is not None:
+        store.adopt_executables(plan)
+
+
 def _build_leaf_plan(spec, backend: str, b: int, s: int, packed: bool,
-                     tiny: bool, is_range: bool) -> PlanBase:
+                     tiny: bool, is_range: bool, unroll: int = 1) -> PlanBase:
     if is_range:
         if s > 1:
             prepare, chunk_fn, row_update = _build_range_sharded_executable(
-                spec, b, s, packed=packed)
+                spec, b, s, packed=packed, unroll=unroll)
         elif backend == "pallas":
             prepare, chunk_fn, row_update = _build_range_pallas_executable(
                 spec, b)
         elif tiny:
             prepare, chunk_fn, row_update = _build_tiny_range_executable(
-                spec, b, packed=packed)
+                spec, b, packed=packed, unroll=unroll)
         else:
             prepare, chunk_fn, row_update = _build_range_scan_executable(
-                spec, b, packed=packed)
+                spec, b, packed=packed, unroll=unroll)
         plan = RangePlan(spec=spec, backend=backend, batch=b, shards=s,
-                         packed=packed, tiny=tiny, _prepare=prepare,
+                         packed=packed, tiny=tiny, unroll=unroll,
+                         _prepare=prepare,
                          _chunk_fn=chunk_fn, _row_update=row_update)
     else:
         if s > 1:
             prepare, chunk_fn, row_update = _build_sharded_executable(
-                spec, b, s, packed=packed)
+                spec, b, s, packed=packed, unroll=unroll)
         elif backend == "pallas":
             prepare, chunk_fn, row_update = _build_pallas_executable(
                 spec, b, packed=packed)
         elif tiny:
             prepare, chunk_fn, row_update = _build_tiny_executable(
-                spec, b, packed=packed)
+                spec, b, packed=packed, unroll=unroll)
         else:
             prepare, chunk_fn, row_update = _build_scan_executable(
-                spec, b, packed=packed)
+                spec, b, packed=packed, unroll=unroll)
         plan = SearchPlan(spec=spec, backend=backend, batch=b, shards=s,
-                          packed=packed, tiny=tiny, _prepare=prepare,
+                          packed=packed, tiny=tiny, unroll=unroll,
+                          _prepare=prepare,
                           _chunk_fn=chunk_fn, _row_update=row_update)
     return plan
 
@@ -247,9 +298,12 @@ def plan_cache_stats() -> Dict[str, int]:
         pe = _STATS["pattern_evictions"]
         for p in _PLAN_CACHE.values():
             with p._pattern_lock:
-                ph += p.pattern_hits
-                pm += p.pattern_misses
-                pe += p.pattern_evictions
+                # net of the retired bases: a previously-evicted plan
+                # that found its way back into the cache already has
+                # its pre-retirement counts folded into _STATS above
+                ph += p.pattern_hits - p._retired_hits
+                pm += p.pattern_misses - p._retired_misses
+                pe += p.pattern_evictions - p._retired_evictions
     out.update(pattern_hits=ph, pattern_misses=pm, pattern_evictions=pe)
     return out
 

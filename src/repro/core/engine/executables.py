@@ -81,7 +81,8 @@ def _col_dist_fn(spec: SimilaritySpec, packed: bool) -> Callable:
     return lambda qc, pr: kref.distances(qc, pr[0], phys_metric)
 
 
-def _tile_tournament(spec: SimilaritySpec, col_dist: Callable):
+def _tile_tournament(spec: SimilaritySpec, col_dist: Callable,
+                     unroll: int = 1):
     """The row-tile tournament shared by the single-device and sharded
     executables: ``scan(qt, pt, roffs)`` runs the column-tile partial-sum
     scan + per-tile top-k + vertical ``merge_topk`` tournament over the
@@ -104,6 +105,11 @@ def _tile_tournament(spec: SimilaritySpec, col_dist: Callable):
     # padding tiles; their candidates become pad_candidates sentinels
     # (a no-op for the single-device grid, which never exceeds it)
     n_phys = spec.grid_rows * tr
+    # unroll is a tuning knob, never a semantic one: lax.scan executes
+    # identical steps in identical order at any factor.  Clamp to each
+    # scan's static length (the sharded executable scans tiles-per-
+    # shard, not grid_rows, so the clamp reads the traced operands).
+    unroll = max(1, int(unroll))
 
     def tile_topk(qt, pr, roff):
         """Per-row-tile candidate list (pr leaves: (gc, tr, ...))."""
@@ -114,7 +120,8 @@ def _tile_tournament(spec: SimilaritySpec, col_dist: Callable):
             return acc + col_dist(qc, xs[1:]), None
 
         dist, _ = jax.lax.scan(
-            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr))
+            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr),
+            unroll=min(unroll, qt.shape[0]))
         gidx = roff + jnp.arange(tr, dtype=jnp.int32)
         dist = jnp.where(gidx[None, :] < n, dist, lose)      # ragged rows
         key = dist if phys_largest else -dist
@@ -137,7 +144,8 @@ def _tile_tournament(spec: SimilaritySpec, col_dist: Callable):
         # row tiles stream through the scan.
         init = tile_topk(qt, tuple(x[0] for x in pt), roffs[0])
         (v, i), _ = jax.lax.scan(
-            row_step, init, (tuple(x[1:] for x in pt), roffs[1:]))
+            row_step, init, (tuple(x[1:] for x in pt), roffs[1:]),
+            unroll=min(unroll, max(1, pt[0].shape[0] - 1)))
         return v, i
 
     return scan
@@ -274,7 +282,7 @@ def _row_scatter_update(spec, packed: bool, interval: bool = False):
 
 
 def _build_scan_executable(spec: SimilaritySpec, batch: int,
-                           packed: bool = False):
+                           packed: bool = False, unroll: int = 1):
     """(prepare_patterns, chunk_fn, row_update) for the jnp
     (reference-tiled) backend.
 
@@ -288,7 +296,7 @@ def _build_scan_executable(spec: SimilaritySpec, batch: int,
     """
     _, to_logical, _ = _metric_values(spec.metric, spec.largest)
     gr, dim = spec.grid_rows, spec.dim
-    scan = _tile_tournament(spec, _col_dist_fn(spec, packed))
+    scan = _tile_tournament(spec, _col_dist_fn(spec, packed), unroll)
 
     def prepare(p, care=None):
         return _lay_patterns(p, care, spec, gr, packed)
@@ -319,7 +327,7 @@ def _dense_spec(spec):
 
 
 def _build_tiny_executable(spec: SimilaritySpec, batch: int,
-                           packed: bool = False):
+                           packed: bool = False, unroll: int = 1):
     """Dense one-tile executable for tiny similarity plans.
 
     Small programs (ROADMAP item 5: the forest ``t32_d4`` point ran at
@@ -328,11 +336,12 @@ def _build_tiny_executable(spec: SimilaritySpec, batch: int,
     removes the scan entirely while keeping the exact tournament
     semantics (see :func:`_dense_spec`).
     """
-    return _build_scan_executable(_dense_spec(spec), batch, packed=packed)
+    return _build_scan_executable(_dense_spec(spec), batch, packed=packed,
+                                  unroll=unroll)
 
 
 def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int,
-                              packed: bool = False):
+                              packed: bool = False, unroll: int = 1):
     """(prepare_patterns, chunk_fn, row_update) sharding gallery rows
     over a device mesh.
 
@@ -365,7 +374,7 @@ def _build_sharded_executable(spec: SimilaritySpec, batch: int, shards: int,
     mesh = make_data_mesh(shards)
     tps = -(-gr // shards)          # row tiles per shard
     gr_pad = shards * tps
-    scan = _tile_tournament(spec, _col_dist_fn(spec, packed))
+    scan = _tile_tournament(spec, _col_dist_fn(spec, packed), unroll)
 
     def prepare(p, care=None):
         pt = _lay_patterns(p, care, spec, gr_pad, packed)
@@ -506,13 +515,15 @@ def _range_col_fn(spec: RangeSpec, packed: bool) -> Callable:
     return lambda qc, pr: kref.distances(qc, pr[0], phys_metric)
 
 
-def _range_tile_scan(spec: RangeSpec, col_fn: Callable):
+def _range_tile_scan(spec: RangeSpec, col_fn: Callable, unroll: int = 1):
     """Row-tile scan for range programs: ``scan(qt, pt)`` accumulates
     each row tile's physical value over the column tiles and returns
     the stacked ``(n_tiles, batch, tile_rows)`` value blocks.  No
     tournament — every stored row keeps its own match line.  Shape-
-    polymorphic in the query batch, like :func:`_tile_tournament`."""
+    polymorphic in the query batch, like :func:`_tile_tournament`
+    (whose unroll-clamp rationale also applies here)."""
     tr = spec.tile_rows
+    unroll = max(1, int(unroll))
 
     def tile_value(qt, pr):
         batch = qt.shape[1]
@@ -521,14 +532,16 @@ def _range_tile_scan(spec: RangeSpec, col_fn: Callable):
             return acc + col_fn(xs[0], xs[1:]), None
 
         dist, _ = jax.lax.scan(
-            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr))
+            col_step, jnp.zeros((batch, tr), jnp.float32), (qt, *pr),
+            unroll=min(unroll, qt.shape[0]))
         return dist
 
     def scan(qt, pt):
         def row_step(carry, xs):
             return carry, tile_value(qt, xs)
 
-        _, dists = jax.lax.scan(row_step, None, pt)
+        _, dists = jax.lax.scan(row_step, None, pt,
+                                unroll=min(unroll, max(1, pt[0].shape[0])))
         return dists                                    # (gr, B, tr)
 
     return scan
@@ -561,11 +574,11 @@ def _lay_range_patterns(pats, spec: RangeSpec, gr_total: int,
 
 
 def _build_range_scan_executable(spec: RangeSpec, batch: int,
-                                 packed: bool = False):
+                                 packed: bool = False, unroll: int = 1):
     """(prepare, chunk_fn, row_update) for the jnp range path: chunk_fn
     returns the ``(batch, grid_rows * tile_rows)`` boolean match block."""
     gr = spec.grid_rows
-    scan = _range_tile_scan(spec, _range_col_fn(spec, packed))
+    scan = _range_tile_scan(spec, _range_col_fn(spec, packed), unroll)
     compare = _range_compare(spec)
 
     def prepare(*pats):
@@ -581,16 +594,16 @@ def _build_range_scan_executable(spec: RangeSpec, batch: int,
 
 
 def _build_tiny_range_executable(spec: RangeSpec, batch: int,
-                                 packed: bool = False):
+                                 packed: bool = False, unroll: int = 1):
     """Dense one-tile executable for tiny range plans (the forest
     small-program case) — the range twin of
     :func:`_build_tiny_executable`."""
     return _build_range_scan_executable(_dense_spec(spec), batch,
-                                        packed=packed)
+                                        packed=packed, unroll=unroll)
 
 
 def _build_range_sharded_executable(spec: RangeSpec, batch: int, shards: int,
-                                    packed: bool = False):
+                                    packed: bool = False, unroll: int = 1):
     """(prepare, chunk_fn, row_update) sharding stored rows over a
     device mesh.
 
@@ -604,7 +617,7 @@ def _build_range_sharded_executable(spec: RangeSpec, batch: int, shards: int,
     mesh = make_data_mesh(shards)
     tps = -(-gr // shards)
     gr_pad = shards * tps
-    scan = _range_tile_scan(spec, _range_col_fn(spec, packed))
+    scan = _range_tile_scan(spec, _range_col_fn(spec, packed), unroll)
     compare = _range_compare(spec)
 
     def prepare(*pats):

@@ -19,6 +19,9 @@ Also here: the metric/encoding helpers mapping the physical CAM domain
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 from typing import Optional, Tuple
 from dataclasses import dataclass
 
@@ -180,6 +183,88 @@ class RangeSpec:
     pattern_args: Tuple[int, ...]
     out_shape: Tuple[int, ...]
     in_dtypes: Tuple[str, ...] = ("f32", "f32")
+
+    def __post_init__(self):
+        # float-field canonicalisation: the spec is the plan-cache key
+        # AND the source of the on-disk store digest.  -0.0 == 0.0 in
+        # Python (one dict slot) but repr differs, which would let two
+        # digests alias one plan; NaN is worse — a NaN spec is unequal
+        # to *itself*, so its plan could never be cache-hit (and NaN
+        # thresholds match nothing anyway).  ``+ 0.0`` maps -0.0 to
+        # +0.0 and leaves every other value bit-unchanged.
+        t = float(self.threshold)
+        if t != t:
+            raise ValueError(
+                "RangeSpec threshold must not be NaN (a NaN threshold "
+                "matches no row and poisons the plan-cache key)")
+        object.__setattr__(self, "threshold", t + 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Stable spec digests (the persistent plan store's on-disk keys)
+# ---------------------------------------------------------------------------
+
+
+def _fingerprint_value(o):
+    """Canonical JSON-able form of one spec field value.
+
+    Floats are tagged and rendered via ``repr`` *after* ``+ 0.0``
+    (mapping -0.0 to +0.0, matching the ``RangeSpec`` canonicalisation)
+    so the digest of a float field is exactly as wide as Python ``==``
+    on the canonicalised spec — two specs that share a plan-cache slot
+    share a digest, and vice versa.  NaN raises: a digest that aliases
+    "matches nothing" onto a real plan would silently serve the wrong
+    executable from disk.
+    """
+    if dataclasses.is_dataclass(o) and not isinstance(o, type):
+        out = {"__family__": type(o).__name__}
+        for f in dataclasses.fields(o):
+            out[f.name] = _fingerprint_value(getattr(o, f.name))
+        return out
+    if isinstance(o, bool) or o is None or isinstance(o, (int, str)):
+        return o
+    if isinstance(o, float):
+        v = float(o) + 0.0
+        if v != v:
+            raise ValueError("cannot fingerprint a NaN spec field")
+        return {"__float__": repr(v)}
+    if isinstance(o, (tuple, list)):
+        return [_fingerprint_value(x) for x in o]
+    raise TypeError(
+        f"unfingerprintable spec field of type {type(o).__name__}")
+
+
+def spec_fingerprint(spec) -> str:
+    """Deterministic, family-tagged canonical JSON for a plan spec.
+
+    Covers every dataclass field (nested specs included, so a
+    ``HierarchicalSpec`` fingerprints its fine spec recursively); the
+    family tag keeps a ``RangeSpec`` and a ``SimilaritySpec`` with
+    coincidentally-aligned fields from ever sharing a digest, mirroring
+    the type-split of the in-memory plan-cache key.
+    """
+    return json.dumps(_fingerprint_value(spec), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def spec_digest(spec) -> str:
+    """sha256 hex of :func:`spec_fingerprint` — the stable on-disk key
+    the persistent plan store files its configs/executables under."""
+    return hashlib.sha256(spec_fingerprint(spec).encode()).hexdigest()
+
+
+def workload_digest(spec) -> str:
+    """Digest of the spec with its tile geometry normalised away.
+
+    The autotuner *searches over* tile geometry, so tuned configs must
+    be keyed by what the workload IS (metric, k/threshold, operand
+    shapes, dtypes, care wiring) rather than how one particular module
+    happened to tile it — otherwise a config tuned from a rows=16 arch
+    would be invisible to the same workload partitioned at rows=64.
+    """
+    geomless = dataclasses.replace(spec, tile_rows=0, dims_per_tile=0,
+                                   grid_rows=0, grid_cols=0)
+    return spec_digest(geomless)
 
 
 _SIM_OPS = {"cim.similarity", "cim.tiled_similarity"}

@@ -211,7 +211,8 @@ class CamServingGateway:
                         unhealthy_k: Optional[int] = None,
                         max_fault_rows: Optional[int] = None,
                         rebuild_fault_model: Optional[Callable] = None,
-                        server_kwargs: Optional[Dict[str, Any]] = None
+                        server_kwargs: Optional[Dict[str, Any]] = None,
+                        tuned: Optional[bool] = None
                         ) -> "CamServingGateway":
         """Register a named tenant.
 
@@ -226,6 +227,11 @@ class CamServingGateway:
         Admission knobs left ``None`` fall back to the strict
         ``REPRO_TENANT_*`` environment defaults (garbage in the
         environment raises here, at registration).
+
+        ``tuned`` (default ``REPRO_TUNE_SERVE``, on) enables the
+        plan-store warm start: with ``REPRO_PLAN_STORE`` configured the
+        tenant's plan is swapped for its stored tuned equivalent before
+        the replica set is built (see ``CamSearchServer``).
         """
         cfg = AdmissionConfig.from_env(
             rate=rate, burst=burst, queue_limit=queue_limit,
@@ -253,7 +259,8 @@ class CamServingGateway:
                         "(or share_with=)")
                 from .server import _resolve_plan
                 rset = ReplicaSet(
-                    _resolve_plan(program), gallery, care_mask=care_mask,
+                    _resolve_plan(program, tuned=tuned), gallery,
+                    care_mask=care_mask,
                     replicas=replicas, fault_models=fault_models,
                     fault_injectors=fault_injectors,
                     device_groups=device_groups, unhealthy_k=unhealthy_k,

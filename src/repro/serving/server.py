@@ -102,7 +102,7 @@ import numpy as np
 
 from ..core.compiler import CompiledCamProgram
 from ..core.engine import PlanBase, RangePlan
-from ..core.envcfg import env_float, env_int
+from ..core.envcfg import env_flag, env_float, env_int
 from ..obs import trace as _trace
 from .batcher import _BatcherMixin
 from .resilience import _CircuitBreaker, _ResilienceMixin, \
@@ -117,20 +117,40 @@ _RIDS = itertools.count()
 _BATCH_IDS = itertools.count()
 
 
-def _resolve_plan(program: Any) -> PlanBase:
+def _resolve_plan(program: Any, tuned: Optional[bool] = None) -> PlanBase:
     """Accept a :class:`CompiledCamProgram` (with an engine plan) or a
-    bare plan; reject anything else synchronously."""
+    bare plan; reject anything else synchronously.
+
+    ``tuned`` (default ``REPRO_TUNE_SERVE``, on) consults the
+    persistent plan store: when ``REPRO_PLAN_STORE`` is configured and
+    holds a tuned config for this workload, the heuristically-built
+    leaf plan is swapped for its tuned equivalent — including any
+    stored AOT executables, so a fresh serving process skips autotuning
+    *and* XLA compilation (see :mod:`repro.tune`).  Without a store
+    this is a no-op.
+    """
     if isinstance(program, CompiledCamProgram):
         plan = program.engine_plan
         if plan is None:
             raise ValueError(
                 "program has no engine plan (not a pure similarity "
                 "program); the search server needs a SearchPlan")
-        return plan
-    if isinstance(program, PlanBase):
-        return program
-    raise TypeError(f"expected CompiledCamProgram or an engine "
-                    f"plan, got {type(program).__name__}")
+    elif isinstance(program, PlanBase):
+        plan = program
+    else:
+        raise TypeError(f"expected CompiledCamProgram or an engine "
+                        f"plan, got {type(program).__name__}")
+    if tuned is None:
+        tuned = env_flag("REPRO_TUNE_SERVE", True)
+    if tuned:
+        try:
+            from ..tune import warm_start_plan
+            plan = warm_start_plan(plan)
+        except Exception:
+            # warm start is an optimisation: a corrupt store record or
+            # import failure must never block server construction
+            pass
+    return plan
 
 
 def _validate_queries(plan: PlanBase, queries: np.ndarray) -> np.ndarray:
@@ -233,6 +253,11 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
         immediately before every dispatch attempt; raising simulates a
         backend failure at that level and exercises the retry /
         breaker / degraded machinery.
+    tuned:
+        Plan-store warm start (default ``REPRO_TUNE_SERVE``, on): swap
+        the program's plan for its stored tuned equivalent when
+        ``REPRO_PLAN_STORE`` holds one.  ``False`` serves the plan
+        exactly as given.
     """
 
     def __init__(self, program: Any, gallery: np.ndarray, *,
@@ -245,8 +270,9 @@ class CamSearchServer(_BatcherMixin, _ResilienceMixin):
                  retry_backoff_ms: Optional[float] = None,
                  breaker_threshold: Optional[int] = None,
                  breaker_cooldown_ms: Optional[float] = None,
-                 fault_injector: Any = None):
-        plan = _resolve_plan(program)
+                 fault_injector: Any = None,
+                 tuned: Optional[bool] = None):
+        plan = _resolve_plan(program, tuned=tuned)
         import jax.numpy as jnp
         self.plan = plan
         self.is_range = isinstance(plan, RangePlan)

@@ -1,0 +1,284 @@
+"""Persistent on-disk plan store: tuned configs + AOT-serialized executables.
+
+The engine's process-wide plan cache (``repro.core.engine.cache``) dies
+with the process, so every fresh server pays autotuning *and* XLA
+compilation again — cold-start elimination is ROADMAP item 3.  This
+module persists both halves under a directory named by
+``REPRO_PLAN_STORE``:
+
+* **config records** (``cfg-<backend>-<workload>.json``) — the winning
+  knob settings the autotuner found for a workload (tile geometry,
+  micro-batch, pack, unroll, shards), keyed by
+  :func:`~repro.core.engine.spec.workload_digest` (the spec with its
+  tile geometry normalised away: the tuner searches over geometry, so
+  the key must not depend on it).  Loading a config skips the search.
+
+* **AOT executables** (``aot-<key>.pkl``) — the winning plan's jitted
+  ``prepare`` / ``chunk_fn`` pair, lowered at concrete shapes, compiled
+  once, and serialized via ``jax.experimental.serialize_executable``.
+  Loading one skips XLA compilation entirely: the adopted callables run
+  the deserialized PjRt executable and only fall back to the plan's
+  original (lazily-jitted) functions on an input shape/dtype mismatch.
+  The key covers the exact spec digest, batch/pack/unroll, the
+  jax/jaxlib versions and the device platform — an executable compiled
+  by a different toolchain or for different hardware is invisible, not
+  wrong.  Serialization failures (a jaxlib that refuses, an unpicklable
+  closure) degrade to config-only persistence, never to an error.
+
+Eligibility for the AOT half is deliberately narrow: single-device jnp
+non-tiny plans.  Tiny plans are shape-polymorphic (their executables
+trace at the caller's query count), sharded plans bake in a device
+topology, and pallas kernels carry their own compilation pipeline.
+
+Every load/save is counted process-wide (:func:`plan_store_stats`) so
+tests and benchmarks can pin "zero XLA compiles" as ``exec_hits == 2``
+with ``exec_fallbacks == 0`` — if the adopted pair never falls back,
+the python-jitted originals are never invoked and nothing compiles.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..core.engine.base import PlanBase
+from ..core.engine.spec import spec_digest, workload_digest
+from ..core.envcfg import env_path
+from ..obs.trace import instant, tracer
+
+__all__ = ["PlanStore", "active_store", "plan_store_stats",
+           "reset_plan_store_stats"]
+
+_LOCK = threading.Lock()
+_STORES: Dict[str, "PlanStore"] = {}
+_STATS = {"config_hits": 0, "config_misses": 0, "config_saves": 0,
+          "exec_hits": 0, "exec_misses": 0, "exec_saves": 0,
+          "exec_fallbacks": 0, "exec_skips": 0}
+
+
+def plan_store_stats() -> Dict[str, int]:
+    """Process-wide store counters (hits/misses/saves/fallbacks)."""
+    with _LOCK:
+        return dict(_STATS)
+
+
+def reset_plan_store_stats() -> None:
+    with _LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def _bump(key: str, n: int = 1) -> None:
+    with _LOCK:
+        _STATS[key] += n
+
+
+def active_store() -> Optional["PlanStore"]:
+    """The store named by ``REPRO_PLAN_STORE``, or ``None`` when unset.
+
+    A blank value raises (shell quoting accident, see ``envcfg``); a
+    set value creates the directory on first use.  One :class:`PlanStore`
+    instance is shared per resolved path.
+    """
+    path = env_path("REPRO_PLAN_STORE")
+    if path is None:
+        return None
+    path = os.path.abspath(path)
+    with _LOCK:
+        store = _STORES.get(path)
+        if store is None:
+            store = _STORES[path] = PlanStore(path)
+        return store
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """Write-then-rename so a concurrent reader never sees a torn file
+    (two processes racing on the same store is the normal warm-start
+    topology: a tuner writing while servers read)."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=".tmp-", suffix=".part")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _toolchain_tag() -> str:
+    """The environment half of the AOT key: a serialized executable is
+    only valid for the exact compiler + runtime + device that built it."""
+    import jaxlib
+    dev = jax.devices()[0]
+    return f"{jax.__version__}|{jaxlib.__version__}|{dev.platform}|" \
+           f"{dev.device_kind}"
+
+
+def _leaf_sig(args: Tuple[Any, ...]):
+    return [(tuple(x.shape), str(x.dtype))
+            for x in jax.tree_util.tree_leaves(args)]
+
+
+class PlanStore:
+    """One on-disk plan store directory (see module docstring)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    # -- tuned-config records ---------------------------------------------
+
+    def _config_path(self, spec, backend: str) -> str:
+        return os.path.join(
+            self.root, f"cfg-{backend}-{workload_digest(spec)}.json")
+
+    def load_config(self, spec, backend: str) -> Optional[Dict[str, Any]]:
+        """The tuned config for this workload + backend, or ``None``."""
+        path = self._config_path(spec, backend)
+        try:
+            with open(path) as f:
+                cfg = json.load(f)
+        except (OSError, ValueError):
+            _bump("config_misses")
+            if tracer.enabled:
+                instant("store.config_miss", pid="engine",
+                        args={"backend": backend})
+            return None
+        _bump("config_hits")
+        if tracer.enabled:
+            instant("store.config_hit", pid="engine",
+                    args={"backend": backend,
+                          "speedup": cfg.get("speedup")})
+        return cfg
+
+    def save_config(self, spec, backend: str,
+                    config: Dict[str, Any]) -> str:
+        path = self._config_path(spec, backend)
+        rec = dict(config)
+        rec.setdefault("version", 1)
+        rec["workload"] = workload_digest(spec)
+        _atomic_write(path, json.dumps(rec, indent=1,
+                                       sort_keys=True).encode())
+        _bump("config_saves")
+        return path
+
+    # -- AOT-serialized executables ---------------------------------------
+
+    @staticmethod
+    def _exec_eligible(plan: PlanBase) -> bool:
+        return (plan.backend == "jnp" and plan.shards == 1
+                and not plan.tiny)
+
+    def _exec_path(self, plan: PlanBase) -> str:
+        import hashlib
+        key = "|".join([spec_digest(plan.spec), plan.backend,
+                        str(plan.batch), str(int(plan.packed)),
+                        str(plan.unroll), _toolchain_tag()])
+        return os.path.join(
+            self.root,
+            f"aot-{hashlib.sha256(key.encode()).hexdigest()[:40]}.pkl")
+
+    def persist_executables(self, plan: PlanBase,
+                            stored: Tuple[Any, ...]) -> bool:
+        """AOT-compile + serialize the plan's prepare/chunk pair.
+
+        ``stored`` are concrete stored-operand arrays (the tuned
+        gallery, or ``(gallery, care)`` / ``(lo, hi)``) — they fix the
+        avals the executables are lowered at; serving processes that
+        pass differently-shaped operands simply fall back to lazy jit.
+        Returns ``False`` (config-only persistence) on ineligible plans
+        or any serialization refusal, never raises.
+        """
+        if not self._exec_eligible(plan):
+            _bump("exec_skips")
+            return False
+        try:
+            import jax.numpy as jnp
+            from jax.experimental import serialize_executable as se
+
+            srcs = tuple(jnp.asarray(s) for s in stored)
+            src_sds = tuple(jax.ShapeDtypeStruct(s.shape, s.dtype)
+                            for s in srcs)
+            prepared_sds = jax.eval_shape(plan._prepare, *src_sds)
+            q_sds = jax.ShapeDtypeStruct((plan.batch, plan.spec.dim),
+                                         jnp.float32)
+
+            def pack(jitted, *args):
+                compiled = jitted.lower(*args).compile()
+                payload, in_tree, out_tree = se.serialize(compiled)
+                return {"payload": payload, "in_tree": in_tree,
+                        "out_tree": out_tree, "in_leaves": _leaf_sig(args)}
+
+            blob = pickle.dumps({
+                "version": 1,
+                "toolchain": _toolchain_tag(),
+                "prepare": pack(plan._prepare, *src_sds),
+                "chunk": pack(plan._chunk_fn, q_sds, prepared_sds),
+            })
+        except Exception:
+            # config-only fallback: the tuned knobs still persist, only
+            # the compile skip is lost (e.g. a jaxlib without
+            # serialize support, or an executable it refuses to pickle)
+            _bump("exec_skips")
+            return False
+        _atomic_write(self._exec_path(plan), blob)
+        _bump("exec_saves")
+        return True
+
+    def adopt_executables(self, plan: PlanBase) -> bool:
+        """Swap ``plan``'s jitted prepare/chunk for stored AOT ones.
+
+        Called by ``get_plan`` on every freshly built eligible plan.
+        The adopted callables check the flattened input shapes/dtypes
+        against the serialized avals and fall back to the original
+        (lazily-jitted) function on mismatch — counted, so a warm-start
+        test asserting ``exec_fallbacks == 0`` has proven the python
+        jit was never entered.
+        """
+        if not self._exec_eligible(plan):
+            return False
+        path = self._exec_path(plan)
+        try:
+            with open(path, "rb") as f:
+                rec = pickle.loads(f.read())
+            from jax.experimental import serialize_executable as se
+            loaded = {}
+            for name in ("prepare", "chunk"):
+                r = rec[name]
+                loaded[name] = (se.deserialize_and_load(
+                    r["payload"], r["in_tree"], r["out_tree"]),
+                    r["in_leaves"])
+        except Exception:
+            _bump("exec_misses")
+            if tracer.enabled:
+                instant("store.exec_miss", pid="engine")
+            return False
+
+        def wrap(compiled, expect, fallback):
+            def call(*args):
+                if _leaf_sig(args) != expect:
+                    _bump("exec_fallbacks")
+                    return fallback(*args)
+                return compiled(*args)
+            return call
+
+        plan._prepare = wrap(*loaded["prepare"], plan._prepare)
+        plan._chunk_fn = wrap(*loaded["chunk"], plan._chunk_fn)
+        # one hit per adopted executable: a warm process serving one
+        # plan reads exactly exec_hits == 2 (prepare + chunk)
+        _bump("exec_hits", 2)
+        if tracer.enabled:
+            instant("store.exec_adopted", pid="engine",
+                    args={"batch": plan.batch, "packed": plan.packed,
+                          "unroll": plan.unroll})
+        return True

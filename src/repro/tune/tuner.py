@@ -1,0 +1,328 @@
+"""Search-based plan autotuner: measure candidates, keep the best.
+
+The engine picks tile geometry, micro-batch, packing, unroll and shard
+count by fixed heuristics (the arch's subarray shape, power-of-two
+batch rounding, auto-pack).  The DSE benches (``BENCH_fig8_dse``,
+``BENCH_fig9_isocapacity``) show the space matters; this module
+searches it *empirically*, using the existing plan machinery as the
+measurement harness — the exemplar shape is candidate generation →
+measure → keep best (the NAS repo named in ROADMAP item 3).
+
+:func:`tune_plan` runs greedy coordinate descent over the knob axes:
+each axis is swept holding the others at the current best, and a
+candidate only replaces the incumbent when it is both *faster* and
+*verified* against the baseline plan's output (bit-exact for the
+integer metrics, tolerance for the float ones — a tuned plan that
+returns different answers is not a tuned plan).  Every trial is an
+ordinary ``get_plan`` build + warm + timed executes, traced as
+``tune.trial`` spans, and bounded by ``REPRO_TUNE_TRIALS`` /
+``REPRO_TUNE_BUDGET_S``.
+
+With a persistent store configured (``REPRO_PLAN_STORE``), the winning
+config is saved and the winning plan's executables are AOT-serialized
+(:meth:`~.store.PlanStore.persist_executables`); a later
+:func:`tune_plan` for the same workload returns from the store with
+**zero trials**, and :func:`warm_start_plan` gives the serving layer
+the same skip at server construction.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.engine import (PlanBase, RangePlan, RangeSpec, SearchPlan,
+                           extract_plan_spec, extract_range_spec, get_plan,
+                           module_for_spec)
+from ..core.engine.spec import _PACKABLE_METRICS
+from ..core.envcfg import env_float, env_int
+from ..obs.trace import instant, trace_span, tracer
+from .store import active_store
+
+__all__ = ["TuneResult", "tune_plan", "warm_start_plan", "tune_stats",
+           "reset_tune_stats"]
+
+import threading
+
+_LOCK = threading.Lock()
+_STATS = {"tunes": 0, "trials": 0, "store_hits": 0, "rejected": 0}
+
+
+def tune_stats() -> Dict[str, int]:
+    """Process-wide tuner counters: completed tunes, measured trials,
+    store short-circuits, and correctness-rejected candidates."""
+    with _LOCK:
+        return dict(_STATS)
+
+
+def reset_tune_stats() -> None:
+    with _LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def _bump(key: str, n: int = 1) -> None:
+    with _LOCK:
+        _STATS[key] += n
+
+
+@dataclass
+class TuneResult:
+    """Outcome of one :func:`tune_plan` call."""
+
+    plan: PlanBase
+    config: Dict[str, Any]
+    trials: int
+    from_store: bool
+    base_s: float = 0.0
+    best_s: float = 0.0
+    history: List[Dict[str, Any]] = field(default_factory=list, repr=False)
+
+    @property
+    def speedup(self) -> float:
+        return self.base_s / self.best_s if self.best_s > 0 else 1.0
+
+
+def _tuned_spec(spec, tile_rows: int, dims_per_tile: int):
+    """The spec re-tiled at a candidate geometry (grids re-derived)."""
+    tr = max(1, min(int(tile_rows), spec.n))
+    dpt = max(1, min(int(dims_per_tile), spec.dim))
+    return replace(spec, tile_rows=tr, dims_per_tile=dpt,
+                   grid_rows=-(-spec.n // tr), grid_cols=-(-spec.dim // dpt))
+
+
+def plan_for_config(spec, cfg: Dict[str, Any]) -> Optional[PlanBase]:
+    """Build (or cache-hit) the plan a config record describes."""
+    tuned = _tuned_spec(spec, cfg["tile_rows"], cfg["dims_per_tile"])
+    shards = int(cfg.get("shards") or 1)
+    return get_plan(module_for_spec(tuned), backend=cfg["backend"],
+                    batch=int(cfg["batch"]),
+                    shards=None if shards <= 1 else shards,
+                    pack=cfg.get("pack"), unroll=int(cfg.get("unroll", 1)))
+
+
+def _config_of(plan: PlanBase, backend: str) -> Dict[str, Any]:
+    return {"backend": backend, "tile_rows": plan.spec.tile_rows,
+            "dims_per_tile": plan.spec.dims_per_tile,
+            "batch": plan.batch, "pack": plan.packed,
+            "unroll": plan.unroll, "shards": plan.shards}
+
+
+def _ordered_inputs(spec, inputs: Tuple[Any, ...]) -> Tuple[Any, ...]:
+    """Re-wire caller inputs (original module argument order) into the
+    canonical order of ``module_for_spec`` modules: query first, stored
+    operands after — so one input tuple drives both the baseline plan
+    and every re-tiled candidate."""
+    if isinstance(spec, RangeSpec):
+        pos = (spec.query_arg,) + tuple(spec.pattern_args)
+    else:
+        pos = (spec.query_arg, spec.pattern_arg)
+        if spec.care_arg is not None:
+            pos += (spec.care_arg,)
+    return tuple(inputs[p] for p in pos)
+
+
+def _canonical_spec(spec):
+    """The spec as ``module_for_spec`` round-trips it (canonical
+    argument wiring) — every candidate, including the baseline, is
+    built through this so measurements compare geometry, not wiring."""
+    mod = module_for_spec(spec)
+    out = extract_plan_spec(mod)
+    if out is None:
+        out = extract_range_spec(mod)
+    return out
+
+
+def _verify(spec, base_out, out) -> bool:
+    """Candidate output matches the baseline plan's output.
+
+    Integer-count metrics (hamming / dot / interval violations, packed
+    or not) are bit-exact by the engine's numerical contract, and the
+    tournament's stable merges make top-k indices deterministic across
+    tile geometry.  Float accumulations (eucl, cos values) reorder
+    across ``dims_per_tile``, so values are compared at tolerance and
+    near-tie index flips are not grounds for rejection.
+    """
+    exact = spec.metric in ("hamming", "dot", "interval")
+    if isinstance(spec, RangeSpec):
+        a, b = np.asarray(base_out), np.asarray(out)
+        return bool((a == b).all()) if exact else \
+            float((a != b).mean()) < 1e-3
+    bv, bi = (np.asarray(x) for x in base_out)
+    cv, ci = (np.asarray(x) for x in out)
+    if exact:
+        return bool((bv == cv).all() and (bi == ci).all())
+    return bool(np.allclose(bv, cv, rtol=1e-4, atol=1e-4))
+
+
+def _measure(plan: PlanBase, inputs: Tuple[Any, ...], reps: int):
+    """Median wall-clock of ``reps`` synchronous executes (after one
+    warm-up execute that absorbs compile + pattern prep)."""
+    out = jax.block_until_ready(plan.execute(*inputs))
+    times = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan.execute(*inputs))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def _axis_values(spec, backend: str, m: int) -> List[Tuple[str, List[Any]]]:
+    """The coordinate-descent axes, clamped to the workload."""
+    n, dim = spec.n, spec.dim
+    tile_rows = sorted({min(t, n) for t in (16, 32, 64, 128, 256, 512)})
+    dpts = sorted({min(d, dim) for d in (32, 64, 128, 256)})
+    batches = sorted({min(b, max(8, 2 * m)) for b in (16, 32, 64, 128, 256)})
+    axes: List[Tuple[str, List[Any]]] = [
+        ("tile_rows", tile_rows),
+        ("dims_per_tile", dpts),
+        ("batch", batches),
+        ("unroll", [1, 2, 4] if backend == "jnp" else [1]),
+    ]
+    if spec.metric in _PACKABLE_METRICS and \
+            getattr(spec, "mode", "threshold") != "interval":
+        axes.append(("pack", [True, False]))
+    if backend == "jnp" and jax.device_count() > 1:
+        axes.append(("shards", [1, jax.device_count()]))
+    return axes
+
+
+def tune_plan(module, *inputs, backend: str = "jnp",
+              trials: Optional[int] = None, reps: Optional[int] = None,
+              budget_s: Optional[float] = None,
+              store=None) -> TuneResult:
+    """Tune the plan for ``module`` on representative ``inputs``.
+
+    ``inputs`` are the module's concrete arguments (query block +
+    stored operands, in the module's own argument order); the query
+    block's row count is the workload's ``m`` and what the tuned
+    micro-batch is sized against.  Bounds: ``trials`` measured
+    candidates (``REPRO_TUNE_TRIALS``), ``reps`` timed executes per
+    candidate (``REPRO_TUNE_REPS``), ``budget_s`` wall-clock
+    (``REPRO_TUNE_BUDGET_S``, 0 = unbounded).
+
+    With a store (argument, else ``REPRO_PLAN_STORE``): a stored config
+    for this workload short-circuits the whole search (``trials == 0``,
+    ``from_store=True``); otherwise the winner is written back — config
+    always, AOT executables when the plan is eligible and the jaxlib
+    cooperates.
+    """
+    spec = extract_plan_spec(module)
+    if spec is None:
+        spec = extract_range_spec(module)
+    if spec is None:
+        raise ValueError("tune_plan needs a pure similarity/range module "
+                         "(the interpreter path has no plan to tune)")
+    trials = env_int("REPRO_TUNE_TRIALS", 24, min_value=1) \
+        if trials is None else int(trials)
+    reps = env_int("REPRO_TUNE_REPS", 3, min_value=1) \
+        if reps is None else int(reps)
+    budget_s = env_float("REPRO_TUNE_BUDGET_S", 0.0, min_value=0.0) \
+        if budget_s is None else float(budget_s)
+    store = active_store() if store is None else store
+    ordered = _ordered_inputs(spec, inputs)
+    spec = _canonical_spec(spec)
+
+    if store is not None:
+        cfg = store.load_config(spec, backend)
+        if cfg is not None:
+            plan = plan_for_config(spec, cfg)
+            if plan is not None:
+                _bump("store_hits")
+                if tracer.enabled:
+                    instant("tune.store_hit", pid="engine",
+                            args={"backend": backend})
+                plan.warm(*ordered[1:])
+                return TuneResult(plan=plan, config=cfg, trials=0,
+                                  from_store=True,
+                                  base_s=float(cfg.get("base_s", 0.0)),
+                                  best_s=float(cfg.get("best_s", 0.0)))
+
+    t_start = time.perf_counter()
+    m = int(np.asarray(ordered[0]).reshape(-1, spec.dim).shape[0])
+
+    def out_of_budget() -> bool:
+        return budget_s > 0 and time.perf_counter() - t_start > budget_s
+
+    base_plan = get_plan(module_for_spec(spec), backend=backend)
+    with trace_span("tune.baseline", pid="engine",
+                    args=None if not tracer.enabled else
+                    {"backend": backend, "n": spec.n, "dim": spec.dim}):
+        base_s, base_out = _measure(base_plan, ordered, reps)
+
+    best = _config_of(base_plan, backend)
+    best_plan, best_s = base_plan, base_s
+    history = [dict(best, wall_s=base_s, baseline=True)]
+    used = 0
+    for axis, values in _axis_values(spec, backend, m):
+        for v in values:
+            if used >= trials or out_of_budget():
+                break
+            if best.get(axis) == v:
+                continue
+            cfg = dict(best)
+            cfg[axis] = v
+            plan = plan_for_config(spec, cfg)
+            if plan is None or plan is best_plan:
+                continue
+            used += 1
+            _bump("trials")
+            with trace_span("tune.trial", pid="engine",
+                            args=None if not tracer.enabled else
+                            {"axis": axis, "value": repr(v)}):
+                try:
+                    cand_s, out = _measure(plan, ordered, reps)
+                except Exception:
+                    # a candidate that cannot execute (e.g. pack=True
+                    # refused) is simply not a winner
+                    history.append(dict(cfg, wall_s=None, error=True))
+                    continue
+            ok = _verify(spec, base_out, out)
+            if not ok:
+                _bump("rejected")
+            history.append(dict(cfg, wall_s=cand_s, verified=ok))
+            if ok and cand_s < best_s:
+                best, best_plan, best_s = _config_of(plan, backend), \
+                    plan, cand_s
+
+    _bump("tunes")
+    best = dict(best, base_s=base_s, best_s=best_s, trials=used,
+                speedup=base_s / best_s if best_s > 0 else 1.0)
+    if tracer.enabled:
+        instant("tune.winner", pid="engine",
+                args={k: best[k] for k in ("tile_rows", "batch", "unroll",
+                                           "speedup")})
+    if store is not None:
+        store.save_config(spec, backend, best)
+        srcs = best_plan.warm(*ordered[1:])
+        store.persist_executables(best_plan, srcs)
+    return TuneResult(plan=best_plan, config=best, trials=used,
+                      from_store=False, base_s=base_s, best_s=best_s,
+                      history=history)
+
+
+def warm_start_plan(plan: PlanBase) -> PlanBase:
+    """The serving cold-start hook: swap a heuristically-built leaf plan
+    for its stored tuned equivalent, when one exists.
+
+    No store configured, no config recorded, a composite plan, or an
+    explicitly sharded plan (the caller chose a topology) → the plan
+    comes back unchanged.  The swap goes through ``get_plan``, so a
+    configured store's AOT executables are adopted on the way — a fresh
+    process serving a tuned workload skips the search *and* the XLA
+    compile.
+    """
+    if not isinstance(plan, (SearchPlan, RangePlan)) or plan.shards > 1:
+        return plan
+    store = active_store()
+    if store is None:
+        return plan
+    cfg = store.load_config(plan.spec, plan.backend)
+    if cfg is None:
+        return plan
+    tuned = plan_for_config(plan.spec, cfg)
+    return plan if tuned is None else tuned

@@ -6,7 +6,9 @@ would have been accepted — it never silently becomes a default (the
 historical failure mode: ``REPRO_ENGINE_PACK=offf`` meant *on*).
 """
 
+import json
 import math
+import os
 
 import pytest
 
@@ -259,6 +261,119 @@ class TestEngineKnobsAreStrict:
         assert plan.spec.nprobe == 5
 
 
+class TestTuneKnobsAreStrict:
+    """Autotuner + plan-store knobs parse strictly at the call site."""
+
+    def _mod(self):
+        from repro.core import ArchSpec
+        from test_engine import _sim_module
+        return _sim_module("hamming", 2, False, 4, 32, 16,
+                           ArchSpec(rows=8, cols=16))
+
+    def test_tune_trials_strict(self, monkeypatch):
+        from repro.tune import tune_plan
+        import numpy as np
+        q = np.zeros((4, 16), np.float32)
+        p = np.zeros((32, 16), np.float32)
+        monkeypatch.setenv("REPRO_TUNE_TRIALS", "many")
+        with pytest.raises(ValueError, match="REPRO_TUNE_TRIALS"):
+            tune_plan(self._mod(), q, p)
+        monkeypatch.setenv("REPRO_TUNE_TRIALS", "0")
+        with pytest.raises(ValueError, match="REPRO_TUNE_TRIALS"):
+            tune_plan(self._mod(), q, p)
+
+    def test_tune_reps_and_budget_strict(self, monkeypatch):
+        from repro.tune import tune_plan
+        import numpy as np
+        q = np.zeros((4, 16), np.float32)
+        p = np.zeros((32, 16), np.float32)
+        monkeypatch.setenv("REPRO_TUNE_REPS", "thrice")
+        with pytest.raises(ValueError, match="REPRO_TUNE_REPS"):
+            tune_plan(self._mod(), q, p)
+        monkeypatch.delenv("REPRO_TUNE_REPS")
+        for bad in ("forever", "nan", "-1"):
+            monkeypatch.setenv("REPRO_TUNE_BUDGET_S", bad)
+            with pytest.raises(ValueError, match="REPRO_TUNE_BUDGET_S"):
+                tune_plan(self._mod(), q, p)
+
+    def test_tune_serve_flag_strict(self, monkeypatch):
+        from repro.core import get_plan
+        from repro.serving.server import _resolve_plan
+        plan = get_plan(self._mod())
+        monkeypatch.setenv("REPRO_TUNE_SERVE", "maybe")
+        with pytest.raises(ValueError, match="REPRO_TUNE_SERVE"):
+            _resolve_plan(plan)
+
+    def test_plan_store_blank_raises(self, monkeypatch):
+        from repro.tune import active_store
+        monkeypatch.setenv("REPRO_PLAN_STORE", "")
+        with pytest.raises(ValueError, match="REPRO_PLAN_STORE"):
+            active_store()
+
+
+class TestBenchSmokeDirRouting:
+    """``save_bench_json`` smoke routing (the PR-10 path-handling fix):
+    ``*_smoke`` records never land at the repo root, an unset dir falls
+    back under the system temp dir, a relative dir is anchored there
+    too (not under whatever cwd the bench runs from), and a blank dir
+    raises instead of writing into ``""``."""
+
+    def _common(self, monkeypatch):
+        import importlib
+        import pathlib
+        root = str(pathlib.Path(__file__).resolve().parent.parent)
+        monkeypatch.syspath_prepend(root)
+        return importlib.import_module("benchmarks.common")
+
+    def test_unset_routes_under_tempdir(self, monkeypatch):
+        import tempfile
+        common = self._common(monkeypatch)
+        monkeypatch.delenv("REPRO_BENCH_SMOKE_DIR", raising=False)
+        path = common.save_bench_json("routing_smoke", {"ok": 1})
+        try:
+            assert path.startswith(tempfile.gettempdir())
+            assert not os.path.exists(
+                os.path.join(common.ROOT, "BENCH_routing_smoke.json"))
+        finally:
+            os.unlink(path)
+
+    def test_explicit_absolute_dir_is_used(self, monkeypatch, tmp_path):
+        common = self._common(monkeypatch)
+        monkeypatch.setenv("REPRO_BENCH_SMOKE_DIR", str(tmp_path))
+        path = common.save_bench_json("routing_smoke", {"ok": 2})
+        assert path == str(tmp_path / "BENCH_routing_smoke.json")
+        with open(path) as f:
+            assert json.load(f) == {"ok": 2}
+
+    def test_relative_dir_is_anchored_under_tempdir(self, monkeypatch):
+        import tempfile
+        common = self._common(monkeypatch)
+        monkeypatch.setenv("REPRO_BENCH_SMOKE_DIR", "rel-smoke-dir")
+        path = common.save_bench_json("routing_smoke", {"ok": 3})
+        try:
+            assert path == os.path.join(tempfile.gettempdir(),
+                                        "rel-smoke-dir",
+                                        "BENCH_routing_smoke.json")
+            assert not os.path.exists(
+                os.path.join(os.getcwd(), "rel-smoke-dir"))
+        finally:
+            os.unlink(path)
+
+    def test_blank_dir_raises(self, monkeypatch):
+        common = self._common(monkeypatch)
+        monkeypatch.setenv("REPRO_BENCH_SMOKE_DIR", "  ")
+        with pytest.raises(ValueError, match="REPRO_BENCH_SMOKE_DIR"):
+            common.save_bench_json("routing_smoke", {"ok": 4})
+
+    def test_non_smoke_records_still_land_at_root(self, monkeypatch):
+        common = self._common(monkeypatch)
+        # don't actually write BENCH_x.json at the real repo root
+        monkeypatch.setattr(common, "ROOT", str(
+            __import__("tempfile").mkdtemp()))
+        path = common.save_bench_json("baseline_record", {"ok": 5})
+        assert os.path.dirname(path) == common.ROOT
+
+
 class TestBenchGatesUseEnvcfg:
     """Every benchmark acceptance gate parses through ``env_gate`` —
     ``auto``/``off``/float semantics with strict errors, no ad-hoc
@@ -270,6 +385,7 @@ class TestBenchGatesUseEnvcfg:
         ("REPRO_HDC_GATE", "benchmarks.bench_hdc", 3.0),
         ("REPRO_MULTITENANT_GATE", "benchmarks.bench_multitenant", 2.0),
         ("REPRO_TRACE_GATE", "benchmarks.bench_trace", 1.0),
+        ("REPRO_TUNE_GATE", "benchmarks.bench_tune", 1.2),
     ])
     def test_gate_semantics(self, monkeypatch, var, loader, auto):
         import importlib
@@ -301,3 +417,17 @@ class TestBenchGatesUseEnvcfg:
         monkeypatch.setenv("REPRO_HIER_WIDE_GATE", "slow")
         with pytest.raises(ValueError, match="REPRO_HIER_WIDE_GATE"):
             bench._wide_gate()
+
+    def test_tune_warm_gate_semantics(self, monkeypatch):
+        import importlib
+        import pathlib
+        root = str(pathlib.Path(__file__).resolve().parent.parent)
+        monkeypatch.syspath_prepend(root)
+        bench = importlib.import_module("benchmarks.bench_tune")
+        monkeypatch.delenv("REPRO_TUNE_WARM_GATE", raising=False)
+        assert bench._warm_gate() == 3.0
+        monkeypatch.setenv("REPRO_TUNE_WARM_GATE", "off")
+        assert bench._warm_gate() == 0.0
+        monkeypatch.setenv("REPRO_TUNE_WARM_GATE", "cold")
+        with pytest.raises(ValueError, match="REPRO_TUNE_WARM_GATE"):
+            bench._warm_gate()

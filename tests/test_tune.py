@@ -1,0 +1,271 @@
+"""Autotuner + persistent plan store (``repro.tune``).
+
+Covers the search itself (verified winners, trial bounds), the on-disk
+store round-trip (configs + AOT executables), the serving warm-start
+hook, and — the load-bearing one — the cross-process cold-start
+contract: a fresh process serving a previously-tuned workload runs
+**zero** tune trials, compiles **zero** XLA executables (pinned via the
+store's adoption counters), and produces bit-identical output.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER_BASE_ARCH, ArchSpec, clear_plan_cache, get_plan
+from repro.tune import (active_store, plan_for_config, plan_store_stats,
+                        reset_plan_store_stats, reset_tune_stats, tune_plan,
+                        tune_stats, warm_start_plan)
+
+from test_engine import _data, _sim_module
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mod_and_data(metric="hamming", k=4, m=16, n=256, dim=64,
+                  arch=PAPER_BASE_ARCH, seed=0):
+    rng = np.random.default_rng(seed)
+    mod = _sim_module(metric, k, metric != "eucl", m, n, dim, arch)
+    q, p = _data(rng, metric, m, n, dim)
+    return mod, q, p
+
+
+# ---------------------------------------------------------------------------
+# the search
+# ---------------------------------------------------------------------------
+
+class TestTuner:
+    def test_winner_matches_baseline_output(self):
+        clear_plan_cache()
+        reset_tune_stats()
+        mod, q, p = _mod_and_data()
+        res = tune_plan(mod, q, p, trials=6, reps=1)
+        assert not res.from_store and res.trials <= 6
+        base = get_plan(mod)
+        bv, bi = (np.asarray(x) for x in base.execute(q, p))
+        tv, ti = (np.asarray(x) for x in res.plan.execute(q, p))
+        # hamming is an integer count: the tuned plan is bit-identical
+        assert (bv == tv).all() and (bi == ti).all()
+        # the incumbent only ever loses to a faster verified candidate
+        assert res.best_s <= res.base_s
+
+    def test_trial_bound_is_respected(self):
+        clear_plan_cache()
+        reset_tune_stats()
+        mod, q, p = _mod_and_data(n=128)
+        res = tune_plan(mod, q, p, trials=2, reps=1)
+        assert res.trials <= 2
+        assert tune_stats()["trials"] <= 2
+
+    def test_float_metric_winner_is_tolerance_verified(self):
+        clear_plan_cache()
+        mod, q, p = _mod_and_data(metric="eucl", n=128)
+        res = tune_plan(mod, q, p, trials=4, reps=1)
+        base = get_plan(mod)
+        bv, _ = (np.asarray(x) for x in base.execute(q, p))
+        tv, _ = (np.asarray(x) for x in res.plan.execute(q, p))
+        np.testing.assert_allclose(bv, tv, rtol=1e-4, atol=1e-4)
+
+    def test_interpreter_only_module_is_rejected(self):
+        from repro.core import Builder, Module, TensorType
+        mod = Module("empty", [TensorType((4, 8))])
+        Builder(mod.body).ret(list(mod.arguments))
+        with pytest.raises(ValueError, match="similarity/range"):
+            tune_plan(mod, np.zeros((4, 8), np.float32))
+
+    def test_history_records_rejections_and_errors_without_raising(self):
+        clear_plan_cache()
+        mod, q, p = _mod_and_data(n=128)
+        res = tune_plan(mod, q, p, trials=8, reps=1)
+        assert res.history[0]["baseline"] is True
+        assert all("wall_s" in h for h in res.history)
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class TestPlanStore:
+    def test_active_store_unset_is_none(self, monkeypatch):
+        monkeypatch.delenv("REPRO_PLAN_STORE", raising=False)
+        assert active_store() is None
+
+    def test_active_store_blank_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_STORE", "   ")
+        with pytest.raises(ValueError, match="REPRO_PLAN_STORE"):
+            active_store()
+
+    def test_config_roundtrip_and_store_hit(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        reset_plan_store_stats()
+        mod, q, p = _mod_and_data(n=128)
+        first = tune_plan(mod, q, p, trials=4, reps=1)
+        assert not first.from_store
+        assert any(f.startswith("cfg-jnp-") for f in os.listdir(tmp_path))
+        second = tune_plan(mod, q, p, trials=4, reps=1)
+        assert second.from_store and second.trials == 0
+        assert second.config["tile_rows"] == first.config["tile_rows"]
+        assert plan_store_stats()["config_hits"] >= 1
+        fv, fi = (np.asarray(x) for x in first.plan.execute(q, p))
+        sv, si = (np.asarray(x) for x in second.plan.execute(q, p))
+        assert (fv == sv).all() and (fi == si).all()
+
+    def test_aot_record_written_for_eligible_plan(self, tmp_path,
+                                                  monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        reset_plan_store_stats()
+        # non-tiny: n*dim must clear REPRO_ENGINE_TINY_CELLS (32768)
+        mod, q, p = _mod_and_data(m=32, n=768, dim=64)
+        tune_plan(mod, q, p, trials=3, reps=1)
+        assert any(f.startswith("aot-") and f.endswith(".pkl")
+                   for f in os.listdir(tmp_path))
+        assert plan_store_stats()["exec_saves"] >= 1
+
+    def test_fresh_plan_adopts_stored_executables(self, tmp_path,
+                                                  monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        reset_plan_store_stats()
+        mod, q, p = _mod_and_data(m=32, n=768, dim=64)
+        res = tune_plan(mod, q, p, trials=3, reps=1)
+        want = (np.asarray(x) for x in res.plan.execute(q, p))
+        # evict everything: the next get_plan builds fresh and must
+        # adopt the serialized executables instead of re-jitting
+        clear_plan_cache()
+        reset_plan_store_stats()
+        plan = plan_for_config(res.plan.spec, res.config)
+        stats = plan_store_stats()
+        assert stats["exec_hits"] == 2        # prepare + chunk adopted
+        got = (np.asarray(x) for x in plan.execute(q, p))
+        for w, g in zip(want, got):
+            assert (w == g).all()
+        assert plan_store_stats()["exec_fallbacks"] == 0
+
+    def test_tiny_plans_are_config_only(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        reset_plan_store_stats()
+        # grid_cols == 1 and few cells -> the shape-polymorphic tiny
+        # fast path, which must never be AOT-frozen at one query count
+        arch = ArchSpec(rows=16, cols=256)   # one column tile for dim=32
+        mod, q, p = _mod_and_data(n=64, dim=32, arch=arch)
+        plan = get_plan(mod)
+        assert plan.tiny
+        store = active_store()
+        assert store.persist_executables(plan, plan.warm(p)) is False
+        assert plan_store_stats()["exec_skips"] == 1
+        assert not any(f.startswith("aot-") for f in os.listdir(tmp_path))
+        assert store.adopt_executables(plan) is False
+
+
+# ---------------------------------------------------------------------------
+# serving warm start
+# ---------------------------------------------------------------------------
+
+class TestServingWarmStart:
+    def test_warm_start_plan_noop_without_store(self, monkeypatch):
+        monkeypatch.delenv("REPRO_PLAN_STORE", raising=False)
+        clear_plan_cache()
+        mod, q, p = _mod_and_data(n=128)
+        plan = get_plan(mod)
+        assert warm_start_plan(plan) is plan
+
+    def test_server_construction_picks_tuned_plan(self, tmp_path,
+                                                  monkeypatch):
+        from repro.serving import CamSearchServer
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        # heuristic geometry from a deliberately small arch...
+        arch = ArchSpec(rows=16, cols=32)
+        mod, q, p = _mod_and_data(n=256, dim=64, arch=arch)
+        res = tune_plan(mod, q, p, trials=5, reps=1)
+        heuristic = get_plan(mod)
+        with CamSearchServer(heuristic, p) as srv:
+            # ...swapped for the stored winner at construction
+            assert srv.plan.spec.tile_rows == res.config["tile_rows"]
+            assert srv.plan.batch == res.config["batch"]
+            v, i = srv.search(q)
+            bv, bi = (np.asarray(x) for x in res.plan.execute(q, p))
+            np.testing.assert_array_equal(np.asarray(v), bv)
+            np.testing.assert_array_equal(np.asarray(i), bi)
+        with CamSearchServer(heuristic, p, tuned=False) as srv:
+            assert srv.plan is heuristic
+
+    def test_env_kill_switch(self, tmp_path, monkeypatch):
+        from repro.serving.server import _resolve_plan
+        monkeypatch.setenv("REPRO_PLAN_STORE", str(tmp_path))
+        clear_plan_cache()
+        arch = ArchSpec(rows=16, cols=32)
+        mod, q, p = _mod_and_data(n=256, dim=64, arch=arch)
+        tune_plan(mod, q, p, trials=4, reps=1)
+        plan = get_plan(mod)
+        monkeypatch.setenv("REPRO_TUNE_SERVE", "0")
+        assert _resolve_plan(plan) is plan
+
+
+# ---------------------------------------------------------------------------
+# cross-process cold start (the contract the store exists for)
+# ---------------------------------------------------------------------------
+
+_CHILD = r'''
+import json, sys, os
+import numpy as np
+sys.path.insert(0, os.path.join(%(root)r, "tests"))
+from test_engine import _sim_module, _data
+from repro.core import PAPER_BASE_ARCH
+from repro.tune import tune_plan, plan_store_stats, tune_stats
+rng = np.random.default_rng(7)
+mod = _sim_module("hamming", 8, True, 32, 768, 64, PAPER_BASE_ARCH)
+q, p = _data(rng, "hamming", 32, 768, 64)
+res = tune_plan(mod, q, p, trials=4, reps=1)
+v, i = (np.asarray(x) for x in res.plan.execute(q, p))
+print(json.dumps({
+    "trials": res.trials, "from_store": res.from_store,
+    "store": plan_store_stats(), "tune": tune_stats(),
+    "config": {k: res.config[k] for k in
+               ("tile_rows", "dims_per_tile", "batch", "pack", "unroll")},
+    "v": v.tolist(), "i": i.tolist()}))
+'''
+
+
+class TestColdStartAcrossProcesses:
+    def test_second_process_skips_tuning_and_compilation(self, tmp_path):
+        """Process A tunes + persists; process B must warm-start: zero
+        trials, both executables adopted (== zero XLA compiles: the
+        python-jitted originals are never invoked when
+        ``exec_fallbacks == 0``), bit-identical results."""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(ROOT, "src"),
+                   REPRO_PLAN_STORE=str(tmp_path))
+        env.pop("REPRO_TUNE_TRIALS", None)
+
+        def run():
+            proc = subprocess.run(
+                [sys.executable, "-c", _CHILD % {"root": ROOT}],
+                env=env, capture_output=True, text=True, timeout=600)
+            assert proc.returncode == 0, proc.stderr[-2000:]
+            return json.loads(proc.stdout.splitlines()[-1])
+
+        cold = run()
+        assert cold["trials"] > 0 and not cold["from_store"]
+        assert cold["store"]["config_saves"] == 1
+        assert cold["store"]["exec_saves"] == 1
+
+        warm = run()
+        assert warm["from_store"] and warm["trials"] == 0
+        assert warm["tune"]["trials"] == 0
+        assert warm["store"]["config_hits"] == 1
+        assert warm["store"]["exec_hits"] == 2, \
+            "stored executables were not adopted (XLA recompiled)"
+        assert warm["store"]["exec_fallbacks"] == 0, \
+            "adopted executables fell back to the lazy jit path"
+        assert warm["store"]["exec_misses"] == 0
+        assert warm["config"] == cold["config"]
+        assert warm["v"] == cold["v"] and warm["i"] == cold["i"], \
+            "warm-started plan is not bit-identical to the tuned one"
